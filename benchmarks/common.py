@@ -1,0 +1,37 @@
+"""Shared benchmark helpers."""
+import dataclasses
+import time
+
+import jax
+import numpy as np
+
+
+def timeit(fn, *args, iters=5, warmup=2):
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / iters * 1e6, out  # us
+
+
+def tiny_dual_cfg(embed_dim=32):
+    from repro.configs import get_arch, smoke_variant
+    cfg = get_arch("basic-s")
+    return dataclasses.replace(
+        cfg, image_tower=smoke_variant(cfg.image_tower),
+        text_tower=smoke_variant(cfg.text_tower), embed_dim=embed_dim)
+
+
+def world_and_tok(cfg, seed=0, n_classes=16, noise=0.25):
+    from repro.data import Tokenizer, caption_corpus, make_world
+    rng = np.random.default_rng(seed)
+    world = make_world(rng, n_classes=n_classes,
+                       n_patches=cfg.image_tower.frontend_len,
+                       patch_dim=cfg.image_tower.d_model, noise=noise)
+    tok = Tokenizer.train(caption_corpus(world, rng, 400), vocab_size=500)
+    return world, tok, rng
+
+
+def csv_line(name, us, derived):
+    print(f"{name},{us:.1f},{derived}")

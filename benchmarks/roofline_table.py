@@ -1,0 +1,38 @@
+"""§Roofline: aggregate the dry-run JSONs into the per-(arch × shape) table.
+
+Reads experiments/baseline/*.json (written by repro.launch.dryrun) and prints
+one CSV row per combo: the three roofline terms, the dominant bottleneck, and
+MODEL_FLOPS/HLO_FLOPs."""
+import glob
+import json
+import os
+
+from benchmarks.common import csv_line
+
+DIRS = ("experiments/baseline", "experiments/dryrun")
+
+
+def run():
+    files = []
+    for d in DIRS:
+        files += glob.glob(os.path.join(d, "*.json"))
+    if not files:
+        csv_line("roofline/none", 0.0, "no dry-run artifacts yet")
+        return
+    for f in sorted(files):
+        r = json.load(open(f))
+        if not r.get("ok"):
+            csv_line(f"roofline/{r['arch']}_{r['shape']}", 0.0,
+                     f"FAILED:{r['error'][:60]}")
+            continue
+        t = r["roofline"]
+        step_us = max(t["compute_s"], t["memory_s"], t["collective_s"]) * 1e6
+        csv_line(
+            f"roofline/{r['arch']}_{r['shape']}_{r['mesh']}_{r['sharding']}",
+            step_us,
+            f"compute_ms={t['compute_s']*1e3:.2f};"
+            f"memory_ms={t['memory_s']*1e3:.2f};"
+            f"collective_ms={t['collective_s']*1e3:.2f};"
+            f"bottleneck={t['bottleneck']};"
+            f"useful_flops={r['useful_flops_ratio'] and round(r['useful_flops_ratio'], 3)};"
+            f"peak_gb={r['memory']['peak_gb_per_device']}")

@@ -1,0 +1,35 @@
+# One function per paper table. Prints ``name,us_per_call,derived`` CSV.
+import argparse
+import sys
+import traceback
+
+TABLES = {
+    "table2": "benchmarks.table2_memory",    # step time/memory: DP vs GradAccum
+    "table4": "benchmarks.table4_batch",     # batch-size ablation
+    "zeroshot": "benchmarks.zero_shot",      # Tables 1/3 analog
+    "theory": "benchmarks.theory_bound",     # Theorems 1-2 gap vs B
+    "roofline": "benchmarks.roofline_table", # §Roofline aggregation
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", choices=sorted(TABLES), default=None)
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    failed = 0
+    for name, mod_name in TABLES.items():
+        if args.only and name != args.only:
+            continue
+        try:
+            import importlib
+            importlib.import_module(mod_name).run()
+        except Exception as e:  # noqa: BLE001
+            failed += 1
+            print(f"{name}/ERROR,0,{type(e).__name__}:{e}", file=sys.stderr)
+            traceback.print_exc()
+    sys.exit(1 if failed else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,52 @@
+"""Paper Table 2 analog: step time & peak activation memory for
+  (a) vanilla data-parallel (monolithic batch),
+  (b) Pipelining & GradAccum (Algorithm 1, microbatched),
+as the contrastive batch B grows, measured on CPU at reduced scale; the SPMD
+column is roofline-derived from the dry-run artifacts (no multi-device
+hardware here — see EXPERIMENTS.md §Dry-run).
+
+Derived column: peak live activation bytes estimated from the batch actually
+materialized per tower pass (B·Mem vs M·Mem — the paper's Θ analysis)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import csv_line, timeit, tiny_dual_cfg, world_and_tok
+from repro.core.contrastive import contrastive_loss
+from repro.core.gradaccum import contrastive_step
+from repro.data import contrastive_batch
+from repro.models import dual_encoder as de
+
+
+def run():
+    cfg = tiny_dual_cfg()
+    world, tok, rng = world_and_tok(cfg)
+    params = de.init_params(cfg, jax.random.key(0))
+    enc_i = lambda p, im: de.encode_image(cfg, p, im)   # noqa: E731
+    enc_t = lambda p, tx: de.encode_text(cfg, p, tx)    # noqa: E731
+
+    def monolithic(p, batch):
+        def loss_fn(p):
+            x = enc_i(p, batch["images"])
+            y = enc_t(p, batch["texts"])
+            return contrastive_loss(x, y, jnp.exp(p["log_tau"]))[0]
+        return jax.grad(loss_fn)(p)
+
+    d_model = cfg.image_tower.d_model
+    act_per_example = (cfg.image_tower.frontend_len * d_model * 4
+                       * (cfg.image_tower.n_layers * 6))  # rough live set
+
+    for B in (32, 64, 128):
+        batch, _ = contrastive_batch(world, tok, B, rng)
+        batch = jax.tree.map(jnp.asarray, batch)
+        us_mono, _ = timeit(jax.jit(monolithic), params, batch, iters=3)
+        csv_line(f"table2/dp_B{B}", us_mono, f"act_bytes={B*act_per_example}")
+        for M in (8, 32):
+            if M > B:
+                continue
+            K = B // M
+            fn = jax.jit(lambda p, b: contrastive_step(
+                enc_i, enc_t, p, b, K)[2])
+            us_ga, _ = timeit(fn, params, batch, iters=3)
+            csv_line(f"table2/gradaccum_B{B}_M{M}", us_ga,
+                     f"act_bytes={M*act_per_example}")

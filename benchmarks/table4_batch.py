@@ -1,0 +1,53 @@
+"""Paper Table 4 / Figure 5 analog: larger contrastive batch -> better final
+zero-shot accuracy at equal examples seen. Toy scale (CPU): B in {8,32,128},
+steps scaled so B*steps is constant."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import csv_line, timeit, tiny_dual_cfg, world_and_tok
+from repro.core.gradaccum import contrastive_step
+from repro.data import classification_prompts, contrastive_batch
+from repro.models import dual_encoder as de
+from repro.optim import AdaFactorW, apply_updates
+
+
+def _train_and_eval(cfg, world, tok, B, steps, seed=0):
+    params = de.init_params(cfg, jax.random.key(seed))
+    opt = AdaFactorW()
+    st = opt.init(params)
+    enc_i = lambda p, im: de.encode_image(cfg, p, im)   # noqa: E731
+    enc_t = lambda p, tx: de.encode_text(cfg, p, tx)    # noqa: E731
+
+    @jax.jit
+    def step(params, st, batch):
+        loss, _, grads = contrastive_step(enc_i, enc_t, params, batch,
+                                          max(1, B // 16))
+        up, st = opt.update(grads, st, params, 2e-3)
+        return apply_updates(params, up), st, loss
+
+    rng = np.random.default_rng(seed + 100)
+    for _ in range(steps):
+        batch, _ = contrastive_batch(world, tok, B, rng)
+        params, st, loss = step(params, st, jax.tree.map(jnp.asarray, batch))
+
+    prompts = classification_prompts(world, tok)
+    temb = enc_t(params, jax.tree.map(jnp.asarray, prompts))
+    tb, cls = contrastive_batch(world, tok, 128, rng)
+    iemb = enc_i(params, jax.tree.map(jnp.asarray, tb["images"]))
+    pred = np.asarray(jnp.argmax(iemb @ temb.T, 1))
+    return float(np.mean(pred == cls)), float(loss)
+
+
+def run():
+    cfg = tiny_dual_cfg()
+    world, tok, _ = world_and_tok(cfg)
+    total = 2048  # examples seen, constant across rows (paper's protocol)
+    for B in (8, 32, 128):
+        steps = total // B
+        import time
+        t0 = time.perf_counter()
+        acc, loss = _train_and_eval(cfg, world, tok, B, steps)
+        us = (time.perf_counter() - t0) * 1e6 / steps
+        csv_line(f"table4/B{B}_steps{steps}", us,
+                 f"zeroshot_acc={acc:.3f};final_loss={loss:.3f}")

@@ -1,0 +1,28 @@
+"""Batched serving demo: prefill + decode loop on a reduced llama3.2 config,
+plus a state-space (mamba2) engine to show the O(1)-state decode path.
+
+  PYTHONPATH=src python examples/serving_demo.py
+"""
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_arch, smoke_variant
+from repro.models import transformer as tf
+from repro.serving import Engine
+
+for arch in ("llama3.2-1b", "mamba2-130m"):
+    cfg = smoke_variant(get_arch(arch))
+    params = tf.init_params(cfg, jax.random.key(0))
+    eng = Engine(cfg, params, cache_len=128,
+                 moe_args={"dispatch": "dense"})
+    rng = np.random.default_rng(0)
+    prompts = rng.integers(4, cfg.vocab, (4, 12)).astype(np.int32)
+
+    t0 = time.time()
+    out = eng.generate(prompts, 24, temperature=0.8, seed=0)
+    dt = time.time() - t0
+    print(f"[{arch}] {out.size} tokens in {dt:.2f}s "
+          f"({out.size/dt:.0f} tok/s incl. compile)")
+    print("  sample:", out[0, :12].tolist())

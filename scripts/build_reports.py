@@ -1,0 +1,83 @@
+"""Regenerate the §Dry-run / §Roofline markdown tables from the JSON
+artifacts under experiments/. Writes experiments/tables.md, which
+EXPERIMENTS.md references (and inlines at authoring time)."""
+import glob
+import json
+import os
+import sys
+
+
+def load(d):
+    out = []
+    for f in sorted(glob.glob(os.path.join(d, "*.json"))):
+        out.append(json.load(open(f)))
+    return out
+
+
+def fmt_ms(s):
+    return f"{s*1e3:.1f}"
+
+
+def roofline_table(rows):
+    lines = [
+        "| arch | shape | mesh | sharding | compute ms | memory ms | "
+        "collective ms | bottleneck | useful FLOPs | peak GB/dev |",
+        "|---|---|---|---|---:|---:|---:|---|---:|---:|",
+    ]
+    for r in rows:
+        if not r.get("ok"):
+            lines.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                         f"{r.get('sharding','?')} | FAIL | | | | | |")
+            continue
+        t = r["roofline"]
+        u = r.get("useful_flops_ratio")
+        extra = []
+        if r.get("attn") and r["attn"] != "naive":
+            extra.append(r["attn"])
+        shard = r.get("sharding", "?") + ("+" + "+".join(extra) if extra
+                                          else "")
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | {shard} | "
+            f"{fmt_ms(t['compute_s'])} | {fmt_ms(t['memory_s'])} | "
+            f"{fmt_ms(t['collective_s'])} | {t['bottleneck']} | "
+            f"{u and round(u, 3)} | "
+            f"{r['memory']['peak_gb_per_device']:.1f} |")
+    return "\n".join(lines)
+
+
+def dryrun_table(rows):
+    lines = ["| arch | shape | mesh | compile | peak GB/dev | collectives |",
+             "|---|---|---|---|---:|---:|"]
+    for r in rows:
+        if not r.get("ok"):
+            lines.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                         f"**FAIL** | | |")
+            continue
+        c = r.get("collectives", {})
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | ok "
+            f"({r['compile_s'] + r['lower_s']:.0f}s) | "
+            f"{r['memory']['peak_gb_per_device']:.1f} | {c.get('count', 0)} |")
+    return "\n".join(lines)
+
+
+def main():
+    base = load("experiments/baseline")
+    mp = load("experiments/validate_mp")
+    perf = load("experiments/perf") if os.path.isdir("experiments/perf") \
+        else []
+    out = ["# Generated tables (scripts/build_reports.py)", ""]
+    out += ["## Baseline roofline (single-pod 16x16, basic_ws, remat=basic)",
+            "", roofline_table(base), ""]
+    out += ["## Multi-pod compile check (2x16x16)", "", dryrun_table(mp), ""]
+    if perf:
+        out += ["## Perf variants", "", roofline_table(perf), ""]
+    os.makedirs("experiments", exist_ok=True)
+    with open("experiments/tables.md", "w") as f:
+        f.write("\n".join(out))
+    print("wrote experiments/tables.md",
+          f"({len(base)} base, {len(mp)} mp, {len(perf)} perf)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+from repro.checkpoint.io import latest_step, restore, save  # noqa: F401

@@ -1,0 +1,86 @@
+"""Checkpointing: pytree save/restore with an index, atomic writes, and
+sharded-array support (each leaf gathered to host as numpy; restore re-places
+onto the provided shardings).
+
+Layout:  <dir>/step_<N>/
+            index.json      — tree structure + leaf dtypes/shapes
+            arr_<i>.npy     — one file per leaf
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import tempfile
+
+import jax
+import numpy as np
+
+
+def _leaf_paths(tree):
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    return leaves, treedef
+
+
+def save(directory: str, step: int, tree) -> str:
+    final = os.path.join(directory, f"step_{step:08d}")
+    os.makedirs(directory, exist_ok=True)
+    tmp = tempfile.mkdtemp(dir=directory, prefix=".tmp_ckpt_")
+    try:
+        leaves, treedef = _leaf_paths(tree)
+        meta = {"treedef": str(treedef), "n": len(leaves), "step": step,
+                "leaves": []}
+        for i, leaf in enumerate(leaves):
+            arr = np.asarray(jax.device_get(leaf))
+            dtype_name = str(arr.dtype)
+            if dtype_name == "bfloat16":  # np.save can't store ml_dtypes
+                np.save(os.path.join(tmp, f"arr_{i}.npy"),
+                        arr.view(np.uint16))
+            else:
+                np.save(os.path.join(tmp, f"arr_{i}.npy"), arr)
+            meta["leaves"].append({"dtype": dtype_name,
+                                   "shape": list(arr.shape)})
+        with open(os.path.join(tmp, "index.json"), "w") as f:
+            json.dump(meta, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+    except BaseException:
+        shutil.rmtree(tmp, ignore_errors=True)
+        raise
+    return final
+
+
+def latest_step(directory: str):
+    if not os.path.isdir(directory):
+        return None
+    steps = [int(d.split("_")[1]) for d in os.listdir(directory)
+             if d.startswith("step_")]
+    return max(steps) if steps else None
+
+
+def restore(directory: str, step: int, like, shardings=None):
+    """Restore into the structure of ``like`` (a pytree of arrays or
+    ShapeDtypeStructs). ``shardings``: optional matching pytree of
+    NamedShardings to place leaves onto."""
+    path = os.path.join(directory, f"step_{step:08d}")
+    with open(os.path.join(path, "index.json")) as f:
+        meta = json.load(f)
+    like_leaves, treedef = _leaf_paths(like)
+    assert meta["n"] == len(like_leaves), \
+        f"checkpoint has {meta['n']} leaves, target has {len(like_leaves)}"
+    out = []
+    shard_leaves = (jax.tree_util.tree_flatten(shardings)[0]
+                    if shardings is not None else [None] * len(like_leaves))
+    for i, (ref, sh) in enumerate(zip(like_leaves, shard_leaves)):
+        arr = np.load(os.path.join(path, f"arr_{i}.npy"))
+        if meta["leaves"][i]["dtype"] == "bfloat16":
+            import ml_dtypes
+            arr = arr.view(ml_dtypes.bfloat16)
+        expect = tuple(np.shape(ref))
+        assert tuple(arr.shape) == expect, (i, arr.shape, expect)
+        if sh is not None:
+            out.append(jax.device_put(arr, sh))
+        else:
+            out.append(jax.numpy.asarray(arr))
+    return jax.tree_util.tree_unflatten(treedef, out)

@@ -1,0 +1,13 @@
+from repro.configs.base import (  # noqa: F401
+    INPUT_SHAPES,
+    ArchConfig,
+    InputShape,
+    MoEConfig,
+    SSMConfig,
+    applicable_shapes,
+    get_arch,
+    list_archs,
+    register,
+    smoke_variant,
+)
+from repro.configs.dual import DualEncoderConfig  # noqa: F401

@@ -1,0 +1,263 @@
+"""Config system: architecture configs, input shapes, and the registry.
+
+Every assigned architecture is a frozen dataclass instance constructed in its own
+``configs/<id>.py`` module and registered here by importing ``repro.configs``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Optional, Tuple
+
+# ---------------------------------------------------------------------------
+# Architecture config
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int
+    top_k: int = 2
+    # Arctic-style: a small dense FFN runs in parallel with the MoE and is added
+    # residually.
+    dense_residual: bool = False
+    # apply MoE every Nth block (1 = every block). Jamba uses 2.
+    every: int = 1
+    load_balance_coef: float = 0.01
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    state_dim: int = 128          # N (SSD state size)
+    head_dim: int = 64            # P (channels per SSD head)
+    expand: int = 2               # d_inner = expand * d_model
+    conv_width: int = 4
+    chunk: int = 256              # SSD chunk length
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str                   # dense | moe | ssm | hybrid | encoder | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int                  # 0 for attention-free
+    n_kv_heads: int
+    d_ff: int                     # 0 for attention-free (mamba)
+    vocab: int
+    head_dim: Optional[int] = None   # default d_model // n_heads
+    qk_norm: bool = False
+    sliding_window: Optional[int] = None   # tokens; None = full attention
+    causal: bool = True           # False for encoder-only (hubert)
+    tie_embeddings: bool = False
+    rope_theta: float = 1e6
+    norm_eps: float = 1e-5
+    moe: Optional[MoEConfig] = None
+    ssm: Optional[SSMConfig] = None
+    # hybrid: attention appears at layer indices where (i % attn_every == attn_every-1);
+    # all other layers are mamba. attn_every=1 means pure attention.
+    attn_every: int = 1
+    # attention implementation: 'naive' (materialized scores; baseline) or
+    # 'chunked' (flash-style online blocks — beyond-paper optimization; the
+    # XLA-lowerable stand-in for kernels/flash_attention on real TPUs).
+    attn_impl: str = "naive"
+    attn_block: int = 512
+    # modality frontend stub: 'audio' or 'vision' -> input_specs() provides
+    # precomputed frame/patch embeddings (the one allowed stub).
+    frontend: Optional[str] = None
+    frontend_len: int = 0         # number of frontend embedding positions (vlm patches)
+    source: str = ""              # citation
+
+    @property
+    def resolved_head_dim(self) -> int:
+        if self.head_dim is not None:
+            return self.head_dim
+        assert self.n_heads > 0
+        return self.d_model // self.n_heads
+
+    @property
+    def attention_free(self) -> bool:
+        return self.family == "ssm"
+
+    def layer_kinds(self) -> Tuple[str, ...]:
+        """Per-layer block kind: 'attn', 'mamba'."""
+        if self.family == "ssm":
+            return tuple("mamba" for _ in range(self.n_layers))
+        if self.family == "hybrid":
+            return tuple(
+                "attn" if (i % self.attn_every) == self.attn_every - 1 else "mamba"
+                for i in range(self.n_layers)
+            )
+        return tuple("attn" for _ in range(self.n_layers))
+
+    def moe_layer_mask(self) -> Tuple[bool, ...]:
+        if self.moe is None:
+            return tuple(False for _ in range(self.n_layers))
+        return tuple((i % self.moe.every) == self.moe.every - 1
+                     for i in range(self.n_layers))
+
+    # ---- parameter counting (analytic; used by roofline / MODEL_FLOPS) ----
+    def param_counts(self) -> dict:
+        """Returns dict with total and active parameter counts."""
+        d, dff, V = self.d_model, self.d_ff, self.vocab
+        hd = self.resolved_head_dim if self.n_heads else 0
+        q = self.n_heads * hd
+        kv = self.n_kv_heads * hd if self.n_heads else 0
+        attn = d * q + 2 * d * kv + q * d          # wq, wk, wv, wo
+        ffn = 3 * d * dff                           # swiglu: gate, up, down
+        mamba = 0
+        if self.ssm is not None:
+            s = self.ssm
+            d_in = s.expand * d
+            nheads = d_in // s.head_dim
+            # in_proj (z,x,B,C,dt), conv, out_proj, A,D per head
+            mamba = d * (2 * d_in + 2 * s.state_dim + nheads) \
+                + s.conv_width * (d_in + 2 * s.state_dim) \
+                + d_in * d + 2 * nheads
+        total = 0
+        active = 0
+        kinds = self.layer_kinds()
+        moe_mask = self.moe_layer_mask()
+        for i in range(self.n_layers):
+            if kinds[i] == "attn":
+                total += attn + 2 * d  # block norms
+                active += attn + 2 * d
+            else:
+                total += mamba + 2 * d
+                active += mamba + 2 * d
+            if kinds[i] == "attn" or self.family in ("hybrid",):
+                pass
+            if self.family == "ssm":
+                continue  # mamba2 has no separate FFN
+            if moe_mask[i]:
+                m = self.moe
+                total += m.num_experts * ffn
+                active += m.top_k * ffn
+                if m.dense_residual:
+                    total += ffn
+                    active += ffn
+            else:
+                total += ffn
+                active += ffn
+        emb = V * d
+        total += emb + d
+        active += emb + d
+        if not self.tie_embeddings:
+            total += V * d
+            active += V * d
+        return {"total": total, "active": active}
+
+
+# ---------------------------------------------------------------------------
+# Input shapes (assigned)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # 'train' | 'prefill' | 'decode'
+
+
+INPUT_SHAPES = {
+    "train_4k": InputShape("train_4k", 4096, 256, "train"),
+    # the paper's own training shape: B=65536 image-text pairs, 64-token
+    # captions (paper SS7.1), Algorithm-1 GradAccum with M=8192 (App. E)
+    "contrastive_64k": InputShape("contrastive_64k", 64, 65536, "contrastive"),
+    "prefill_32k": InputShape("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524288, 1, "decode"),
+}
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+_REGISTRY: dict = {}
+
+_ARCH_MODULES = [
+    "hubert_xlarge", "internvl2_76b", "minitron_4b", "mamba2_130m",
+    "mixtral_8x22b", "internlm2_20b", "jamba_1_5_large_398b", "qwen3_32b",
+    "llama3_2_1b", "arctic_480b",
+    # the paper's own models (dual-encoder towers)
+    "basic_s", "basic_m", "basic_l",
+]
+
+
+def register(cfg) -> None:
+    _REGISTRY[cfg.name] = cfg
+
+
+def get_arch(name: str):
+    """Look up an arch config by id (dashes or underscores)."""
+    _ensure_loaded()
+    key = name.replace("-", "_").replace(".", "_")
+    for k, v in _REGISTRY.items():
+        if k.replace("-", "_").replace(".", "_") == key:
+            return v
+    raise KeyError(f"unknown arch {name!r}; have {sorted(_REGISTRY)}")
+
+
+def list_archs():
+    _ensure_loaded()
+    return sorted(_REGISTRY)
+
+
+_loaded = False
+
+
+def _ensure_loaded():
+    global _loaded
+    if _loaded:
+        return
+    _loaded = True
+    for m in _ARCH_MODULES:
+        importlib.import_module(f"repro.configs.{m}")
+
+
+def applicable_shapes(cfg: ArchConfig):
+    """The (documented) skip matrix from DESIGN.md §4."""
+    names = ["train_4k", "prefill_32k"]
+    if cfg.causal:  # encoder-only archs have no decode step
+        names.append("decode_32k")
+        subquadratic = (
+            cfg.family in ("ssm", "hybrid")
+            or cfg.sliding_window is not None
+        )
+        if subquadratic:
+            names.append("long_500k")
+    return [INPUT_SHAPES[n] for n in names]
+
+
+def smoke_variant(cfg: ArchConfig) -> ArchConfig:
+    """A reduced config of the same family: 2 layers, d_model<=512, <=4 experts."""
+    d = min(cfg.d_model, 256)
+    heads = min(cfg.n_heads, 4) if cfg.n_heads else 0
+    if heads and cfg.n_kv_heads == cfg.n_heads:
+        kv = heads  # preserve MHA (e.g. hubert)
+    else:
+        kv = min(cfg.n_kv_heads, max(1, heads // 2)) if heads else 0
+    changes = dict(
+        n_layers=2,
+        d_model=d,
+        n_heads=heads,
+        n_kv_heads=kv,
+        head_dim=(d // heads if heads else None),
+        d_ff=min(cfg.d_ff, 512),
+        vocab=min(cfg.vocab, 512),
+        frontend_len=min(cfg.frontend_len, 16),
+    )
+    if cfg.moe is not None:
+        changes["moe"] = dataclasses.replace(
+            cfg.moe, num_experts=min(cfg.moe.num_experts, 4))
+    if cfg.ssm is not None:
+        changes["ssm"] = dataclasses.replace(
+            cfg.ssm, state_dim=16, head_dim=32, chunk=32)
+    if cfg.family == "hybrid":
+        changes["attn_every"] = 2
+    if cfg.sliding_window is not None:
+        changes["sliding_window"] = 64
+    return dataclasses.replace(cfg, **changes)

@@ -1,0 +1,31 @@
+"""Dual-encoder (BASIC) config: an image tower + a text tower + shared embed dim."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from repro.configs.base import ArchConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class DualEncoderConfig:
+    name: str
+    image_tower: ArchConfig      # encoder-family ArchConfig consuming patch embeds
+    text_tower: ArchConfig       # encoder-family ArchConfig consuming tokens
+    embed_dim: int               # D: shared unit-sphere embedding size
+    init_temperature: float = 0.07   # tau; learnable log-temperature parameter
+    # text pooling: BASIC averages top-layer representations (paper §7.2),
+    # unlike ALIGN/BERT's [CLS].
+    text_pool: str = "mean"
+    image_pool: str = "mean"
+    source: str = "arXiv:2111.10050"
+
+
+def _tower(name, L, d, H, dff, vocab, frontend=None, frontend_len=0,
+           head_dim=None) -> ArchConfig:
+    return ArchConfig(
+        name=name, family="encoder", n_layers=L, d_model=d, n_heads=H,
+        n_kv_heads=H, d_ff=dff, vocab=vocab, causal=False, frontend=frontend,
+        frontend_len=frontend_len, head_dim=head_dim, rope_theta=1e4,
+        source="arXiv:2111.10050",
+    )

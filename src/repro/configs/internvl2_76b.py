@@ -1,0 +1,23 @@
+"""InternVL2-76B [arXiv:2404.16821] — InternViT-6B vision encoder + InternLM2 LLM.
+
+We implement the language backbone (80L d_model=8192 64H GQA kv=8 d_ff=28672
+vocab=128256). The InternViT encoder + MLP projector is a STUB: ``input_specs``
+provides precomputed patch embeddings (batch, n_patches, d_model) that are
+prepended to the token embeddings.
+"""
+from repro.configs.base import ArchConfig, register
+
+CONFIG = ArchConfig(
+    name="internvl2-76b",
+    family="vlm",
+    n_layers=80,
+    d_model=8192,
+    n_heads=64,
+    n_kv_heads=8,
+    d_ff=28672,
+    vocab=128256,
+    frontend="vision",
+    frontend_len=256,   # patch embeddings per image
+    source="arXiv:2404.16821",
+)
+register(CONFIG)

@@ -1,0 +1,23 @@
+"""Jamba-1.5-Large (398B total) [arXiv:2403.19887] — Mamba+attention hybrid MoE.
+
+72L d_model=8192 64H (GQA kv=8) d_ff=24576 vocab=65536; attention every 8th
+layer (1:7 attn:mamba interleave), MoE 16 experts top-2 every other layer.
+Decode: mamba layers keep O(1) state; attention layers keep a KV cache.
+"""
+from repro.configs.base import ArchConfig, MoEConfig, SSMConfig, register
+
+CONFIG = ArchConfig(
+    name="jamba-1.5-large-398b",
+    family="hybrid",
+    n_layers=72,
+    d_model=8192,
+    n_heads=64,
+    n_kv_heads=8,
+    d_ff=24576,
+    vocab=65536,
+    attn_every=8,
+    moe=MoEConfig(num_experts=16, top_k=2, every=2),
+    ssm=SSMConfig(state_dim=128, head_dim=64, expand=2, conv_width=4, chunk=256),
+    source="arXiv:2403.19887",
+)
+register(CONFIG)

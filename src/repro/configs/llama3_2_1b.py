@@ -1,0 +1,30 @@
+"""Llama-3.2-1B [hf:meta-llama/Llama-3.2-1B] — small llama3 dense decoder.
+
+16L d_model=2048 32H (GQA kv=8) d_ff=8192 vocab=128256.
+
+``sliding_window`` is set (beyond-paper SWA variant, DESIGN.md §4) so the dense
+long-context decode path (long_500k) is exercised with a bounded ring KV cache.
+The canonical model is full-attention; pass ``--variant full`` to drop SWA.
+"""
+import dataclasses
+
+from repro.configs.base import ArchConfig, register
+
+CONFIG = ArchConfig(
+    name="llama3.2-1b",
+    family="dense",
+    n_layers=16,
+    d_model=2048,
+    n_heads=32,
+    n_kv_heads=8,
+    d_ff=8192,
+    vocab=128256,
+    tie_embeddings=True,
+    sliding_window=8192,
+    rope_theta=5e5,
+    source="hf:meta-llama/Llama-3.2-1B",
+)
+register(CONFIG)
+
+FULL_ATTENTION_VARIANT = dataclasses.replace(
+    CONFIG, name="llama3.2-1b-full", sliding_window=None)

@@ -1,0 +1,67 @@
+"""Image-text contrastive loss (paper §3, Eqs. 1-3).
+
+A = (X^T Y) / tau; loss = (RowLoss + ColumnLoss)/2 where each is softmax CE
+against the diagonal. ``contrastive_loss`` is the reference (materializes the
+B×B matrix, as paper Algorithm 1 line 6 does); the Pallas fused kernel in
+``repro.kernels.contrastive_loss`` computes the same quantity blockwise
+without materializing A in HBM (beyond-paper, DESIGN.md §2).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def similarity(x_emb, y_emb, tau):
+    """A_{ij} = <F(x_i), G(y_j)> / tau. x_emb/y_emb: (B, D) unit-normalized."""
+    return jnp.einsum("id,jd->ij", x_emb, y_emb) / tau
+
+
+def contrastive_loss(x_emb, y_emb, tau, label_smoothing: float = 0.0):
+    """Paper Eq. 3. Returns (loss, metrics)."""
+    b = x_emb.shape[0]
+    a = similarity(x_emb.astype(jnp.float32), y_emb.astype(jnp.float32), tau)
+    labels = jnp.arange(b)
+    row_lse = jax.nn.logsumexp(a, axis=1)
+    col_lse = jax.nn.logsumexp(a, axis=0)
+    diag = jnp.diagonal(a)
+    if label_smoothing:
+        eps = label_smoothing
+        row_tgt = (1 - eps) * diag + eps * jnp.mean(a, axis=1)
+        col_tgt = (1 - eps) * diag + eps * jnp.mean(a, axis=0)
+    else:
+        row_tgt, col_tgt = diag, diag
+    row_loss = jnp.mean(row_lse - row_tgt)
+    col_loss = jnp.mean(col_lse - col_tgt)
+    loss = 0.5 * (row_loss + col_loss)
+    acc = jnp.mean((jnp.argmax(a, axis=1) == labels).astype(jnp.float32))
+    return loss, {"row_loss": row_loss, "col_loss": col_loss,
+                  "i2t_top1": acc}
+
+
+def fused_kernel_loss(x_emb, y_emb, tau, interpret=True):
+    """Same value/gradients as ``contrastive_loss`` but via the Pallas fused
+    blockwise kernel — the B×B similarity matrix never materializes in HBM
+    (beyond-paper; DESIGN.md §2). ``interpret=True`` runs the kernel body in
+    Python (CPU validation); pass False on real TPUs.
+
+    Drop-in ``loss_fn`` for core.gradaccum (metrics limited to the loss —
+    the argmax-accuracy metric would need the full matrix)."""
+    from repro.kernels.contrastive_loss.ops import fused_contrastive_loss
+    log_tau = jnp.log(tau)
+    loss = fused_contrastive_loss(x_emb.astype(jnp.float32),
+                                  y_emb.astype(jnp.float32), log_tau,
+                                  interpret)
+    zero = jnp.zeros((), jnp.float32)
+    return loss, {"row_loss": zero, "col_loss": zero, "i2t_top1": zero}
+
+
+def normalized_train_loss(x_emb, y_emb):
+    """Paper §6 normalized loss \\hat{ell}_B (used by core/theory.py):
+    -exp(F(x_i)^T G(y_i)) / (1/B sum_k exp(F(x_i)^T G(y_k))).
+
+    Returns the per-example vector (B,)."""
+    s = jnp.einsum("id,jd->ij", x_emb, y_emb)          # (B, B), tau = 1
+    num = jnp.exp(jnp.diagonal(s))
+    den = jnp.mean(jnp.exp(s), axis=1)
+    return -num / den

@@ -1,0 +1,74 @@
+"""Paper §4.2: accumulate microbatch gradients directly into optimizer
+moment slots — no extra ḡ buffer is ever allocated.
+
+First moment (exact):  v1 ← β1·v1 + (1-β1)·ḡ  is decomposed into K sequential
+updates  v1 ← k_i·v1 + ((1-β1)/K)·c_i  with k_1 = β1 and k_i = 1 otherwise.
+(The paper's displayed k_i has a typo — "1/K" as the *carry* factor would
+geometrically shrink the history; the correct decomposition scales the
+*increment* by 1/K. Verified exact in tests.)
+
+Second moment (approximate):  we can only accumulate Σc_i²/K = E[c²], but Adam
+wants ḡ² = E[c]². The gap is Var[c] (paper Eq. 4), estimated from per-replica
+gradients d_1..d_R of each microbatch:  Var[c] = Var[d]/R.  So
+
+    v2 ← β2·v2 + (1-β2)·( E[c²] − VarHat[c] )
+
+This module is optimizer-agnostic: it operates on (m1, m2) slot pytrees and a
+stream of microbatch gradients; optim/adafactorw.py wires it into AdaFactorW.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def accumulate_first_moment(v1, c_stream, beta1: float):
+    """v1 slots + stacked microbatch grads c_stream (K, ...) -> new v1.
+    Exactly equals beta1*v1 + (1-beta1)*mean_K(c)."""
+    K = jax.tree.leaves(c_stream)[0].shape[0]
+
+    def step(v, i_c):
+        i, c = i_c
+        carry = jnp.where(i == 0, beta1, 1.0)
+        return jax.tree.map(
+            lambda vv, cc: carry * vv + ((1 - beta1) / K) * cc, v, c), None
+
+    idx = jnp.arange(K)
+    v1, _ = jax.lax.scan(step, v1, (idx, c_stream))
+    return v1
+
+
+def accumulate_second_moment(v2, c_stream, beta2: float, var_hat=None):
+    """v2 slots + c_stream (K, ...) -> new v2 using the paper's estimator:
+    beta2*v2 + (1-beta2)*(mean_K(c²) − var_hat).  var_hat defaults to 0
+    (uncorrected); pass ``replica_variance`` output for the corrected form."""
+    K = jax.tree.leaves(c_stream)[0].shape[0]
+
+    def step(v, c):
+        return jax.tree.map(lambda vv, cc: vv + (cc * cc) / K, v, c), None
+
+    zero = jax.tree.map(jnp.zeros_like, v2)
+    e_c2, _ = jax.lax.scan(step, zero, c_stream)
+    if var_hat is not None:
+        e_c2 = jax.tree.map(lambda a, b: jnp.maximum(a - b, 0.0), e_c2, var_hat)
+    return jax.tree.map(lambda vv, ee: beta2 * vv + (1 - beta2) * ee, v2, e_c2)
+
+
+def replica_variance(d_stream, R: int):
+    """Per-replica gradients d_stream with leaves (K, R, ...) -> VarHat[c]
+    (paper Eq. 4 applied twice: Var[c] = Var[g]/M = Var[d]·(M/R)/M/R... i.e.
+    Var[c] = Var[d]/R), averaged over the K microbatches."""
+    def per_leaf(d):
+        c = jnp.mean(d, axis=1, keepdims=True)          # (K, 1, ...)
+        var_d = jnp.mean((d - c) ** 2, axis=1)          # (K, ...)
+        return jnp.mean(var_d, axis=0) / R
+    return jax.tree.map(per_leaf, d_stream)
+
+
+def exact_second_moment(v2, c_stream, beta2: float):
+    """Ground truth (allocates ḡ): beta2*v2 + (1-beta2)*mean_K(c)²."""
+    K = jax.tree.leaves(c_stream)[0].shape[0]
+    gbar = jax.tree.map(lambda c: jnp.mean(c, axis=0), c_stream)
+    del K
+    return jax.tree.map(lambda vv, g: beta2 * vv + (1 - beta2) * g * g,
+                        v2, gbar)

@@ -1,0 +1,52 @@
+"""Paper §5.2 rematerialization heuristic as jax.checkpoint policies.
+
+BASIC's rule: *keep* every output of a weight-bearing op (conv/attention/dense
+— expensive to recompute under weight sharding because the all-gather of the
+sharded weight would re-run), *remat* everything that has no weights (norms,
+activations, softmax, SE blocks). Model code tags weight-op outputs with
+``checkpoint_name(..., layers.SAVE)``; the policy saves exactly those.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.models.layers import SAVE
+
+POLICIES = {}
+
+
+def _register(name):
+    def deco(fn):
+        POLICIES[name] = fn
+        return fn
+    return deco
+
+
+@_register("basic")
+def basic_policy():
+    """Paper §5.2: save weight-op outputs, remat norms/activations."""
+    return jax.checkpoint_policies.save_only_these_names(SAVE)
+
+
+@_register("none")
+def no_remat_policy():
+    """Save everything (vanilla; maximal memory)."""
+    return jax.checkpoint_policies.everything_saveable
+
+
+@_register("full")
+def full_remat_policy():
+    """Save nothing — recompute the whole block in the backward pass."""
+    return jax.checkpoint_policies.nothing_saveable
+
+
+@_register("dots")
+def dots_policy():
+    """XLA-classic: save matmul outputs except embedding-sized ones."""
+    return jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+
+
+def get_policy(name: str):
+    if name is None or name == "off":
+        return None
+    return POLICIES[name]()

@@ -1,0 +1,220 @@
+"""Sharding rules: paper-faithful SPMD weight sharding + beyond-paper TP/EP.
+
+Modes
+-----
+``basic_ws`` (paper §5.1, the BASELINE):
+    Activations are purely data-parallel: the global batch is split over ALL
+    cores ("each of our 2048 cores processes B/2048 examples, regardless of
+    R"), here over ('pod','data'). Weights — and their two optimizer moments —
+    are split over the 'model' axis on their largest shardable dim and
+    all-gathered on use (XLA inserts the gathers; Fig. 1 semantics). 1-D
+    params (norm scales, biases; paper §5.2 exception 1) stay replicated.
+
+``tp`` (beyond-paper optimization):
+    Megatron-style tensor parallelism: attention q/k/v and FFN-in shard their
+    output dim over 'model', o/FFN-out shard their input dim, so each block
+    needs one reduction instead of per-weight all-gathers. MoE experts shard
+    over 'model' (expert parallelism) when num_experts divides the axis,
+    falling back to intra-expert TP otherwise (Mixtral's 8 experts on a
+    16-way axis). Embedding/LM head shard the vocab when divisible.
+
+Both modes are pure metadata: functions here map a param/batch/cache pytree to
+``PartitionSpec`` trees; ``jax.jit(in_shardings=...)`` does the rest.
+"""
+from __future__ import annotations
+
+import re
+from typing import Optional
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+POD, DATA, MODEL = "pod", "data", "model"
+
+
+def mesh_axis_size(mesh, name):
+    return mesh.shape[name] if name in mesh.shape else 1
+
+
+def data_axes(mesh):
+    return (POD, DATA) if POD in mesh.shape else (DATA,)
+
+
+# ---------------------------------------------------------------------------
+# generic helpers
+# ---------------------------------------------------------------------------
+
+
+def _shard_largest(shape, axis_size: int, skip=frozenset()) -> Optional[int]:
+    """Index of the largest dim divisible by axis_size, or None."""
+    order = sorted(range(len(shape)), key=lambda i: -shape[i])
+    for i in order:
+        if i in skip:
+            continue
+        if shape[i] % axis_size == 0 and shape[i] >= axis_size:
+            return i
+    return None
+
+
+def _spec_with(ndim: int, axis: Optional[int], name) -> P:
+    if axis is None:
+        return P()
+    parts = [None] * ndim
+    parts[axis] = name
+    return P(*parts)
+
+
+def _path_str(path) -> str:
+    return "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+
+
+# ---------------------------------------------------------------------------
+# param specs
+# ---------------------------------------------------------------------------
+
+
+def params_specs(params, mesh, mode: str = "basic_ws"):
+    """PartitionSpec tree matching ``params`` (works for LM and dual-encoder
+    pytrees; stacked block leaves are detected via the 'blocks' path and their
+    leading scan axis is never sharded)."""
+    msize = mesh_axis_size(mesh, MODEL)
+
+    def leaf_spec(path, x):
+        name = _path_str(path)
+        shape = np.shape(x)
+        stacked = "blocks/" in name + "/"
+        skip = {0} if ("blocks" in name.split("/")) else set()
+        del stacked
+        if np.ndim(x) <= 1 or msize == 1:
+            return P()
+        if mode == "basic_ws":
+            ax = _shard_largest(shape, msize, skip)
+            return _spec_with(len(shape), ax, MODEL)
+        if mode == "tp":
+            return _tp_leaf_spec(name, shape, msize, skip)
+        if mode == "replicated":
+            return P()
+        raise ValueError(f"unknown sharding mode {mode!r}")
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, params)
+
+
+_TP_OUT = re.compile(r"(wq|wk|wv|wi|wg|in_z|in_x|in_B|in_C|in_dt|proj"
+                     r"|dense_wi|dense_wg|lm_head)$")
+_TP_IN = re.compile(r"(wo|out|dense_wo)$")
+
+
+def _tp_leaf_spec(name: str, shape, msize: int, skip) -> P:
+    last = name.rsplit("/", 1)[-1]
+    nd = len(shape)
+    is_moe = "/moe/" in f"/{name}/" and last in ("wi", "wg", "wo")
+    if is_moe:
+        # expert axis is right after the (optional) stacked scan axis
+        e_ax = 1 if 0 in skip else 0
+        if shape[e_ax] % msize == 0:
+            return _spec_with(nd, e_ax, MODEL)          # expert parallel
+        # fall back to intra-expert TP on the ff dim
+        ff_ax = nd - 1 if last in ("wi", "wg") else nd - 2
+        if shape[ff_ax] % msize == 0:
+            return _spec_with(nd, ff_ax, MODEL)
+        return P()
+    if last == "router":
+        return P()
+    if last == "embed":
+        ax = 0 if shape[0] % msize == 0 else (1 if shape[1] % msize == 0
+                                              else None)
+        return _spec_with(nd, ax, MODEL)
+    if last == "conv_w":
+        ax = nd - 1 if shape[-1] % msize == 0 else None
+        return _spec_with(nd, ax, MODEL)
+    if _TP_OUT.search(last):
+        ax = nd - 1 if shape[-1] % msize == 0 else None
+        if ax is None:  # fall back: shard input dim
+            ax = nd - 2 if nd >= 2 and shape[-2] % msize == 0 else None
+        return _spec_with(nd, ax, MODEL)
+    if _TP_IN.search(last):
+        ax = nd - 2 if shape[-2] % msize == 0 else None
+        if ax is None:
+            ax = nd - 1 if shape[-1] % msize == 0 else None
+        return _spec_with(nd, ax, MODEL)
+    # unknown 2D+ leaf: basic_ws-style largest-dim fallback
+    ax = _shard_largest(shape, msize, skip)
+    return _spec_with(nd, ax, MODEL)
+
+
+# ---------------------------------------------------------------------------
+# batch / cache specs
+# ---------------------------------------------------------------------------
+
+
+def batch_specs(batch, mesh, *, batch_axes=None):
+    """Shard the leading (batch) dim of every input leaf over the data axes,
+    dropping axes that don't divide."""
+    if batch_axes is None:
+        batch_axes = data_axes(mesh)
+
+    def leaf(x):
+        shape = np.shape(x)
+        if not shape:
+            return P()
+        b = shape[0]
+        axes = []
+        prod = 1
+        for a in batch_axes:
+            n = mesh_axis_size(mesh, a)
+            if b % (prod * n) == 0:
+                axes.append(a)
+                prod *= n
+        if not axes:
+            return P()
+        return P(tuple(axes), *([None] * (len(shape) - 1)))
+
+    return jax.tree.map(leaf, batch)
+
+
+def cache_specs(caches, mesh, *, seq_axis_names=(MODEL,)):
+    """Decode caches: batch dim over data axes when divisible; otherwise
+    (long_500k batch=1) shard the cache sequence axis (context parallel).
+
+    KV cache leaves: (n_periods, b, kv_heads, S, hd)
+    SSM state leaves: (n_periods, b, heads, p, n) / conv (n_periods, b, cw-1, c)
+    """
+    daxes = data_axes(mesh)
+    dsize = int(np.prod([mesh_axis_size(mesh, a) for a in daxes]))
+    msize = mesh_axis_size(mesh, MODEL)
+
+    def leaf(x):
+        shape = np.shape(x)
+        nd = len(shape)
+        if nd < 2:
+            return P()
+        parts = [None] * nd
+        b = shape[1]
+        if b % dsize == 0:
+            parts[1] = daxes if len(daxes) > 1 else daxes[0]
+            # additionally shard the longest remaining dim over model
+            rest = sorted(range(2, nd), key=lambda i: -shape[i])
+            for i in rest:
+                if shape[i] % msize == 0 and shape[i] >= 16:
+                    parts[i] = MODEL
+                    break
+        else:
+            # batch too small: context-parallel the biggest axis over
+            # (data, model) combined when divisible, else over model only
+            rest = sorted(range(2, nd), key=lambda i: -shape[i])
+            for i in rest:
+                if shape[i] % (dsize * msize) == 0 and shape[i] >= dsize * msize:
+                    parts[i] = (*daxes, MODEL)
+                    break
+                if shape[i] % msize == 0 and shape[i] >= msize:
+                    parts[i] = MODEL
+                    break
+        return P(*parts)
+
+    return jax.tree.map(leaf, caches)
+
+
+def to_named(tree_of_specs, mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree_of_specs,
+                        is_leaf=lambda s: isinstance(s, P))

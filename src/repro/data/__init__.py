@@ -1,0 +1,10 @@
+from repro.data.pipeline import Prefetcher, contrastive_stream, host_rng  # noqa: F401
+from repro.data.synthetic import (  # noqa: F401
+    World,
+    caption_corpus,
+    classification_prompts,
+    contrastive_batch,
+    jft_batch,
+    make_world,
+)
+from repro.data.tokenizer import Tokenizer  # noqa: F401

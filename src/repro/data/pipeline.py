@@ -1,0 +1,65 @@
+"""Input pipeline: deterministic shard-aware batching with prefetch.
+
+Host-side (numpy) generation, double-buffered via a background thread, with
+per-host sharding (each host draws its slice of the global batch from a
+host-indexed PRNG stream — the multi-host analog of the paper's input
+distribution where "B examples are distributed equally to all cores").
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Callable, Iterator
+
+import numpy as np
+
+
+class Prefetcher:
+    """Wrap a batch-producing callable into a prefetching iterator."""
+
+    def __init__(self, make_batch: Callable[[int], object], depth: int = 2,
+                 start: int = 0):
+        self._make = make_batch
+        self._q: "queue.Queue" = queue.Queue(maxsize=depth)
+        self._start = start
+        self._stop = threading.Event()
+        self._thread = threading.Thread(target=self._worker, daemon=True)
+        self._thread.start()
+
+    def _worker(self):
+        step = self._start
+        while not self._stop.is_set():
+            try:
+                self._q.put(self._make(step), timeout=0.5)
+                step += 1
+            except queue.Full:
+                continue
+
+    def __iter__(self) -> Iterator:
+        return self
+
+    def __next__(self):
+        return self._q.get()
+
+    def close(self):
+        self._stop.set()
+
+
+def host_rng(seed: int, host_id: int, step: int) -> np.random.Generator:
+    """Deterministic per-(host, step) stream."""
+    return np.random.default_rng(
+        np.random.SeedSequence([seed, host_id, step]))
+
+
+def contrastive_stream(world, tok, global_batch: int, *, seed=0, host_id=0,
+                       n_hosts=1, text_len=16, classes=None, depth=2):
+    local = global_batch // n_hosts
+    from repro.data.synthetic import contrastive_batch
+
+    def make(step):
+        rng = host_rng(seed, host_id, step)
+        batch, _ = contrastive_batch(world, tok, local, rng,
+                                     text_len=text_len, classes=classes)
+        return batch
+
+    return Prefetcher(make, depth=depth)

@@ -1,0 +1,80 @@
+"""A small deterministic word-piece-style tokenizer (sentencepiece stand-in).
+
+The paper trains a 32K sentencepiece model on 200M sampled captions and
+filters sequences > 64 tokens (§7.1). We reproduce the *interface*: a
+trainable vocab built from caption word frequencies, greedy longest-match
+piece segmentation, and the 64-token length filter.
+"""
+from __future__ import annotations
+
+import collections
+import re
+from typing import Iterable, List
+
+PAD, UNK, BOS, EOS = 0, 1, 2, 3
+SPECIALS = ["<pad>", "<unk>", "<bos>", "<eos>"]
+_WORD = re.compile(r"[a-z0-9]+|[^\sa-z0-9]")
+
+
+class Tokenizer:
+    def __init__(self, pieces: List[str]):
+        self.pieces = list(SPECIALS) + [p for p in pieces if p not in SPECIALS]
+        self.index = {p: i for i, p in enumerate(self.pieces)}
+
+    @property
+    def vocab_size(self) -> int:
+        return len(self.pieces)
+
+    @classmethod
+    def train(cls, corpus: Iterable[str], vocab_size: int = 32768,
+              max_piece_len: int = 8) -> "Tokenizer":
+        """Frequency-based piece selection: whole words first, then character
+        n-grams of frequent words (a cheap BPE surrogate, deterministic)."""
+        counts = collections.Counter()
+        for text in corpus:
+            for w in _WORD.findall(text.lower()):
+                counts[w] += 1
+        pieces = collections.Counter()
+        for w, c in counts.items():
+            pieces[w] += c
+            for n in range(2, min(len(w), max_piece_len)):
+                for i in range(len(w) - n + 1):
+                    pieces[w[i:i + n]] += c // 4
+        for ch in "abcdefghijklmnopqrstuvwxyz0123456789":
+            pieces[ch] += 1  # guarantee coverage
+        top = [p for p, _ in pieces.most_common(vocab_size - len(SPECIALS))]
+        return cls(top)
+
+    def _segment(self, word: str) -> List[int]:
+        out, i = [], 0
+        while i < len(word):
+            for j in range(len(word), i, -1):
+                piece = word[i:j]
+                if piece in self.index:
+                    out.append(self.index[piece])
+                    i = j
+                    break
+            else:
+                out.append(UNK)
+                i += 1
+        return out
+
+    def encode(self, text: str, max_len: int = 64, add_special=True):
+        ids: List[int] = [BOS] if add_special else []
+        for w in _WORD.findall(text.lower()):
+            ids.extend(self._segment(w))
+        if add_special:
+            ids.append(EOS)
+        if len(ids) > max_len:   # paper §7.1: filter/truncate > 64 tokens
+            ids = ids[:max_len]
+        return ids
+
+    def pad_batch(self, seqs: List[List[int]], max_len: int = 64):
+        import numpy as np
+        out = np.full((len(seqs), max_len), PAD, np.int32)
+        mask = np.zeros((len(seqs), max_len), np.bool_)
+        for i, s in enumerate(seqs):
+            s = s[:max_len]
+            out[i, :len(s)] = s
+            mask[i, :len(s)] = True
+        return out, mask

@@ -1,0 +1,95 @@
+"""Zero-shot open-vocabulary evaluation (paper §9.2 machinery).
+
+Implements what the paper's eval actually does:
+  - CLIP-style PROMPT ENSEMBLING: each class is rendered through several
+    templates; the class embedding is the normalized mean of the prompt
+    embeddings (Radford et al. §3.1.4, used by BASIC for comparability).
+  - top-1 / top-5 accuracy and mean per-class recall (the paper's metric for
+    Caltech/Flowers/Pets, App. C).
+  - image<->text retrieval recall@K for contrastive sanity checks.
+"""
+from __future__ import annotations
+
+from typing import Callable, List, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+DEFAULT_TEMPLATES = (
+    "a photo of a {} {}",
+    "a picture showing a {} {}",
+    "the {} {}",
+    "one {} {}, outdoors",
+)
+
+
+def class_embeddings(encode_text: Callable, tok, class_names: Sequence[str],
+                     templates: Sequence[str] = DEFAULT_TEMPLATES,
+                     text_len: int = 16):
+    """Prompt-ensembled class embeddings: (n_classes, D), unit norm."""
+    per_class = []
+    for name in class_names:
+        parts = name.split(" ", 1)
+        ids = [tok.encode(t.format(*parts), max_len=text_len)
+               for t in templates]
+        tokens, mask = tok.pad_batch(ids, max_len=text_len)
+        emb = encode_text({"tokens": jnp.asarray(tokens),
+                           "attn_mask": jnp.asarray(mask)})
+        mean = jnp.mean(emb, axis=0)
+        per_class.append(mean / jnp.linalg.norm(mean).clip(1e-6))
+    return jnp.stack(per_class)
+
+
+def classify(image_emb, class_emb):
+    """Returns predicted class ids (b,) and the full logit matrix."""
+    logits = image_emb @ class_emb.T
+    return jnp.argmax(logits, axis=1), logits
+
+
+def topk_accuracy(logits, labels, k: int = 1) -> float:
+    top = np.asarray(jnp.argsort(logits, axis=1))[:, ::-1][:, :k]
+    labels = np.asarray(labels)
+    return float(np.mean([labels[i] in top[i] for i in range(len(labels))]))
+
+
+def mean_per_class_recall(logits, labels) -> float:
+    pred = np.asarray(jnp.argmax(logits, axis=1))
+    labels = np.asarray(labels)
+    recalls = []
+    for c in np.unique(labels):
+        m = labels == c
+        recalls.append(float(np.mean(pred[m] == c)))
+    return float(np.mean(recalls))
+
+
+def retrieval_recall_at_k(x_emb, y_emb, ks=(1, 5)) -> dict:
+    """Paired retrieval: row i's positive is column i (both directions)."""
+    sim = np.asarray(x_emb @ y_emb.T)
+    n = sim.shape[0]
+    out = {}
+    for name, mat in (("i2t", sim), ("t2i", sim.T)):
+        order = np.argsort(-mat, axis=1)
+        ranks = np.array([np.where(order[i] == i)[0][0] for i in range(n)])
+        for k in ks:
+            out[f"{name}@{k}"] = float(np.mean(ranks < k))
+    return out
+
+
+def evaluate_benchmark(encode_image: Callable, encode_text: Callable, tok,
+                       class_names: Sequence[str], images, labels,
+                       templates: Sequence[str] = DEFAULT_TEMPLATES,
+                       metric: str = "accuracy") -> dict:
+    """One paper-style benchmark row. metric: 'accuracy' or 'recall'
+    (mean per-class recall, App. C)."""
+    cemb = class_embeddings(encode_text, tok, class_names, templates)
+    iemb = encode_image(images)
+    _, logits = classify(iemb, cemb)
+    out = {
+        "top1": topk_accuracy(logits, labels, 1),
+        "top5": topk_accuracy(logits, labels, 5),
+        "mean_per_class_recall": mean_per_class_recall(logits, labels),
+        "n": int(np.shape(labels)[0]),
+    }
+    out["headline"] = out["top1"] if metric == "accuracy" else \
+        out["mean_per_class_recall"]
+    return out

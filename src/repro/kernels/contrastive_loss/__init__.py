@@ -1,0 +1,4 @@
+from repro.kernels.contrastive_loss.ops import (  # noqa: F401
+    fused_contrastive_loss,
+    fused_loss_and_lse,
+)

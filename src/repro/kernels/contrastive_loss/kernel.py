@@ -1,0 +1,201 @@
+"""Pallas TPU kernel: blockwise contrastive loss — B×B never hits HBM.
+
+TPU adaptation of the paper's memory insight (DESIGN.md §2): Algorithm 1
+stores the full similarity matrix (Θ(B²) = 16 GB at B=65536); here tiles of
+X·Yᵀ live only in VMEM and row/column log-sum-exps are accumulated online
+(flash-attention-style running max/sum), so HBM traffic is Θ(B·D).
+
+Four kernels (each a clean single-reduction grid, innermost axis = reduction):
+  _row_lse_kernel : grid (nI, nJ) -> row LSE          (J inner, online LSE)
+  _col_lse_kernel : grid (nJ, nI) -> col LSE          (I inner, online LSE)
+  _dx_kernel      : grid (nI, nJ) -> dX rows + dlog_tau partials
+  _dy_kernel      : grid (nJ, nI) -> dY rows
+
+Backward recomputes each tile from (row_lse, col_lse):
+  dA_ij = (exp(A_ij - row_lse_i) + exp(A_ij - col_lse_j) - 2·δ_ij) / (2B)
+
+Block sizes are multiples of (8, 128) sublane×lane tiling; D is kept whole in
+VMEM (embedding dims here are ≤ 2048 ⇒ X/Y tiles of bm×D ≤ 1 MB each).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG = -1e30
+
+
+def _tile(x_ref, y_ref, inv_tau):
+    x = x_ref[...].astype(jnp.float32)
+    y = y_ref[...].astype(jnp.float32)
+    return jax.lax.dot_general(x, y, (((1,), (1,)), ((), ())),
+                               preferred_element_type=jnp.float32) * inv_tau
+
+
+def _row_lse_kernel(x_ref, y_ref, inv_tau_ref, m_ref, s_ref, *, nj):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG)
+        s_ref[...] = jnp.zeros_like(s_ref)
+
+    a = _tile(x_ref, y_ref, inv_tau_ref[0])            # (bm, bn)
+    m_new = jnp.maximum(m_ref[...], jnp.max(a, axis=1))
+    s_ref[...] = s_ref[...] * jnp.exp(m_ref[...] - m_new) \
+        + jnp.sum(jnp.exp(a - m_new[:, None]), axis=1)
+    m_ref[...] = m_new
+
+
+def _col_lse_kernel(y_ref, x_ref, inv_tau_ref, m_ref, s_ref, *, ni):
+    i = pl.program_id(1)
+
+    @pl.when(i == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG)
+        s_ref[...] = jnp.zeros_like(s_ref)
+
+    # tile = X_i · Y_j^T transposed -> (bn, bm) scores of columns vs rows
+    a = _tile(y_ref, x_ref, inv_tau_ref[0])            # (bn, bm)
+    m_new = jnp.maximum(m_ref[...], jnp.max(a, axis=1))
+    s_ref[...] = s_ref[...] * jnp.exp(m_ref[...] - m_new) \
+        + jnp.sum(jnp.exp(a - m_new[:, None]), axis=1)
+    m_ref[...] = m_new
+
+
+def _diag_mask(i, j, bm, bn):
+    """2·δ_ij contribution for the (i, j) tile (global diagonal)."""
+    rows = jax.lax.broadcasted_iota(jnp.int32, (bm, bn), 0) + i * bm
+    cols = jax.lax.broadcasted_iota(jnp.int32, (bm, bn), 1) + j * bn
+    return (rows == cols).astype(jnp.float32)
+
+
+def _dx_kernel(x_ref, y_ref, inv_tau_ref, rlse_ref, clse_ref,
+               dx_ref, dtau_ref, *, bm, bn, b):
+    i, j = pl.program_id(0), pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        dx_ref[...] = jnp.zeros_like(dx_ref)
+
+    @pl.when((i == 0) & (j == 0))
+    def _init2():
+        dtau_ref[...] = jnp.zeros_like(dtau_ref)
+
+    a = _tile(x_ref, y_ref, inv_tau_ref[0])
+    p_row = jnp.exp(a - rlse_ref[...][:, None])
+    p_col = jnp.exp(a - clse_ref[...][None, :])
+    da = (p_row + p_col - 2.0 * _diag_mask(i, j, bm, bn)) / (2.0 * b)
+    dx_ref[...] += jax.lax.dot_general(
+        da, y_ref[...].astype(jnp.float32), (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32) * inv_tau_ref[0]
+    dtau_ref[...] += -jnp.sum(da * a)
+
+
+def _dy_kernel(y_ref, x_ref, inv_tau_ref, rlse_ref, clse_ref, dy_ref,
+               *, bm, bn, b):
+    j, i = pl.program_id(0), pl.program_id(1)
+
+    @pl.when(i == 0)
+    def _init():
+        dy_ref[...] = jnp.zeros_like(dy_ref)
+
+    a_t = _tile(y_ref, x_ref, inv_tau_ref[0])          # (bn, bm): A_ij^T
+    p_row = jnp.exp(a_t - rlse_ref[...][None, :])      # softmax over rows of A
+    p_col = jnp.exp(a_t - clse_ref[...][:, None])
+    da_t = (p_row + p_col - 2.0 * _diag_mask(j, i, bn, bm)) / (2.0 * b)
+    dy_ref[...] += jax.lax.dot_general(
+        da_t, x_ref[...].astype(jnp.float32), (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32) * inv_tau_ref[0]
+
+
+# ---------------------------------------------------------------------------
+# pallas_call wrappers
+# ---------------------------------------------------------------------------
+
+
+def row_col_lse(x, y, inv_tau, *, bm=128, bn=128, interpret=False):
+    b, d = x.shape
+    assert b % bm == 0 and b % bn == 0, (b, bm, bn)
+    ni, nj = b // bm, b // bn
+    inv_tau = jnp.asarray([inv_tau], jnp.float32)
+
+    rm, rs = pl.pallas_call(
+        functools.partial(_row_lse_kernel, nj=nj),
+        grid=(ni, nj),
+        in_specs=[
+            pl.BlockSpec((bm, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((bn, d), lambda i, j: (j, 0)),
+            pl.BlockSpec((1,), lambda i, j: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bm,), lambda i, j: (i,)),
+            pl.BlockSpec((bm,), lambda i, j: (i,)),
+        ],
+        out_shape=[jax.ShapeDtypeStruct((b,), jnp.float32)] * 2,
+        interpret=interpret,
+    )(x, y, inv_tau)
+    row_lse = rm + jnp.log(rs)
+
+    cm, cs = pl.pallas_call(
+        functools.partial(_col_lse_kernel, ni=ni),
+        grid=(nj, ni),
+        in_specs=[
+            pl.BlockSpec((bn, d), lambda j, i: (j, 0)),
+            pl.BlockSpec((bm, d), lambda j, i: (i, 0)),
+            pl.BlockSpec((1,), lambda j, i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bn,), lambda j, i: (j,)),
+            pl.BlockSpec((bn,), lambda j, i: (j,)),
+        ],
+        out_shape=[jax.ShapeDtypeStruct((b,), jnp.float32)] * 2,
+        interpret=interpret,
+    )(y, x, inv_tau)
+    col_lse = cm + jnp.log(cs)
+    return row_lse, col_lse
+
+
+def grads(x, y, inv_tau, row_lse, col_lse, *, bm=128, bn=128,
+          interpret=False):
+    b, d = x.shape
+    ni, nj = b // bm, b // bn
+    inv_tau = jnp.asarray([inv_tau], jnp.float32)
+
+    dx, dtau = pl.pallas_call(
+        functools.partial(_dx_kernel, bm=bm, bn=bn, b=b),
+        grid=(ni, nj),
+        in_specs=[
+            pl.BlockSpec((bm, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((bn, d), lambda i, j: (j, 0)),
+            pl.BlockSpec((1,), lambda i, j: (0,)),
+            pl.BlockSpec((bm,), lambda i, j: (i,)),
+            pl.BlockSpec((bn,), lambda i, j: (j,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bm, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((1,), lambda i, j: (0,)),
+        ],
+        out_shape=[jax.ShapeDtypeStruct((b, d), jnp.float32),
+                   jax.ShapeDtypeStruct((1,), jnp.float32)],
+        interpret=interpret,
+    )(x, y, inv_tau, row_lse, col_lse)
+
+    dy = pl.pallas_call(
+        functools.partial(_dy_kernel, bm=bm, bn=bn, b=b),
+        grid=(nj, ni),
+        in_specs=[
+            pl.BlockSpec((bn, d), lambda j, i: (j, 0)),
+            pl.BlockSpec((bm, d), lambda j, i: (i, 0)),
+            pl.BlockSpec((1,), lambda j, i: (0,)),
+            pl.BlockSpec((bm,), lambda j, i: (i,)),
+            pl.BlockSpec((bn,), lambda j, i: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bn, d), lambda j, i: (j, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, d), jnp.float32),
+        interpret=interpret,
+    )(y, x, inv_tau, row_lse, col_lse)
+    return dx, dy, dtau[0]

@@ -1,0 +1,41 @@
+"""Pure-jnp oracle for the fused contrastive loss kernel.
+
+Materializes the full B×B similarity matrix (as paper Algorithm 1 line 6
+does) — the kernel must match these values without ever forming it.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def contrastive_fwd_ref(x, y, log_tau):
+    """Returns (loss, row_lse (B,), col_lse (B,), diag (B,))."""
+    a = jnp.einsum("id,jd->ij", x.astype(jnp.float32),
+                   y.astype(jnp.float32)) * jnp.exp(-log_tau)
+    row_lse = jax.nn.logsumexp(a, axis=1)
+    col_lse = jax.nn.logsumexp(a, axis=0)
+    diag = jnp.diagonal(a)
+    loss = 0.5 * (jnp.mean(row_lse - diag) + jnp.mean(col_lse - diag))
+    return loss, row_lse, col_lse, diag
+
+
+def contrastive_grads_ref(x, y, log_tau):
+    """(dX, dY, dlog_tau) of the loss above, via the closed form
+    dA = (softmax_row + softmax_col - 2I)/(2B)."""
+    x32, y32 = x.astype(jnp.float32), y.astype(jnp.float32)
+    inv_tau = jnp.exp(-log_tau)
+    a = jnp.einsum("id,jd->ij", x32, y32) * inv_tau
+    b = a.shape[0]
+    p_row = jax.nn.softmax(a, axis=1)
+    p_col = jax.nn.softmax(a, axis=0)
+    eye = jnp.eye(b, dtype=jnp.float32)
+    da = (p_row + p_col - 2 * eye) / (2 * b)
+    dx = (da @ y32) * inv_tau
+    dy = (da.T @ x32) * inv_tau
+    dlog_tau = -jnp.sum(da * a)
+    return dx, dy, dlog_tau
+
+
+def loss_ref(x, y, log_tau):
+    return contrastive_fwd_ref(x, y, log_tau)[0]

@@ -1,0 +1,86 @@
+"""Pallas TPU kernel: single-token decode attention (the serving hot spot).
+
+Decode is pure bandwidth: one query per head must stream the whole KV cache
+from HBM. The kernel tiles the cache length; the online-softmax state for the
+single query row lives in SMEM-sized VMEM scratch and the (1, block_k) score
+tile never leaves VMEM. GQA: all `group` query heads of a kv head are carried
+TOGETHER in one block so the k/v tile is streamed ONCE per kv head — the
+bandwidth win over the broadcast-per-q-head reference (a real-TPU ~group×
+reduction in cache reads).
+
+Grid: (batch * kv_heads, cache_blocks), cache innermost.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(q_ref, k_ref, v_ref, valid_ref, o_ref, m_scr, l_scr,
+                   acc_scr, *, scale, block_k):
+    ki = pl.program_id(1)
+    nk = pl.num_programs(1)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0].astype(jnp.float32) * scale            # (g, d)
+    k = k_ref[0].astype(jnp.float32)                    # (bk, d)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (g, bk)
+    s = jnp.where(valid_ref[...][None, :], s, NEG_INF)
+
+    m_prev, l_prev = m_scr[...], l_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    p = jnp.exp(s - m_new[:, None])
+    alpha = jnp.exp(m_prev - m_new)
+    l_scr[...] = l_prev * alpha + jnp.sum(p, axis=1)
+    acc_scr[...] = acc_scr[...] * alpha[:, None] + jax.lax.dot_general(
+        p, v_ref[0].astype(jnp.float32), (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _finish():
+        o_ref[0] = (acc_scr[...]
+                    / jnp.maximum(l_scr[...], 1e-30)[:, None]).astype(
+                        o_ref.dtype)
+
+
+def decode_attention_bkv(q, k, v, valid, *, block_k=256, interpret=False):
+    """q: (b*kv, g, d); k/v: (b*kv, t, d); valid: (t,) bool.
+    Returns (b*kv, g, d) f32-accumulated attention output."""
+    bkv, g, d = q.shape
+    t = k.shape[1]
+    block_k = min(block_k, t)
+    assert t % block_k == 0, (t, block_k)
+    grid = (bkv, t // block_k)
+    scale = d ** -0.5
+
+    return pl.pallas_call(
+        functools.partial(_decode_kernel, scale=scale, block_k=block_k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, g, d), lambda b, j: (b, 0, 0)),
+            pl.BlockSpec((1, block_k, d), lambda b, j: (b, j, 0)),
+            pl.BlockSpec((1, block_k, d), lambda b, j: (b, j, 0)),
+            pl.BlockSpec((block_k,), lambda b, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((1, g, d), lambda b, j: (b, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((g,), jnp.float32),
+            pltpu.VMEM((g,), jnp.float32),
+            pltpu.VMEM((g, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v, valid)

@@ -1,0 +1,19 @@
+"""Jitted wrapper: (b, h, d) GQA layout -> kernel (b*kv, g, d) layout."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.decode_attention.kernel import decode_attention_bkv
+
+
+def decode_attention(q, k, v, valid, *, block_k=256, interpret=False):
+    """q: (b, h, d); k/v: (b, kv, t, d); valid: (t,) bool -> (b, h, d)."""
+    b, h, d = q.shape
+    kv, t = k.shape[1], k.shape[2]
+    g = h // kv
+    qb = q.reshape(b, kv, g, d).reshape(b * kv, g, d)
+    kb = k.reshape(b * kv, t, d)
+    vb = v.reshape(b * kv, t, d)
+    out = decode_attention_bkv(qb, kb, vb, valid, block_k=block_k,
+                               interpret=interpret)
+    return out.reshape(b, kv, g, d).reshape(b, h, d)

@@ -1,0 +1,21 @@
+"""Pure-jnp oracle for single-token decode attention over a (ring) KV cache."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def decode_attention_ref(q, k, v, valid):
+    """q: (b, h, d) one query per head; k/v: (b, kv, t, d) cache;
+    valid: (t,) bool mask of live cache slots. Returns (b, h, d)."""
+    b, h, d = q.shape
+    kv = k.shape[1]
+    g = h // kv
+    qg = q.reshape(b, kv, g, d).astype(jnp.float32)
+    s = jnp.einsum("bkgd,bktd->bkgt", qg, k.astype(jnp.float32)) * (d ** -0.5)
+    s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgt,bktd->bkgd", w, v.astype(jnp.float32))
+    return out.reshape(b, h, d).astype(q.dtype)

@@ -1,0 +1,95 @@
+"""Pallas TPU flash attention (forward): online-softmax tiles in VMEM.
+
+Grid: (batch*q_heads, q_blocks, k_blocks) — k innermost so the output block
+and the running (max, sum) scratch persist across the reduction. Causal and
+sliding-window masks are applied from global indices; GQA is handled by the
+ops.py wrapper mapping each q head to its kv group. Block shapes are
+(block_q, head_dim) / (block_k, head_dim) — MXU-aligned multiples of 128 for
+real TPU shapes; head_dim is kept whole.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                 scale, block_q, block_k, causal, window, seq_k):
+    qi, ki = pl.program_id(1), pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0].astype(jnp.float32) * scale               # (bq, d)
+    k = k_ref[0].astype(jnp.float32)                       # (bk, d)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+
+    rows = jax.lax.broadcasted_iota(jnp.int32, s.shape, 0) + qi * block_q
+    cols = jax.lax.broadcasted_iota(jnp.int32, s.shape, 1) + ki * block_k
+    mask = jnp.ones(s.shape, jnp.bool_)
+    if causal:
+        mask &= cols <= rows
+    if window is not None:
+        mask &= (rows - cols) < window
+    mask &= cols < seq_k
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev, l_prev = m_scr[...], l_scr[...]
+    m_cur = jnp.max(s, axis=1)
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(s - m_new[:, None])
+    alpha = jnp.exp(m_prev - m_new)
+    l_new = l_prev * alpha + jnp.sum(p, axis=1)
+    acc_scr[...] = acc_scr[...] * alpha[:, None] + jax.lax.dot_general(
+        p, v_ref[0].astype(jnp.float32), (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+    l_scr[...] = l_new
+
+    @pl.when(ki == nk - 1)
+    def _finish():
+        o_ref[0] = (acc_scr[...] /
+                    jnp.maximum(l_scr[...], 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention_bh(q, k, v, *, causal=True, window=None, block_q=128,
+                       block_k=128, interpret=False):
+    """q: (bh, s, d); k/v: (bh, t, d) — heads already broadcast/flattened."""
+    bh, s, d = q.shape
+    t = k.shape[1]
+    block_q = min(block_q, s)
+    block_k = min(block_k, t)
+    assert s % block_q == 0 and t % block_k == 0, (s, t, block_q, block_k)
+    grid = (bh, s // block_q, t // block_k)
+    scale = d ** -0.5
+
+    return pl.pallas_call(
+        functools.partial(_attn_kernel, scale=scale, block_q=block_q,
+                          block_k=block_k, causal=causal, window=window,
+                          seq_k=t),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, block_k, d), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, block_k, d), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

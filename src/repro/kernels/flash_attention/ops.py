@@ -1,0 +1,25 @@
+"""Jitted GQA wrapper for the flash attention kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_bh
+
+
+def flash_attention(q, k, v, *, causal=True, window=None, block_q=128,
+                    block_k=128, interpret=False):
+    """q: (b, h, s, d); k/v: (b, kv, t, d) with h % kv == 0.
+
+    kv heads are broadcast to q heads (the all-VMEM GQA strategy: k/v tiles
+    are small and re-fetched per group member; a production variant would
+    reuse the tile across the group — noted in EXPERIMENTS.md §Perf)."""
+    b, h, s, d = q.shape
+    kv, t = k.shape[1], k.shape[2]
+    g = h // kv
+    kb = jnp.repeat(k, g, axis=1).reshape(b * h, t, d)
+    vb = jnp.repeat(v, g, axis=1).reshape(b * h, t, d)
+    qb = q.reshape(b * h, s, d)
+    out = flash_attention_bh(qb, kb, vb, causal=causal, window=window,
+                             block_q=block_q, block_k=block_k,
+                             interpret=interpret)
+    return out.reshape(b, h, s, d)

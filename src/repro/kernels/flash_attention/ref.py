@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for the flash attention kernel (GQA, causal, SWA)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_ref(q, k, v, *, causal=True, window=None):
+    """q: (b, h, s, d); k/v: (b, kv, t, d). Returns (b, h, s, d)."""
+    b, h, s, d = q.shape
+    kv = k.shape[1]
+    g = h // kv
+    qg = q.reshape(b, kv, g, s, d).astype(jnp.float32)
+    scores = jnp.einsum("bkgsd,bktd->bkgst", qg, k.astype(jnp.float32))
+    scores = scores * (d ** -0.5)
+    qi = jnp.arange(s)[:, None]
+    ki = jnp.arange(k.shape[2])[None, :]
+    mask = jnp.zeros((s, k.shape[2]), jnp.float32)
+    if causal:
+        mask = jnp.where(ki <= qi, mask, NEG_INF)
+    if window is not None:
+        mask = jnp.where(qi - ki < window, mask, NEG_INF)
+    scores = scores + mask
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgst,bktd->bkgsd", w, v.astype(jnp.float32))
+    return out.reshape(b, h, s, d).astype(q.dtype)

@@ -1,0 +1,94 @@
+"""Pallas TPU kernel: Mamba2 SSD chunked scan.
+
+TPU adaptation of SSD (DESIGN.md §2): the chunk-quadratic term runs on the
+MXU as (chunk × chunk) matmuls entirely in VMEM; the inter-chunk recurrence is
+carried in a VMEM scratch state across the innermost (chunk) grid axis, so the
+only HBM traffic is x/B/C/dt in and y out — the (l × l) semiseparable matrix
+of the naive dual form never materializes.
+
+Grid: (batch, heads, n_chunks), chunk innermost. Per step:
+  y_c = (C_c B_cᵀ ⊙ L_c) (dt·x)_c  +  exp(cum) C_c stateᵀ  +  D x_c
+  state ← exp(cum[-1]) state + ((dt·x)_c ⊙ decay_to_end)ᵀ B_c
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, d_ref, y_ref, state_scr,
+                *, chunk):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_scr[...] = jnp.zeros_like(state_scr)
+
+    x = x_ref[0, 0].astype(jnp.float32)                 # (cl, p)
+    dt = dt_ref[0, 0].astype(jnp.float32)               # (cl,)
+    A = a_ref[0]                                        # scalar
+    Bm = b_ref[0].astype(jnp.float32)                   # (cl, n)
+    Cm = c_ref[0].astype(jnp.float32)                   # (cl, n)
+    D = d_ref[0]
+
+    da = dt * A                                         # (cl,)
+    cum = jnp.cumsum(da)                                # (cl,)
+    xdt = x * dt[:, None]                               # (cl, p)
+
+    # intra-chunk: L[i,j] = exp(cum_i - cum_j) for i >= j
+    seg = cum[:, None] - cum[None, :]
+    tri = (jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+           >= jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1))
+    Lmat = jnp.where(tri, jnp.exp(seg), 0.0)
+    scores = jax.lax.dot_general(Cm, Bm, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32) * Lmat
+    y = jax.lax.dot_general(scores, xdt, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+
+    # inter-chunk: contribution of the carried state
+    state = state_scr[...]                              # (p, n)
+    y += jnp.exp(cum)[:, None] * jax.lax.dot_general(
+        Cm, state, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    y += D * x
+    y_ref[0, 0] = y.astype(y_ref.dtype)
+
+    # state update
+    decay_to_end = jnp.exp(cum[-1] - cum)               # (cl,)
+    new_part = jax.lax.dot_general(
+        xdt * decay_to_end[:, None], Bm, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)             # (p, n)
+    state_scr[...] = state * jnp.exp(cum[-1]) + new_part
+
+
+def ssd_scan_bh(x, dt, A, Bm, Cm, D, *, chunk=128, interpret=False):
+    """x: (b, h, l, p); dt: (b, h, l); A/D: (h,); Bm/Cm: (b, l, n).
+    Returns y (b, h, l, p) f32."""
+    b, h, l, p = x.shape
+    n = Bm.shape[-1]
+    chunk = min(chunk, l)
+    assert l % chunk == 0, (l, chunk)
+    nc = l // chunk
+
+    return pl.pallas_call(
+        functools.partial(_ssd_kernel, chunk=chunk),
+        grid=(b, h, nc),
+        in_specs=[
+            pl.BlockSpec((1, 1, chunk, p), lambda bi, hi, ci: (bi, hi, ci, 0)),
+            pl.BlockSpec((1, 1, chunk), lambda bi, hi, ci: (bi, hi, ci)),
+            pl.BlockSpec((1,), lambda bi, hi, ci: (hi,)),
+            pl.BlockSpec((1, chunk, n), lambda bi, hi, ci: (bi, ci, 0)),
+            pl.BlockSpec((1, chunk, n), lambda bi, hi, ci: (bi, ci, 0)),
+            pl.BlockSpec((1,), lambda bi, hi, ci: (hi,)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, chunk, p),
+                               lambda bi, hi, ci: (bi, hi, ci, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, l, p), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((p, n), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, A.astype(jnp.float32), Bm, Cm, D.astype(jnp.float32))

@@ -1,0 +1,17 @@
+"""Jitted wrapper: layout adaptation (b, l, h, p) -> kernel (b, h, l, p)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.ssd_scan.kernel import ssd_scan_bh
+
+
+def ssd_scan(x, dt, A, Bm, Cm, D=None, *, chunk=128, interpret=False):
+    """Same signature/layout as models.ssm.ssd_chunked plus D.
+    x: (b, l, h, p); dt: (b, l, h); A: (h,); Bm/Cm: (b, l, n)."""
+    h = x.shape[2]
+    xt = jnp.moveaxis(x, 2, 1)            # (b, h, l, p)
+    dtt = jnp.moveaxis(dt, 2, 1)          # (b, h, l)
+    Dv = D if D is not None else jnp.zeros((h,), jnp.float32)
+    y = ssd_scan_bh(xt, dtt, A, Bm, Cm, Dv, chunk=chunk, interpret=interpret)
+    return jnp.moveaxis(y, 1, 2)          # (b, l, h, p)

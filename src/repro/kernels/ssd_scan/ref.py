@@ -1,0 +1,35 @@
+"""Pure-jnp oracle for the SSD chunked-scan kernel: the sequential recurrence.
+
+h_t = exp(dt_t * A) * h_{t-1} + dt_t * x_t ⊗ B_t ;  y_t = h_t C_t + D x_t
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_ref(x, dt, A, Bm, Cm, D=None):
+    """x: (b, l, h, p); dt: (b, l, h); A: (h,); Bm/Cm: (b, l, n).
+    Returns (y (b, l, h, p), final_state (b, h, p, n))."""
+    b, l, h, p = x.shape
+    n = Bm.shape[-1]
+    f32 = jnp.float32
+
+    def step(state, t):
+        xt, dtt, bt, ct = t
+        decay = jnp.exp(dtt.astype(f32) * A.astype(f32))          # (b, h)
+        dx = dtt.astype(f32)[..., None] * xt.astype(f32)          # (b, h, p)
+        state = state * decay[..., None, None] \
+            + dx[..., None] * bt.astype(f32)[:, None, None, :]
+        y = jnp.einsum("bhpn,bn->bhp", state, ct.astype(f32))
+        return state, y
+
+    xs = (jnp.moveaxis(x, 1, 0).swapaxes(2, 2), jnp.moveaxis(dt, 1, 0),
+          jnp.moveaxis(Bm, 1, 0), jnp.moveaxis(Cm, 1, 0))
+    # x moved to (l, b, h, p)
+    state0 = jnp.zeros((b, h, p, n), f32)
+    final, ys = jax.lax.scan(step, state0, xs)
+    y = jnp.moveaxis(ys, 0, 1)                                    # (b, l, h, p)
+    if D is not None:
+        y = y + D.astype(f32)[None, None, :, None] * x.astype(f32)
+    return y, final

@@ -1,0 +1,307 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × input-shape × mesh).
+
+The two lines above MUST stay first: jax locks the device count on first
+init, and the production meshes need 512 host-platform placeholder devices.
+
+Usage:
+  python -m repro.launch.dryrun --arch llama3.2-1b --shape train_4k \
+      --mesh pod --sharding basic_ws [--remat basic] [--out DIR]
+  python -m repro.launch.dryrun --all --mesh pod      # every combo
+"""
+import argparse      # noqa: E402
+import json          # noqa: E402
+import time          # noqa: E402
+import traceback     # noqa: E402
+
+import jax           # noqa: E402
+
+from repro.configs.base import (  # noqa: E402
+    INPUT_SHAPES, applicable_shapes, get_arch, list_archs)
+from repro.launch import roofline as rf  # noqa: E402
+from repro.launch import steps as st  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+
+
+def run_one(arch: str, shape_name: str, *, multi_pod=False,
+            sharding="basic_ws", remat="basic", verbose=True,
+            unroll=None, attn="naive", moe_group=4096,
+            dispatch=None, param_dtype=None, batch_over="data",
+            ssm_chunk=None) -> dict:
+    import dataclasses
+    cfg = get_arch(arch)
+    if not hasattr(cfg, "family"):      # dual-encoder (basic-{s,m,l})
+        return run_contrastive_dryrun(cfg, shape_name, multi_pod=multi_pod,
+                                      sharding=sharding, remat=remat,
+                                      verbose=verbose,
+                                      batch_over=batch_over)
+    if attn != "naive":
+        cfg = dataclasses.replace(cfg, attn_impl=attn)
+    if ssm_chunk is not None and cfg.ssm is not None:
+        cfg = dataclasses.replace(
+            cfg, ssm=dataclasses.replace(cfg.ssm, chunk=ssm_chunk))
+    shape = INPUT_SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+
+    # XLA costs a while-loop body ONCE (not x trip count), so a scanned
+    # layer stack under-reports flops/bytes/collectives. We compile at
+    # unroll=1 and unroll=2 and linearly extrapolate the homogeneous loop
+    # body:  total = F1 + (n_periods - 1) * (F2 - F1).   "--unroll N"
+    # overrides with a direct single compile at that unroll.
+    from repro.models.transformer import period_of
+    n_periods = cfg.n_layers // period_of(cfg)
+    extrapolate = unroll is None and n_periods >= 2
+
+    margs = dict(st.DEFAULT_MOE_ARGS, group=moe_group)
+    serve_margs = None
+    if dispatch is not None:
+        margs["dispatch"] = dispatch
+        serve_margs = dict(margs, group=min(moe_group,
+                                            shape.global_batch))
+
+    def build(u):
+        if shape.kind == "train":
+            fn, opt = st.make_train_step(cfg, remat=remat, unroll=u,
+                                         moe_args=margs)
+            oabs = st.abstract_opt_state(cfg, opt, params_abs)
+        elif shape.kind == "prefill":
+            fn, oabs = st.make_prefill_step(cfg, unroll=u,
+                                            moe_args=margs), None
+        else:
+            fn, oabs = st.make_serve_step(cfg, unroll=u,
+                                          moe_args=serve_margs), None
+        return fn, oabs
+
+    params_abs = st.abstract_params(cfg)
+    if param_dtype is not None:
+        import jax.numpy as jnp
+        dt = {"bf16": jnp.bfloat16, "f32": jnp.float32}[param_dtype]
+        params_abs = jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, dt)
+            if jnp.issubdtype(x.dtype, jnp.floating) else x, params_abs)
+
+    def compile_at(u):
+        fn, oabs = build(u)
+        in_sh, inputs = st.shardings_for(cfg, shape, mesh, sharding,
+                                         params_abs, oabs,
+                                         batch_over=batch_over)
+        with mesh:
+            lowered = jax.jit(fn, in_shardings=in_sh).lower(*inputs)
+            return lowered.compile()
+
+    if extrapolate:
+        c1 = compile_at(1)
+        t_lower = time.time() - t0
+        c2 = compile_at(2)
+        t_compile = time.time() - t0 - t_lower
+        cost1, cost2 = c1.cost_analysis(), c2.cost_analysis()
+        coll1 = rf.collective_bytes(c1.as_text())
+        coll2 = rf.collective_bytes(c2.as_text())
+
+        def extrap(a, b):
+            return {k: float(a.get(k, 0))
+                    + (n_periods - 1) * (float(b.get(k, 0))
+                                         - float(a.get(k, 0)))
+                    for k in set(a) | set(b)
+                    if isinstance(a.get(k, b.get(k)), (int, float))}
+
+        cost = extrap(cost1, cost2)
+        coll = extrap(coll1, coll2)
+        mem = c1.memory_analysis()   # scan IS the real execution structure
+        compiled = c1
+    else:
+        u = unroll if unroll is not None else 1
+        compiled = compile_at(u)
+        t_lower = time.time() - t0
+        t_compile = 0.0
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        coll = rf.collective_bytes(compiled.as_text())
+
+    terms = rf.roofline_terms(cost, coll)
+    n_active = cfg.param_counts()["active"]
+    mflops = rf.model_flops(cfg, shape, n_active)
+    chips = mesh.devices.size
+    hlo_flops_global = terms["flops_per_device"] * chips
+
+    result = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "chips": int(chips), "sharding": sharding, "remat": remat,
+        "attn": attn, "moe_group": moe_group, "dispatch": dispatch,
+        "param_dtype": param_dtype, "batch_over": batch_over,
+        "ssm_chunk": ssm_chunk,
+        "ok": True,
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "memory": {
+            "argument_bytes_per_device": int(getattr(mem, "argument_size_in_bytes", 0)),
+            "output_bytes_per_device": int(getattr(mem, "output_size_in_bytes", 0)),
+            "temp_bytes_per_device": int(getattr(mem, "temp_size_in_bytes", 0)),
+            "peak_gb_per_device": round(
+                (getattr(mem, "argument_size_in_bytes", 0)
+                 + getattr(mem, "temp_size_in_bytes", 0)) / 2**30, 3),
+        },
+        "collectives": coll,
+        "roofline": terms,
+        "model_flops_global": mflops,
+        "hlo_flops_global": hlo_flops_global,
+        "useful_flops_ratio": (mflops / hlo_flops_global
+                               if hlo_flops_global else None),
+    }
+    if verbose:
+        print(f"[{arch} × {shape_name} × {result['mesh']} × {sharding}] "
+              f"compile={t_compile:.1f}s "
+              f"compute={terms['compute_s']*1e3:.2f}ms "
+              f"mem={terms['memory_s']*1e3:.2f}ms "
+              f"coll={terms['collective_s']*1e3:.2f}ms "
+              f"bottleneck={terms['bottleneck']} "
+              f"useful={result['useful_flops_ratio'] and round(result['useful_flops_ratio'],3)}")
+        print("  memory_analysis:", result["memory"])
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", choices=["pod", "multipod", "both"],
+                    default="pod")
+    ap.add_argument("--sharding", default="basic_ws",
+                    choices=["basic_ws", "tp", "replicated"])
+    ap.add_argument("--remat", default="basic")
+    ap.add_argument("--all", action="store_true",
+                    help="run every applicable (arch × shape)")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--attn", default="naive", choices=["naive", "chunked"])
+    ap.add_argument("--dispatch", default=None,
+                    choices=[None, "dense", "capacity"])
+    ap.add_argument("--param-dtype", default=None, choices=[None, "bf16", "f32"])
+    ap.add_argument("--batch-over", default="data", choices=["data", "all"])
+    ap.add_argument("--ssm-chunk", type=int, default=None)
+    ap.add_argument("--moe-group", type=int, default=4096)
+    ap.add_argument("--unroll", type=int, default=None,
+                    help="layer-scan unroll (default: full for accurate "
+                         "cost analysis; 1 = cheap compile-check)")
+    args = ap.parse_args()
+
+    combos = []
+    if args.all:
+        for a in list_archs():
+            cfg = get_arch(a)
+            if not hasattr(cfg, "family"):  # dual-encoder configs: skip here
+                continue
+            for s in applicable_shapes(cfg):
+                combos.append((a, s.name))
+    else:
+        combos.append((args.arch, args.shape))
+
+    meshes = {"pod": [False], "multipod": [True], "both": [False, True]}[
+        args.mesh]
+    os.makedirs(args.out, exist_ok=True)
+    failures = 0
+    for arch, shape in combos:
+        for mp in meshes:
+            tag = (f"{arch}_{shape}_{'2x16x16' if mp else '16x16'}_"
+                   f"{args.sharding}_{args.remat}"
+                   + ("" if args.attn == "naive" else f"_{args.attn}")
+                   + ("" if args.moe_group == 4096 else f"_g{args.moe_group}")
+                   + ("" if args.dispatch is None else f"_{args.dispatch}")
+                   + ("" if args.param_dtype is None else f"_p{args.param_dtype}")
+                   + ("" if args.batch_over == "data" else "_ball")
+                   + ("" if args.ssm_chunk is None else f"_sc{args.ssm_chunk}"))
+            path = os.path.join(args.out, tag.replace("/", "-") + ".json")
+            if os.path.exists(path):
+                print(f"[skip cached] {tag}")
+                continue
+            try:
+                res = run_one(arch, shape, multi_pod=mp,
+                              sharding=args.sharding, remat=args.remat,
+                              unroll=args.unroll, attn=args.attn,
+                              moe_group=args.moe_group,
+                              dispatch=args.dispatch,
+                              param_dtype=args.param_dtype,
+                              batch_over=args.batch_over,
+                              ssm_chunk=args.ssm_chunk)
+            except Exception as e:  # noqa: BLE001
+                failures += 1
+                res = {"arch": arch, "shape": shape,
+                       "mesh": "2x16x16" if mp else "16x16",
+                       "sharding": args.sharding, "remat": args.remat,
+                       "ok": False, "error": f"{type(e).__name__}: {e}",
+                       "traceback": traceback.format_exc()[-3000:]}
+                print(f"[FAIL] {tag}: {type(e).__name__}: {e}")
+            with open(path, "w") as f:
+                json.dump(res, f, indent=1)
+    print(f"done; {failures} failures")
+    raise SystemExit(1 if failures else 0)
+
+
+
+
+def run_contrastive_dryrun(dual_cfg, shape_name, *, multi_pod=False,
+                           sharding="basic_ws", remat="basic", verbose=True,
+                           num_micro=8, batch_over="data") -> dict:
+    """Lower+compile the paper's own step: BASIC dual-encoder contrastive
+    GradAccum at B=65536 (M=8192). Tower scans run at unroll=1 (no
+    extrapolation — this run proves memory/sharding coherence at the paper's
+    batch size; roofline precision comes from the LM combos)."""
+    import jax.numpy as jnp
+    from repro.core import sharding as shd
+    shape = INPUT_SHAPES[shape_name]
+    assert shape.kind == "contrastive"
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+
+    step, opt = st.make_contrastive_step(dual_cfg, num_micro=num_micro,
+                                         remat=remat)
+    params_abs = jax.eval_shape(
+        lambda k: __import__("repro.models.dual_encoder",
+                             fromlist=["init_params"]).init_params(
+                                 dual_cfg, k), jax.random.key(0))
+    opt_abs = jax.eval_shape(opt.init, params_abs)
+    ins = st.contrastive_input_specs(dual_cfg, shape)
+    baxes = None
+    if batch_over == "all":
+        baxes = (*shd.data_axes(mesh), shd.MODEL)
+    pspecs = shd.to_named(shd.params_specs(params_abs, mesh, sharding), mesh)
+    ospecs = shd.to_named(shd.params_specs(opt_abs, mesh, sharding), mesh)
+    bspecs = shd.to_named(shd.batch_specs(ins, mesh, batch_axes=baxes), mesh)
+    with mesh:
+        lowered = jax.jit(step, in_shardings=(pspecs, ospecs, bspecs)).lower(
+            params_abs, opt_abs, ins)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    coll = rf.collective_bytes(compiled.as_text())
+    terms = rf.roofline_terms(cost, coll)
+    result = {
+        "arch": dual_cfg.name, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "chips": int(mesh.devices.size), "sharding": sharding,
+        "remat": remat, "num_micro": num_micro, "ok": True,
+        "extrapolated": False,
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "memory": {
+            "argument_bytes_per_device": int(getattr(mem, "argument_size_in_bytes", 0)),
+            "temp_bytes_per_device": int(getattr(mem, "temp_size_in_bytes", 0)),
+            "peak_gb_per_device": round(
+                (getattr(mem, "argument_size_in_bytes", 0)
+                 + getattr(mem, "temp_size_in_bytes", 0)) / 2**30, 3),
+        },
+        "collectives": coll, "roofline": terms,
+    }
+    if verbose:
+        print(f"[{dual_cfg.name} x {shape_name} x {result['mesh']} x "
+              f"{sharding} micro={num_micro}] compile={t_compile:.1f}s "
+              f"peak={result['memory']['peak_gb_per_device']}GB "
+              f"coll={terms['collective_s']*1e3:.1f}ms")
+    return result
+
+
+if __name__ == "__main__":
+    main()

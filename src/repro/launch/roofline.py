@@ -1,0 +1,93 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+Hardware model (TPU v5e target, per chip):
+    peak bf16 compute  197 TFLOP/s
+    HBM bandwidth      819 GB/s
+    ICI per link       ~50 GB/s
+
+Terms (per training/serving step, per chip — XLA compiles the per-device
+SPMD program, so ``cost_analysis`` numbers are already per chip):
+    compute    = flops / PEAK_FLOPS
+    memory     = bytes_accessed / HBM_BW
+    collective = collective_bytes / ICI_BW
+
+``collective_bytes`` is parsed from the post-SPMD HLO: the summed output
+sizes of all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute ops (one pass over the wire per op — a lower bound that
+ignores multi-hop ring latency; good enough to rank bottlenecks).
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+_OP_LINE = re.compile(
+    r"=\s*((?:\([^)]*\)|[a-z0-9]+\[[0-9,]*\][^ ]*))\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum output bytes per collective kind from post-SPMD HLO text."""
+    out = {k: 0 for k in _COLLECTIVES}
+    out["count"] = 0
+    for m in _OP_LINE.finditer(hlo_text):
+        shape_part, op = m.group(1), m.group(2)
+        out[op] += _shape_bytes(shape_part)
+        out["count"] += 1
+    out["total"] = sum(out[k] for k in _COLLECTIVES)
+    return out
+
+
+def roofline_terms(cost: dict, coll: dict) -> dict:
+    flops = float(cost.get("flops", 0.0))
+    byts = float(cost.get("bytes accessed", 0.0))
+    cbytes = float(coll.get("total", 0))
+    terms = {
+        "flops_per_device": flops,
+        "bytes_per_device": byts,
+        "collective_bytes_per_device": cbytes,
+        "compute_s": flops / PEAK_FLOPS,
+        "memory_s": byts / HBM_BW,
+        "collective_s": cbytes / ICI_BW,
+    }
+    dom = max(("compute_s", "memory_s", "collective_s"),
+              key=lambda k: terms[k])
+    terms["bottleneck"] = dom.replace("_s", "")
+    return terms
+
+
+def model_flops(cfg, shape, n_active: int) -> float:
+    """MODEL_FLOPS = 6·N·D for training, 2·N·D for inference forward
+    (D = tokens processed globally per step)."""
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode"
+                                   else 1)
+    mult = 6 if shape.kind == "train" else 2
+    return float(mult * n_active * tokens)

@@ -1,0 +1,184 @@
+"""Step-function factory shared by dryrun/train/serve.
+
+For each (arch, input-shape kind) this builds:
+  - the jittable step fn (train_step / prefill_step / serve_step),
+  - abstract inputs (ShapeDtypeStruct stand-ins, no allocation),
+  - in_shardings matching the fn's positional args for a given mesh + mode.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, InputShape
+from repro.core import remat as remat_lib
+from repro.core import sharding as shd
+from repro.models import frontends, transformer as tf
+from repro.optim.adafactorw import AdaFactorW, apply_updates
+
+DEFAULT_MOE_ARGS = {"dispatch": "capacity", "group": 4096,
+                    "capacity_factor": 1.25}
+
+
+def make_optimizer(weight_decay=0.0025):
+    return AdaFactorW(beta1=0.9, beta2=0.99, weight_decay=weight_decay)
+
+
+def abstract_params(cfg: ArchConfig):
+    return jax.eval_shape(lambda k: tf.init_params(cfg, k),
+                          jax.random.key(0))
+
+
+def abstract_opt_state(cfg: ArchConfig, opt: AdaFactorW, params_abs):
+    return jax.eval_shape(opt.init, params_abs)
+
+
+# ---------------------------------------------------------------------------
+# step functions
+# ---------------------------------------------------------------------------
+
+
+def make_train_step(cfg: ArchConfig, *, remat: str = "basic",
+                    moe_args: Optional[dict] = None, lr: float = 1e-3,
+                    dtype=jnp.bfloat16, unroll: int = 1):
+    opt = make_optimizer()
+    policy = remat_lib.get_policy(remat)
+    margs = DEFAULT_MOE_ARGS if moe_args is None else moe_args
+
+    def train_step(params, opt_state, batch):
+        def loss_fn(p):
+            loss, metrics = tf.lm_loss(cfg, p, batch, dtype=dtype,
+                                       remat_policy=policy, moe_args=margs,
+                                       unroll=unroll)
+            return loss, metrics
+
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            params)
+        updates, opt_state = opt.update(grads, opt_state, params, lr)
+        params = apply_updates(params, updates)
+        return params, opt_state, loss, metrics
+
+    return train_step, opt
+
+
+def make_prefill_step(cfg: ArchConfig, *, moe_args: Optional[dict] = None,
+                      dtype=jnp.bfloat16, unroll: int = 1):
+    margs = DEFAULT_MOE_ARGS if moe_args is None else moe_args
+
+    def prefill_step(params, batch):
+        return tf.prefill(cfg, params, batch, dtype=dtype, moe_args=margs,
+                          unroll=unroll)
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ArchConfig, *, moe_args: Optional[dict] = None,
+                    dtype=jnp.bfloat16, unroll: int = 1):
+    if moe_args is None:
+        # historical default: dense dispatch for single-token decode. This is
+        # EXACT but computes every expert for every token — the arctic-480b
+        # hillclimb (EXPERIMENTS.md §Perf) showed capacity dispatch with
+        # group=batch cuts decode memory traffic ~top_k/E; pass
+        # moe_args={'dispatch': 'capacity', ...} to get the optimized path.
+        margs = dict(DEFAULT_MOE_ARGS, dispatch="dense")
+    else:
+        margs = dict(moe_args)
+
+    def serve_step(params, caches, token, pos):
+        logits, caches = tf.decode_step(cfg, params, token, pos, caches,
+                                        dtype=dtype, moe_args=margs,
+                                        unroll=unroll)
+        return logits, caches
+
+    return serve_step
+
+
+def make_contrastive_step(dual_cfg, *, num_micro: int = 8,
+                          remat: str = "basic", lr: float = 2.5e-4,
+                          dtype=jnp.bfloat16, unroll: int = 1):
+    """The paper's own training step: Algorithm-1 GradAccum over num_micro
+    microbatches (B=65536, M=B/num_micro=8192 matches App. E) + AdaFactorW."""
+    from repro.core.gradaccum import contrastive_step as ga_step
+    from repro.models import dual_encoder as de
+    opt = make_optimizer()
+    policy = remat_lib.get_policy(remat)
+
+    def enc_i(p, images):
+        return de.encode_image(dual_cfg, p, images, dtype=dtype,
+                               remat_policy=policy)
+
+    def enc_t(p, texts):
+        return de.encode_text(dual_cfg, p, texts, dtype=dtype,
+                              remat_policy=policy)
+
+    def train_step(params, opt_state, batch):
+        loss, metrics, grads = ga_step(enc_i, enc_t, params, batch, num_micro)
+        updates, opt_state = opt.update(grads, opt_state, params, lr)
+        params = apply_updates(params, updates)
+        return params, opt_state, loss
+
+    return train_step, opt
+
+
+def contrastive_input_specs(dual_cfg, shape, *, dtype=jnp.bfloat16):
+    SDS = jax.ShapeDtypeStruct
+    b = shape.global_batch
+    it = dual_cfg.image_tower
+    return {
+        "images": {"patch_embeddings":
+                   SDS((b, it.frontend_len, it.d_model), dtype)},
+        "texts": {"tokens": SDS((b, shape.seq_len), jnp.int32)},
+    }
+
+
+# ---------------------------------------------------------------------------
+# abstract inputs + shardings per shape kind
+# ---------------------------------------------------------------------------
+
+
+def input_specs(cfg: ArchConfig, shape: InputShape, *, dtype=jnp.bfloat16):
+    """ShapeDtypeStruct stand-ins for every model input of this shape."""
+    SDS = jax.ShapeDtypeStruct
+    if shape.kind in ("train", "prefill"):
+        return frontends.train_inputs_spec(cfg, shape, dtype=dtype)
+    caches = jax.eval_shape(
+        lambda: tf.init_caches(cfg, shape.global_batch, shape.seq_len,
+                               dtype=dtype))
+    return {
+        "caches": caches,
+        "token": SDS((shape.global_batch, 1), jnp.int32),
+        "pos": SDS((), jnp.int32),
+    }
+
+
+def shardings_for(cfg: ArchConfig, shape: InputShape, mesh, mode: str,
+                  params_abs, opt_abs=None, *, dtype=jnp.bfloat16,
+                  batch_over: str = "data"):
+    """Returns (in_shardings tuple matching the step fn args, inputs tuple).
+
+    batch_over: 'data' shards inputs over ('pod','data') only; 'all' adds the
+    'model' axis when divisible — the paper's exact §5.1 input distribution
+    ("B examples distributed equally to ALL cores regardless of R")."""
+    baxes = None
+    if batch_over == "all":
+        baxes = (*shd.data_axes(mesh), shd.MODEL)
+    pspecs = shd.to_named(shd.params_specs(params_abs, mesh, mode), mesh)
+    ins = input_specs(cfg, shape, dtype=dtype)
+    if shape.kind == "train":
+        ospecs = shd.to_named(shd.params_specs(opt_abs, mesh, mode), mesh)
+        bspecs = shd.to_named(shd.batch_specs(ins, mesh, batch_axes=baxes),
+                              mesh)
+        return (pspecs, ospecs, bspecs), (params_abs, opt_abs, ins)
+    if shape.kind == "prefill":
+        bspecs = shd.to_named(shd.batch_specs(ins, mesh, batch_axes=baxes),
+                              mesh)
+        return (pspecs, bspecs), (params_abs, ins)
+    # decode
+    cspecs = shd.to_named(shd.cache_specs(ins["caches"], mesh), mesh)
+    tspec = shd.to_named(shd.batch_specs(ins["token"], mesh), mesh)
+    posspec = shd.to_named(jax.sharding.PartitionSpec(), mesh)
+    return (pspecs, cspecs, tspec, posspec), \
+        (params_abs, ins["caches"], ins["token"], ins["pos"])

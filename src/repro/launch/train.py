@@ -1,0 +1,217 @@
+"""Trainer: LM pretraining of assigned archs + the BASIC 3-phase recipe.
+
+Modes
+-----
+lm:           next-token training of any assigned arch (reduced or full size)
+              on synthetic tokens — the end-to-end driver for smoke scale.
+pretrain:     BASIC §8 phase 1 — softmax classification of the image tower on
+              the labeled (JFT-analog) synthetic set.
+contrastive:  BASIC §8 phase 2 — freeze image tower, contrastive-train text
+              tower with Algorithm-1 GradAccum (exact) at any B/M ratio.
+finetune:     BASIC §8 phase 3 — unfreeze both towers, small LR.
+
+Examples:
+  python -m repro.launch.train --mode lm --arch llama3.2-1b --smoke \
+      --steps 100 --batch 8 --seq 128
+  python -m repro.launch.train --mode contrastive --arch basic-s --smoke \
+      --steps 200 --batch 64 --micro 4
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import checkpoint as ckpt
+from repro.configs import get_arch, smoke_variant
+from repro.core.contrastive import contrastive_loss
+from repro.core.gradaccum import contrastive_step
+from repro.data import Tokenizer, caption_corpus, contrastive_batch, \
+    jft_batch, make_world
+from repro.models import dual_encoder as de
+from repro.models import frontends
+from repro.models import transformer as tf
+from repro.optim import AdaFactorW, apply_updates, warmup_cosine
+
+
+def _smoke_dual(cfg):
+    return dataclasses.replace(
+        cfg,
+        image_tower=smoke_variant(cfg.image_tower),
+        text_tower=smoke_variant(cfg.text_tower),
+        embed_dim=64,
+    )
+
+
+# ---------------------------------------------------------------------------
+# LM mode
+# ---------------------------------------------------------------------------
+
+
+def run_lm(args):
+    cfg = get_arch(args.arch)
+    if args.smoke:
+        cfg = smoke_variant(cfg)
+    params = tf.init_params(cfg, jax.random.key(args.seed))
+    opt = AdaFactorW(weight_decay=0.0025)
+    opt_state = opt.init(params)
+    lr_fn = warmup_cosine(args.lr, args.lr / 100, args.steps // 10 or 1,
+                          args.steps)
+    moe_args = {"dispatch": "dense"} if args.smoke else None
+
+    @jax.jit
+    def step_fn(params, opt_state, batch, step):
+        def loss_fn(p):
+            return tf.lm_loss(cfg, p, batch, moe_args=moe_args)
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            params)
+        updates, opt_state2 = opt.update(grads, opt_state, params,
+                                         lr_fn(step))
+        return apply_updates(params, updates), opt_state2, loss
+
+    rng = np.random.default_rng(args.seed)
+    t0 = time.time()
+    for i in range(args.steps):
+        batch = frontends.synthetic_inputs(cfg, args.batch, args.seq, rng)
+        params, opt_state, loss = step_fn(params, opt_state, batch,
+                                          jnp.asarray(i))
+        if i % args.log_every == 0 or i == args.steps - 1:
+            print(f"step {i:5d} loss {float(loss):.4f} "
+                  f"({(time.time()-t0)/(i+1):.2f}s/step)")
+    if args.ckpt_dir:
+        print("saved:", ckpt.save(args.ckpt_dir, args.steps, params))
+    return params
+
+
+# ---------------------------------------------------------------------------
+# BASIC phases
+# ---------------------------------------------------------------------------
+
+
+def _build_world(args):
+    rng = np.random.default_rng(args.seed)
+    cfg = get_arch(args.arch)
+    if args.smoke:
+        cfg = _smoke_dual(cfg)
+    world = make_world(rng, n_classes=args.classes,
+                       n_patches=cfg.image_tower.frontend_len,
+                       patch_dim=cfg.image_tower.d_model)
+    tok = Tokenizer.train(caption_corpus(world, rng), vocab_size=512)
+    # clamp token ids to the tower vocab
+    assert tok.vocab_size <= cfg.text_tower.vocab or args.smoke
+    return cfg, world, tok, rng
+
+
+def run_pretrain(args):
+    """Phase 1: image tower + linear classifier on JFT-analog labels."""
+    cfg, world, tok, rng = _build_world(args)
+    icfg = cfg.image_tower
+    key = jax.random.key(args.seed)
+    params = {"tower": tf.init_params(icfg, key),
+              "head": jax.random.normal(key, (icfg.d_model, world.n_classes))
+              * icfg.d_model ** -0.5}
+    opt = AdaFactorW()
+    opt_state = opt.init(params)
+
+    @jax.jit
+    def step_fn(params, opt_state, patches, labels):
+        def loss_fn(p):
+            h = tf.encode(icfg, p["tower"], {"patch_embeddings": patches})
+            logits = h @ p["head"]
+            logp = jax.nn.log_softmax(logits)
+            return -jnp.mean(jnp.take_along_axis(logp, labels[:, None], 1))
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        updates, opt_state = opt.update(grads, opt_state, params, args.lr)
+        return apply_updates(params, updates), opt_state, loss
+
+    for i in range(args.steps):
+        batch, _ = jft_batch(world, args.batch, rng)
+        params, opt_state, loss = step_fn(
+            params, opt_state, jnp.asarray(batch["patch_embeddings"]),
+            jnp.asarray(batch["labels"]))
+        if i % args.log_every == 0:
+            print(f"pretrain step {i:5d} xent {float(loss):.4f}")
+    if args.ckpt_dir:
+        ckpt.save(args.ckpt_dir, args.steps, params)
+    return params
+
+
+def run_contrastive(args, image_tower_init=None, train_image=False):
+    """Phases 2/3: contrastive training with Algorithm-1 GradAccum."""
+    cfg, world, tok, rng = _build_world(args)
+    key = jax.random.key(args.seed + 1)
+    params = de.init_params(cfg, key)
+    if image_tower_init is not None:
+        params["image"]["tower"] = image_tower_init
+
+    opt = AdaFactorW(weight_decay=0.0025)
+    opt_state = opt.init(params)
+    lr_fn = warmup_cosine(args.lr, args.lr / 100, args.steps // 10 or 1,
+                          args.steps)
+
+    def enc_i(p, images):
+        return de.encode_image(cfg, p, images)
+
+    def enc_t(p, texts):
+        return de.encode_text(cfg, p, texts)
+
+    frozen_image = not train_image and image_tower_init is not None
+
+    @jax.jit
+    def step_fn(params, opt_state, batch, step):
+        loss, metrics, grads = contrastive_step(
+            enc_i, enc_t, params, batch, args.micro,
+            loss_fn=lambda x, y, tau: contrastive_loss(x, y, tau))
+        if frozen_image:
+            grads["image"]["tower"] = jax.tree.map(
+                jnp.zeros_like, grads["image"]["tower"])
+        updates, opt_state = opt.update(grads, opt_state, params,
+                                        lr_fn(step))
+        return apply_updates(params, updates), opt_state, loss, metrics
+
+    for i in range(args.steps):
+        batch, _ = contrastive_batch(world, tok, args.batch, rng)
+        batch = jax.tree.map(jnp.asarray, batch)
+        params, opt_state, loss, metrics = step_fn(params, opt_state, batch,
+                                                   jnp.asarray(i))
+        if i % args.log_every == 0:
+            print(f"contrastive step {i:5d} loss {float(loss):.4f} "
+                  f"i2t@1 {float(metrics['i2t_top1']):.3f}")
+    if args.ckpt_dir:
+        ckpt.save(args.ckpt_dir, args.steps, params)
+    return params
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mode", required=True,
+                    choices=["lm", "pretrain", "contrastive", "finetune"])
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=32)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--micro", type=int, default=4)
+    ap.add_argument("--classes", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--ckpt-dir", default=None)
+    args = ap.parse_args()
+
+    if args.mode == "lm":
+        run_lm(args)
+    elif args.mode == "pretrain":
+        run_pretrain(args)
+    elif args.mode == "contrastive":
+        run_contrastive(args)
+    else:  # finetune: both towers trainable
+        run_contrastive(args, train_image=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,210 @@
+"""GQA attention: training/prefill (full-sequence) and single-token decode.
+
+Supports: grouped-query heads, qk-norm (Qwen3), causal / bidirectional /
+sliding-window masks, RoPE, and two KV-cache layouts:
+  - linear cache (full attention):  k/v (batch, kv_heads, S, head_dim) + pos
+  - ring cache (sliding window):    same shape with S = window, written mod W
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import layers as L
+
+NEG_INF = -1e30
+
+
+class KVCache(NamedTuple):
+    """k/v: (batch, kv_heads, cache_len, head_dim), RoPE already applied.
+
+    Ring-buffer addressing is *derived*, not stored: the cache is a ring iff
+    the arch has a sliding window and cache_len == window (see ``is_ring``) —
+    keeping the pytree free of static leaves so it jits cleanly.
+    """
+    k: jax.Array
+    v: jax.Array
+
+
+def is_ring(cfg: ArchConfig, cache: KVCache) -> bool:
+    return (cfg.sliding_window is not None
+            and cache.k.shape[2] == cfg.sliding_window)
+
+
+def init_attn_params(key, cfg: ArchConfig, extra=()):
+    hd = cfg.resolved_head_dim
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    p = {
+        "wq": L.dense_init(kq, cfg.d_model, cfg.n_heads * hd, extra),
+        "wk": L.dense_init(kk, cfg.d_model, cfg.n_kv_heads * hd, extra),
+        "wv": L.dense_init(kv, cfg.d_model, cfg.n_kv_heads * hd, extra),
+        "wo": L.dense_init(ko, cfg.n_heads * hd, cfg.d_model, extra),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((*extra, hd), jnp.float32)
+        p["k_norm"] = jnp.ones((*extra, hd), jnp.float32)
+    return p
+
+
+def _project_qkv(p, cfg: ArchConfig, x, positions):
+    b, s, _ = x.shape
+    hd = cfg.resolved_head_dim
+    q = L.dense(x, p["wq"]).reshape(b, s, cfg.n_heads, hd)
+    k = L.dense(x, p["wk"]).reshape(b, s, cfg.n_kv_heads, hd)
+    v = L.dense(x, p["wv"]).reshape(b, s, cfg.n_kv_heads, hd)
+    if cfg.qk_norm:
+        q = L.rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = L.rms_norm(k, p["k_norm"], cfg.norm_eps)
+    q = L.apply_rope(q, positions, cfg.rope_theta)
+    k = L.apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _mask(cfg: ArchConfig, q_pos, k_pos):
+    """(q_len, k_len) additive mask from absolute positions."""
+    m = jnp.zeros((q_pos.shape[-1], k_pos.shape[-1]), jnp.float32)
+    if cfg.causal:
+        m = jnp.where(k_pos[None, :] <= q_pos[:, None], m, NEG_INF)
+    if cfg.sliding_window is not None:
+        m = jnp.where(q_pos[:, None] - k_pos[None, :] < cfg.sliding_window,
+                      m, NEG_INF)
+    return m
+
+
+def _sdpa(q, k, v, mask):
+    """q: (b,s,h,hd); k/v: (b,t,kv,hd); mask: (s,t) additive."""
+    b, s, h, hd = q.shape
+    kv = k.shape[2]
+    group = h // kv
+    q = q.reshape(b, s, kv, group, hd)
+    scores = jnp.einsum("bskgd,btkd->bkgst", q, k) * (hd ** -0.5)
+    scores = scores.astype(jnp.float32) + mask
+    w = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgst,btkd->bskgd", w, v)
+    return out.reshape(b, s, h, hd)
+
+
+def _sdpa_chunked(q, k, v, mask, block: int):
+    """Flash-style chunked attention in pure XLA (lowerable on any backend —
+    the dry-run stand-in for the Pallas kernel): scan over query blocks,
+    scores live only per block, block fn checkpointed so the backward pass
+    recomputes them instead of saving O(s²) residuals."""
+    b, s, h, hd = q.shape
+    kv = k.shape[2]
+    group = h // kv
+    nb = s // block
+    qb = q.reshape(b, nb, block, h, hd).transpose(1, 0, 2, 3, 4)
+    mb = mask.reshape(nb, block, mask.shape[-1])
+
+    @jax.checkpoint
+    def blk(args):
+        qi, mi = args
+        qg = qi.reshape(b, block, kv, group, hd)
+        scores = jnp.einsum("bskgd,btkd->bkgst", qg, k) * (hd ** -0.5)
+        scores = scores.astype(jnp.float32) + mi
+        w = jax.nn.softmax(scores, axis=-1).astype(qi.dtype)
+        o = jnp.einsum("bkgst,btkd->bskgd", w, v)
+        return o.reshape(b, block, h, hd)
+
+    _, out = jax.lax.scan(lambda c, a: (c, blk(a)), None, (qb, mb))
+    return out.transpose(1, 0, 2, 3, 4).reshape(b, s, h, hd)
+
+
+def attention(p, cfg: ArchConfig, x, positions, return_kv: bool = False,
+              impl: str = "naive", block: int = 512):
+    """Full-sequence attention (train / prefill). x: (b, s, d).
+
+    impl: 'naive' (materialize scores; paper-era baseline) or 'chunked'
+    (flash-style online blocks — beyond-paper memory optimization)."""
+    b, s, _ = x.shape
+    q, k, v = _project_qkv(p, cfg, x, positions)
+    mask = _mask(cfg, positions[0], positions[0])
+    if impl == "chunked" and s % min(block, s) == 0:
+        out = _sdpa_chunked(q, k, v, mask, min(block, s))
+    else:
+        out = _sdpa(q, k, v, mask)
+    out = L.dense(out.reshape(b, s, -1), p["wo"])
+    if return_kv:
+        return out, (k, v)
+    return out
+
+
+def cache_from_prefill(cfg: ArchConfig, k, v, cache_len: int,
+                       dtype=None) -> KVCache:
+    """Build a decode cache from prefill k/v ((b, s, kv, hd), RoPE applied).
+
+    Linear cache: k/v written at [0, s). Ring cache (SWA, cache_len == window
+    <= s is possible): the last ``window`` positions are placed at their
+    pos %% window slots so subsequent decode writes continue the ring."""
+    import numpy as np
+    b, s, kvh, hd = k.shape
+    dtype = dtype or k.dtype
+    k = k.transpose(0, 2, 1, 3).astype(dtype)   # (b, kv, s, hd)
+    v = v.transpose(0, 2, 1, 3).astype(dtype)
+    ring = cfg.sliding_window is not None and cache_len == cfg.sliding_window
+    if ring and s >= cache_len:
+        w = cache_len
+        src = np.arange(s - w, s)               # source positions
+        dest = src % w                          # their ring slots
+        inv = np.argsort(dest)                  # slot i is filled from src[inv[i]]
+        ksel = k[:, :, src[inv], :]
+        vsel = v[:, :, src[inv], :]
+        return KVCache(k=ksel, v=vsel)
+    ck = jnp.zeros((b, kvh, cache_len, hd), dtype)
+    cv = jnp.zeros((b, kvh, cache_len, hd), dtype)
+    ck = jax.lax.dynamic_update_slice_in_dim(ck, k[:, :, :cache_len], 0, axis=2)
+    cv = jax.lax.dynamic_update_slice_in_dim(cv, v[:, :, :cache_len], 0, axis=2)
+    return KVCache(k=ck, v=cv)
+
+
+# ---------------------------------------------------------------------------
+# Decode path
+# ---------------------------------------------------------------------------
+
+
+def init_kv_cache(cfg: ArchConfig, batch: int, seq_len: int,
+                  dtype=jnp.bfloat16) -> KVCache:
+    hd = cfg.resolved_head_dim
+    ring = cfg.sliding_window is not None and cfg.sliding_window <= seq_len
+    clen = cfg.sliding_window if ring else seq_len
+    shape = (batch, cfg.n_kv_heads, clen, hd)
+    return KVCache(k=jnp.zeros(shape, dtype), v=jnp.zeros(shape, dtype))
+
+
+def decode_attention(p, cfg: ArchConfig, x, cache: KVCache, pos):
+    """One-token decode. x: (b, 1, d); pos: scalar int32 (current position).
+
+    Returns (out (b,1,d), new_cache).
+    """
+    b = x.shape[0]
+    hd = cfg.resolved_head_dim
+    positions = jnp.full((b, 1), pos, jnp.int32)
+    q, k_new, v_new = _project_qkv(p, cfg, x, positions)
+
+    clen = cache.k.shape[2]
+    ring = is_ring(cfg, cache)
+    slot = (pos % clen) if ring else pos
+    k = jax.lax.dynamic_update_slice_in_dim(
+        cache.k, k_new.transpose(0, 2, 1, 3).astype(cache.k.dtype), slot, axis=2)
+    v = jax.lax.dynamic_update_slice_in_dim(
+        cache.v, v_new.transpose(0, 2, 1, 3).astype(cache.v.dtype), slot, axis=2)
+
+    idx = jnp.arange(clen)
+    valid = idx <= pos
+    if ring:
+        # once pos >= clen the ring is full and every slot is in-window
+        valid = jnp.where(pos >= clen, jnp.ones_like(valid), valid)
+    mask = jnp.where(valid, 0.0, NEG_INF)[None, :]    # (1, clen)
+
+    kv = cfg.n_kv_heads
+    group = cfg.n_heads // kv
+    qh = q.reshape(b, kv, group, hd)
+    scores = jnp.einsum("bkgd,bktd->bkgt", qh, k.astype(qh.dtype)) * (hd ** -0.5)
+    scores = scores.astype(jnp.float32) + mask[:, None, None, :]
+    w = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgt,bktd->bkgd", w, v.astype(w.dtype))
+    out = out.reshape(b, 1, cfg.n_heads * hd)
+    return L.dense(out, p["wo"]), KVCache(k=k, v=v)

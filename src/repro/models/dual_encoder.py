@@ -1,0 +1,53 @@
+"""BASIC dual encoder: image tower F and text tower G mapping into S^D.
+
+Paper §3: F(x), G(y) live on the D-dimensional unit sphere; similarity
+A = (X^T Y)/tau with learnable temperature tau (stored as log_tau).
+Text pooling is mean-over-positions (paper §7.2, unlike ALIGN's [CLS]).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.dual import DualEncoderConfig
+from repro.models import layers as L
+from repro.models import transformer as tf
+
+
+def init_params(cfg: DualEncoderConfig, rng):
+    ki, kt, kpi, kpt = jax.random.split(rng, 4)
+    return {
+        "image": {
+            "tower": tf.init_params(cfg.image_tower, ki),
+            "proj": L.dense_init(kpi, cfg.image_tower.d_model, cfg.embed_dim),
+        },
+        "text": {
+            "tower": tf.init_params(cfg.text_tower, kt),
+            "proj": L.dense_init(kpt, cfg.text_tower.d_model, cfg.embed_dim),
+        },
+        "log_tau": jnp.asarray(jnp.log(cfg.init_temperature), jnp.float32),
+    }
+
+
+def _norm(z):
+    return z / jnp.linalg.norm(z, axis=-1, keepdims=True).clip(1e-6)
+
+
+def encode_image(cfg: DualEncoderConfig, params, images, *, dtype=jnp.float32,
+                 remat_policy=None):
+    """images: dict with 'patch_embeddings' (b, P, d). Returns (b, D) on S^D."""
+    h = tf.encode(cfg.image_tower, params["image"]["tower"], images,
+                  dtype=dtype, remat_policy=remat_policy)
+    return _norm(L.dense(h, params["image"]["proj"]).astype(jnp.float32))
+
+
+def encode_text(cfg: DualEncoderConfig, params, texts, *, dtype=jnp.float32,
+                remat_policy=None):
+    """texts: dict with 'tokens' (b, s) (+ optional 'attn_mask')."""
+    h = tf.encode(cfg.text_tower, params["text"]["tower"], texts,
+                  dtype=dtype, remat_policy=remat_policy)
+    return _norm(L.dense(h, params["text"]["proj"]).astype(jnp.float32))
+
+
+def temperature(params):
+    return jnp.exp(params["log_tau"])

@@ -1,0 +1,55 @@
+"""Modality frontend STUBS + per-(arch, shape) input specs.
+
+Per the task carve-out, audio (conv feature extractor) and vision (ViT
+encoder + projector) frontends are not implemented; ``input_specs`` provides
+precomputed frame/patch embeddings of the right shape, and
+``synthetic_inputs`` materializes small concrete batches for smoke tests.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig, InputShape
+
+
+def train_inputs_spec(cfg: ArchConfig, shape: InputShape, dtype=jnp.bfloat16):
+    b, s = shape.global_batch, shape.seq_len
+    SDS = jax.ShapeDtypeStruct
+    if cfg.family == "encoder":  # hubert: frame embeddings + masked targets
+        return {
+            "embeddings": SDS((b, s, cfg.d_model), dtype),
+            "targets": SDS((b, s), jnp.int32),
+            "mask": SDS((b, s), jnp.bool_),
+        }
+    if cfg.frontend == "vision":  # vlm: patches + text filling the rest
+        s_text = s - cfg.frontend_len
+        return {
+            "patch_embeddings": SDS((b, cfg.frontend_len, cfg.d_model), dtype),
+            "tokens": SDS((b, s_text), jnp.int32),
+        }
+    return {"tokens": SDS((b, s), jnp.int32)}
+
+
+def synthetic_inputs(cfg: ArchConfig, batch: int, seq: int, rng: np.random.Generator,
+                     dtype=jnp.float32):
+    """Concrete small batch matching train_inputs_spec (smoke tests/examples)."""
+    if cfg.family == "encoder":
+        return {
+            "embeddings": jnp.asarray(
+                rng.standard_normal((batch, seq, cfg.d_model)), dtype),
+            "targets": jnp.asarray(
+                rng.integers(0, cfg.vocab, (batch, seq)), jnp.int32),
+            "mask": jnp.asarray(rng.random((batch, seq)) < 0.3),
+        }
+    if cfg.frontend == "vision":
+        P = min(cfg.frontend_len, max(1, seq // 4))
+        return {
+            "patch_embeddings": jnp.asarray(
+                rng.standard_normal((batch, P, cfg.d_model)), dtype),
+            "tokens": jnp.asarray(
+                rng.integers(0, cfg.vocab, (batch, seq - P)), jnp.int32),
+        }
+    return {"tokens": jnp.asarray(
+        rng.integers(0, cfg.vocab, (batch, seq)), jnp.int32)}

@@ -1,0 +1,70 @@
+"""Primitive layers: norms, RoPE, SwiGLU, initializers.
+
+All layers are pure functions over explicit param pytrees. Intermediate values
+that the BASIC remat policy (core/remat.py) wants to *save* are tagged with
+``jax.ad_checkpoint.checkpoint_name`` — everything untagged (norms, activations,
+softmax internals) is rematerialized, mirroring paper §5.2 / Figure 2.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.ad_checkpoint import checkpoint_name
+
+# Name used to tag outputs of weight-bearing ops (matmuls). The BASIC policy
+# saves exactly these.
+SAVE = "weight_op"
+
+
+def dense(x, w, name=SAVE):
+    """x @ w with the output tagged as a saveable for the remat policy."""
+    y = jnp.einsum("...i,io->...o", x, w.astype(x.dtype))
+    return checkpoint_name(y, name)
+
+
+def rms_norm(x, scale, eps=1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    y = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (y * scale.astype(jnp.float32)).astype(dt)
+
+
+def swiglu(x, wi, wg, wo):
+    h = dense(x, wi) * jax.nn.silu(dense(x, wg))
+    return dense(h, wo)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., seq, heads, head_dim); positions: (..., seq) int32."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                     # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., seq, hd/2)
+    sin = jnp.sin(angles)[..., None, :]               # (..., seq, 1, hd/2)
+    cos = jnp.cos(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Initializers
+# ---------------------------------------------------------------------------
+
+
+def trunc_normal(key, shape, stddev):
+    return stddev * jax.random.truncated_normal(key, -2.0, 2.0, shape,
+                                                dtype=jnp.float32)
+
+
+def dense_init(key, d_in, d_out, extra=()):
+    return trunc_normal(key, (*extra, d_in, d_out), stddev=d_in ** -0.5)

@@ -1,0 +1,115 @@
+"""Mixture-of-Experts FFN: top-k router, GShard-style capacity dispatch.
+
+Two dispatch modes:
+
+- ``capacity`` (default, TPU-idiomatic): tokens are bucketed per expert up to a
+  fixed capacity C = ceil(top_k * group / E * capacity_factor); dispatch and
+  combine are one-hot einsums (GShard/Switch). Expert FLOPs scale with top_k,
+  not num_experts, and the expert axis is shardable over the 'model' mesh axis
+  (expert parallelism); XLA lowers the resharding to an all-to-all.
+- ``dense``: every expert computes every token, weighted combine. Exact
+  (no token dropping), O(E) FLOPs — only sensible for tiny smoke/parity tests.
+
+Arctic's parallel dense-residual FFN is supported via ``dense_residual``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import layers as L
+
+
+def init_moe_params(key, cfg: ArchConfig, extra=()):
+    m = cfg.moe
+    kr, ki, kg, ko, kd = jax.random.split(key, 5)
+    E = m.num_experts
+    p = {
+        "router": L.dense_init(kr, cfg.d_model, E, extra),
+        "wi": L.dense_init(ki, cfg.d_model, cfg.d_ff, (*extra, E)),
+        "wg": L.dense_init(kg, cfg.d_model, cfg.d_ff, (*extra, E)),
+        "wo": L.dense_init(ko, cfg.d_ff, cfg.d_model, (*extra, E)),
+    }
+    if m.dense_residual:
+        k1, k2, k3 = jax.random.split(kd, 3)
+        p["dense_wi"] = L.dense_init(k1, cfg.d_model, cfg.d_ff, extra)
+        p["dense_wg"] = L.dense_init(k2, cfg.d_model, cfg.d_ff, extra)
+        p["dense_wo"] = L.dense_init(k3, cfg.d_ff, cfg.d_model, extra)
+    return p
+
+
+def _router(p, cfg, x):
+    """Returns (top_p, top_idx, aux_loss). x: (..., d)."""
+    m = cfg.moe
+    logits = jnp.einsum("...d,de->...e", x, p["router"].astype(x.dtype))
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    top_p, top_idx = jax.lax.top_k(probs, m.top_k)
+    top_p = top_p / jnp.sum(top_p, axis=-1, keepdims=True)
+    # load-balance loss: E * sum_e (token fraction to e) * (mean prob of e)
+    onehot = jax.nn.one_hot(top_idx, m.num_experts, dtype=probs.dtype)
+    f = jnp.mean(jnp.sum(onehot, axis=-2), axis=tuple(range(onehot.ndim - 2)))
+    pbar = jnp.mean(probs, axis=tuple(range(probs.ndim - 1)))
+    aux = m.load_balance_coef * m.num_experts * jnp.sum(f / m.top_k * pbar)
+    return top_p, top_idx, onehot, aux
+
+
+def _dense_dispatch(p, cfg, x, top_p, onehot):
+    combine = jnp.einsum("bsk,bske->bse", top_p.astype(x.dtype),
+                         onehot.astype(x.dtype))
+    h = jnp.einsum("bsd,edf->ebsf", x, p["wi"].astype(x.dtype))
+    g = jnp.einsum("bsd,edf->ebsf", x, p["wg"].astype(x.dtype))
+    h = h * jax.nn.silu(g)
+    return jnp.einsum("ebsf,efd,bse->bsd", h, p["wo"].astype(x.dtype), combine)
+
+
+def _capacity_dispatch(p, cfg, x, top_p, top_idx, group: int,
+                       capacity_factor: float):
+    """GShard one-hot capacity dispatch. x: (b, s, d)."""
+    m = cfg.moe
+    b, s, d = x.shape
+    E, k = m.num_experts, m.top_k
+    assert (b * s) % group == 0, (b, s, group)
+    n = (b * s) // group
+    xg = x.reshape(n, group, d)
+    tp = top_p.reshape(n, group, k)
+    ti = top_idx.reshape(n, group, k)
+
+    cap = int(max(k, round(k * group / E * capacity_factor)))
+    cap = min(cap, group)
+
+    # position of each (token, choice) within its expert bucket
+    choice_oh = jax.nn.one_hot(ti, E, dtype=jnp.int32)        # (n, g, k, E)
+    flat = choice_oh.reshape(n, group * k, E)                  # choices in order
+    pos = jnp.cumsum(flat, axis=1) - 1                         # (n, g*k, E)
+    pos = jnp.sum(pos * flat, axis=-1).reshape(n, group, k)    # (n, g, k)
+    keep = pos < cap
+
+    disp = (jax.nn.one_hot(ti, E, dtype=x.dtype)[..., None]
+            * jax.nn.one_hot(pos, cap, dtype=x.dtype)[..., None, :])  # (n,g,k,E,C)
+    disp = disp * keep[..., None, None].astype(x.dtype)
+    combine = jnp.einsum("ngk,ngkec->ngec", tp.astype(x.dtype), disp)
+    dispatch = jnp.sum(disp, axis=2)                           # (n, g, E, C)
+
+    ein = jnp.einsum("ngec,ngd->necd", dispatch, xg)           # (n, E, C, d)
+    h = jnp.einsum("necd,edf->necf", ein, p["wi"].astype(x.dtype))
+    g_ = jnp.einsum("necd,edf->necf", ein, p["wg"].astype(x.dtype))
+    eout = jnp.einsum("necf,efd->necd", h * jax.nn.silu(g_),
+                      p["wo"].astype(x.dtype))
+    out = jnp.einsum("ngec,necd->ngd", combine, eout)
+    return out.reshape(b, s, d)
+
+
+def moe_ffn(p, cfg: ArchConfig, x, *, dispatch: str = "capacity",
+            group: int = 4096, capacity_factor: float = 1.25):
+    """x: (b, s, d) -> (out, aux_loss scalar)."""
+    top_p, top_idx, onehot, aux = _router(p, cfg, x)
+    if dispatch == "dense":
+        out = _dense_dispatch(p, cfg, x, top_p, onehot)
+    else:
+        g = min(group, x.shape[0] * x.shape[1])
+        out = _capacity_dispatch(p, cfg, x, top_p, top_idx, g, capacity_factor)
+    out = L.checkpoint_name(out, L.SAVE)
+    if cfg.moe.dense_residual:
+        out = out + L.swiglu(x, p["dense_wi"], p["dense_wg"], p["dense_wo"])
+    return out, aux

@@ -1,0 +1,207 @@
+"""Mamba2 (SSD — state-space duality) mixer block [arXiv:2405.21060].
+
+Chunked SSD algorithm (paper Listing 1) adapted to JAX: intra-chunk quadratic
+attention-like term + inter-chunk linear recurrence via ``jax.lax.scan``; the
+projections are split (z, x, B, C, dt) so each is independently shardable.
+
+Decode is the O(1) recurrent form: state (b, heads, head_dim, N) updated per
+token; a depthwise-conv ring state of width conv_width-1 feeds the (x, B, C)
+convolution.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import layers as L
+
+
+class SSMCache(NamedTuple):
+    ssm: jax.Array        # (b, heads, head_dim, N) f32
+    conv: jax.Array       # (b, conv_width-1, d_conv) rolling window of xBC
+
+
+def dims(cfg: ArchConfig):
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    nheads = d_in // s.head_dim
+    d_conv = d_in + 2 * s.state_dim
+    return d_in, nheads, d_conv
+
+
+def init_ssm_params(key, cfg: ArchConfig, extra=()):
+    s = cfg.ssm
+    d = cfg.d_model
+    d_in, nheads, d_conv = dims(cfg)
+    ks = jax.random.split(key, 7)
+    return {
+        "in_z": L.dense_init(ks[0], d, d_in, extra),
+        "in_x": L.dense_init(ks[1], d, d_in, extra),
+        "in_B": L.dense_init(ks[2], d, s.state_dim, extra),
+        "in_C": L.dense_init(ks[3], d, s.state_dim, extra),
+        "in_dt": L.dense_init(ks[4], d, nheads, extra),
+        "conv_w": L.trunc_normal(ks[5], (*extra, s.conv_width, d_conv),
+                                 stddev=s.conv_width ** -0.5),
+        "dt_bias": jnp.zeros((*extra, nheads), jnp.float32),
+        # A in (-exp range); A_log init ~ U[ln 1, ln 16]
+        "A_log": jnp.broadcast_to(
+            jnp.log(jnp.linspace(1.0, 16.0, nheads, dtype=jnp.float32)),
+            (*extra, nheads)).copy(),
+        "D": jnp.ones((*extra, nheads), jnp.float32),
+        "out": L.dense_init(ks[6], d_in, d, extra),
+    }
+
+
+def _segsum(a):
+    """a: (..., t) -> (..., t, t) lower-triangular pairwise cumulative sums:
+    out[..., i, j] = sum_{k=j+1..i} a[..., k] for i >= j, -inf otherwise."""
+    t = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    out = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((t, t), bool))
+    return jnp.where(mask, out, -jnp.inf)
+
+
+def ssd_chunked(x, dt, A, Bm, Cm, chunk: int, init_state=None):
+    """Chunked SSD scan.
+
+    x:  (b, l, h, p)   inputs (per head)
+    dt: (b, l, h)      softplus'd step sizes
+    A:  (h,)           negative decay rates
+    Bm: (b, l, n)      input matrix (single group, broadcast over heads)
+    Cm: (b, l, n)      output matrix
+    Returns (y (b, l, h, p), final_state (b, h, p, n)).
+    """
+    b, l, h, p = x.shape
+    n = Bm.shape[-1]
+    assert l % chunk == 0, (l, chunk)
+    nc = l // chunk
+    f32 = jnp.float32
+
+    xc = (x.astype(f32) * dt.astype(f32)[..., None]).reshape(b, nc, chunk, h, p)
+    da = (dt.astype(f32) * A.astype(f32)).reshape(b, nc, chunk, h)
+    da = jnp.moveaxis(da, -1, 1)                        # (b, h, nc, chunk)
+    Bc = Bm.astype(f32).reshape(b, nc, chunk, n)
+    Cc = Cm.astype(f32).reshape(b, nc, chunk, n)
+
+    # 1) intra-chunk (quadratic, "attention-like") term
+    Lmat = jnp.exp(_segsum(da))                         # (b, h, nc, c, c)
+    y_diag = jnp.einsum("bcln,bcsn,bhcls,bcshp->bclhp", Cc, Bc, Lmat, xc)
+
+    # 2) per-chunk states (contribution of each chunk to the carried state)
+    da_cum = jnp.cumsum(da, axis=-1)                    # (b, h, nc, c)
+    decay_to_end = jnp.exp(da_cum[..., -1:] - da_cum)   # (b, h, nc, c)
+    states = jnp.einsum("bcln,bhcl,bclhp->bchpn", Bc, decay_to_end, xc)
+
+    # 3) inter-chunk recurrence
+    chunk_decay = jnp.exp(da_cum[..., -1])              # (b, h, nc)
+    init = (jnp.zeros((b, h, p, n), f32) if init_state is None
+            else init_state.astype(f32))
+
+    def step(carry, inp):
+        s_new, dec = inp                                # (b,h,p,n), (b,h)
+        out = carry
+        carry = carry * dec[..., None, None] + s_new
+        return carry, out
+
+    final, states_in = jax.lax.scan(
+        step, init,
+        (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, -1, 0)))
+    states_in = jnp.moveaxis(states_in, 0, 1)           # (b, nc, h, p, n)
+
+    # 4) inter-chunk output: decayed initial-state contribution
+    state_decay = jnp.exp(da_cum)                       # (b, h, nc, c)
+    y_off = jnp.einsum("bcln,bchpn,bhcl->bclhp", Cc, states_in, state_decay)
+
+    y = (y_diag + y_off).reshape(b, l, h, p)
+    return y, final
+
+
+def _conv1d(xBC, w, state=None):
+    """Causal depthwise conv. xBC: (b, l, c); w: (cw, c).
+    state: (b, cw-1, c) previous inputs (decode) or None (train: zero-pad)."""
+    cw = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((xBC.shape[0], cw - 1, xBC.shape[2]), xBC.dtype)
+    else:
+        pad = state.astype(xBC.dtype)
+    full = jnp.concatenate([pad, xBC], axis=1)
+    out = sum(full[:, i:i + xBC.shape[1], :] * w[i][None, None, :].astype(xBC.dtype)
+              for i in range(cw))
+    return out, full[:, -(cw - 1):, :] if cw > 1 else pad
+
+
+def mamba_mixer(p, cfg: ArchConfig, x, cache: SSMCache = None):
+    """Full-sequence Mamba2 mixer. x: (b, l, d) -> (y, new_cache or None)."""
+    s = cfg.ssm
+    d_in, nheads, _ = dims(cfg)
+    b, l, _ = x.shape
+
+    z = L.dense(x, p["in_z"])
+    xi = L.dense(x, p["in_x"])
+    Bm = L.dense(x, p["in_B"])
+    Cm = L.dense(x, p["in_C"])
+    dt = jax.nn.softplus(
+        L.dense(x, p["in_dt"]).astype(jnp.float32) + p["dt_bias"])
+
+    xBC = jnp.concatenate([xi, Bm, Cm], axis=-1)
+    conv_state = None if cache is None else cache.conv
+    xBC, new_conv = _conv1d(xBC, p["conv_w"], conv_state)
+    xBC = jax.nn.silu(xBC)
+    xi, Bm, Cm = jnp.split(xBC, [d_in, d_in + s.state_dim], axis=-1)
+
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    xh = xi.reshape(b, l, nheads, s.head_dim)
+    init_state = None if cache is None else cache.ssm
+    y, final = ssd_chunked(xh, dt, A, Bm, Cm, min(s.chunk, l), init_state)
+    y = y + p["D"].astype(jnp.float32)[None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(b, l, d_in).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    out = L.dense(y, p["out"])
+    new_cache = SSMCache(ssm=final, conv=new_conv)
+    return out, new_cache
+
+
+def init_ssm_cache(cfg: ArchConfig, batch: int, dtype=jnp.bfloat16) -> SSMCache:
+    s = cfg.ssm
+    d_in, nheads, d_conv = dims(cfg)
+    return SSMCache(
+        ssm=jnp.zeros((batch, nheads, s.head_dim, s.state_dim), jnp.float32),
+        conv=jnp.zeros((batch, s.conv_width - 1, d_conv), dtype),
+    )
+
+
+def mamba_decode(p, cfg: ArchConfig, x, cache: SSMCache):
+    """Single-token recurrent step. x: (b, 1, d)."""
+    s = cfg.ssm
+    d_in, nheads, _ = dims(cfg)
+    b = x.shape[0]
+
+    z = L.dense(x, p["in_z"])
+    xi = L.dense(x, p["in_x"])
+    Bm = L.dense(x, p["in_B"])
+    Cm = L.dense(x, p["in_C"])
+    dt = jax.nn.softplus(
+        L.dense(x, p["in_dt"]).astype(jnp.float32) + p["dt_bias"])  # (b,1,h)
+
+    xBC = jnp.concatenate([xi, Bm, Cm], axis=-1)
+    xBC, new_conv = _conv1d(xBC, p["conv_w"], cache.conv)
+    xBC = jax.nn.silu(xBC)
+    xi, Bm, Cm = jnp.split(xBC, [d_in, d_in + s.state_dim], axis=-1)
+
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))                  # (h,)
+    dt0 = dt[:, 0, :]                                             # (b, h)
+    decay = jnp.exp(dt0 * A)                                      # (b, h)
+    xh = xi.reshape(b, nheads, s.head_dim).astype(jnp.float32)
+    dx = dt0[..., None] * xh                                      # (b, h, p)
+    state = (cache.ssm * decay[..., None, None]
+             + dx[..., None] * Bm[:, 0, None, None, :].astype(jnp.float32))
+    y = jnp.einsum("bhpn,bn->bhp", state, Cm[:, 0].astype(jnp.float32))
+    y = y + p["D"].astype(jnp.float32)[None, :, None] * xh
+    y = y.reshape(b, 1, d_in).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    out = L.dense(y, p["out"])
+    return out, SSMCache(ssm=state, conv=new_conv)

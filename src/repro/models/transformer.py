@@ -1,0 +1,314 @@
+"""Model assembly: periodic layer stacks scanned over depth.
+
+Layers repeat with a *period* = lcm(attn interleave, MoE interleave) — e.g.
+Jamba's period is 8 (7 mamba + 1 attn, MoE on odd positions). Parameters for
+each position in the period are stacked on a leading (n_layers // period) axis
+and the whole stack is applied with one ``jax.lax.scan``, so HLO size is
+depth-independent (required for 80-layer dry-runs to compile quickly).
+
+Entry points:
+  init_params(cfg, rng)                  -> params pytree
+  lm_loss(cfg, params, batch)            -> (loss, metrics)   [train_4k]
+  prefill(cfg, params, batch)            -> (logits, caches)  [prefill_32k]
+  decode_step(cfg, params, token, pos, caches) -> (logits, caches) [decode]
+  encode(cfg, params, batch)             -> pooled (b, d)     [dual-encoder tower]
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import attention as attn_lib
+from repro.models import layers as L
+from repro.models import moe as moe_lib
+from repro.models import ssm as ssm_lib
+
+
+def period_of(cfg: ArchConfig) -> int:
+    p = cfg.attn_every if cfg.family == "hybrid" else 1
+    if cfg.moe is not None:
+        p = math.lcm(p, cfg.moe.every)
+    assert cfg.n_layers % p == 0, (cfg.name, cfg.n_layers, p)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+
+def _init_block(key, cfg: ArchConfig, kind: str, use_moe: bool, extra):
+    k1, k2 = jax.random.split(key)
+    d = cfg.d_model
+    p = {"ln1": jnp.ones((*extra, d), jnp.float32)}
+    if kind == "attn":
+        p["attn"] = attn_lib.init_attn_params(k1, cfg, extra)
+    else:
+        p["mamba"] = ssm_lib.init_ssm_params(k1, cfg, extra)
+    if cfg.family != "ssm":  # mamba2 blocks have no separate FFN
+        p["ln2"] = jnp.ones((*extra, d), jnp.float32)
+        if use_moe:
+            p["moe"] = moe_lib.init_moe_params(k2, cfg, extra)
+        else:
+            ka, kb, kc = jax.random.split(k2, 3)
+            p["ffn"] = {
+                "wi": L.dense_init(ka, d, cfg.d_ff, extra),
+                "wg": L.dense_init(kb, d, cfg.d_ff, extra),
+                "wo": L.dense_init(kc, cfg.d_ff, d, extra),
+            }
+    return p
+
+
+def init_params(cfg: ArchConfig, rng):
+    period = period_of(cfg)
+    n_periods = cfg.n_layers // period
+    kinds = cfg.layer_kinds()[:period]
+    moe_mask = cfg.moe_layer_mask()[:period]
+    keys = jax.random.split(rng, period + 3)
+
+    blocks = []
+    for i in range(period):
+        blocks.append(_init_block(keys[i], cfg, kinds[i], moe_mask[i],
+                                  extra=(n_periods,)))
+    params = {
+        "blocks": blocks,
+        "final_norm": jnp.ones((cfg.d_model,), jnp.float32),
+    }
+    if cfg.vocab > 0 and cfg.frontend != "audio":
+        params["embed"] = L.trunc_normal(keys[-1], (cfg.vocab, cfg.d_model),
+                                         cfg.d_model ** -0.5)
+    if cfg.vocab > 0 and not cfg.tie_embeddings:
+        params["lm_head"] = L.dense_init(keys[-2], cfg.d_model, cfg.vocab)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+
+def _apply_block(cfg, kind, use_moe, p, h, positions, cache, decode, moe_args,
+                 collect_cache_len=None):
+    aux = jnp.zeros((), jnp.float32)
+    if kind == "attn":
+        hn = L.rms_norm(h, p["ln1"], cfg.norm_eps)
+        if decode:
+            mix, new_cache = attn_lib.decode_attention(
+                p["attn"], cfg, hn, cache, positions)
+        elif collect_cache_len is not None:
+            mix, (k, v) = attn_lib.attention(p["attn"], cfg, hn, positions,
+                                             return_kv=True)
+            new_cache = attn_lib.cache_from_prefill(cfg, k, v,
+                                                    collect_cache_len)
+        else:
+            mix = attn_lib.attention(p["attn"], cfg, hn, positions,
+                                     impl=cfg.attn_impl, block=cfg.attn_block)
+            new_cache = None
+    else:
+        hn = L.rms_norm(h, p["ln1"], cfg.norm_eps)
+        if decode:
+            mix, new_cache = ssm_lib.mamba_decode(p["mamba"], cfg, hn, cache)
+        else:
+            mix, new_cache = ssm_lib.mamba_mixer(p["mamba"], cfg, hn, cache)
+    h = h + mix
+    if cfg.family != "ssm":
+        hn = L.rms_norm(h, p["ln2"], cfg.norm_eps)
+        if use_moe:
+            out, aux = moe_lib.moe_ffn(p["moe"], cfg, hn, **moe_args)
+        else:
+            out = L.swiglu(hn, p["ffn"]["wi"], p["ffn"]["wg"], p["ffn"]["wo"])
+        h = h + out
+    return h, new_cache, aux
+
+
+def forward(cfg: ArchConfig, params, h, positions, caches=None, decode=False,
+            remat_policy=None, moe_args=None, collect_cache_len=None,
+            unroll: int = 1):
+    """Run the full stack. h: (b, s, d). Returns (h, new_caches, aux_loss).
+
+    caches: list (len=period) of stacked KV/SSM caches or None.
+    remat_policy: optional jax.checkpoint policy applied per period-step.
+    collect_cache_len: if set (prefill), build decode caches of this length.
+    """
+    period = period_of(cfg)
+    kinds = cfg.layer_kinds()[:period]
+    moe_mask = cfg.moe_layer_mask()[:period]
+    moe_args = moe_args or {}
+
+    def period_step(h, sliced):
+        blocks, caches_in = sliced
+        new_caches, aux_total = [], jnp.zeros((), jnp.float32)
+        for i in range(period):
+            c = None if caches_in is None else caches_in[i]
+            h, nc, aux = _apply_block(cfg, kinds[i], moe_mask[i], blocks[i], h,
+                                      positions, c, decode, moe_args,
+                                      collect_cache_len)
+            new_caches.append(nc)
+            aux_total = aux_total + aux
+        return h, (new_caches, aux_total)
+
+    if remat_policy is not None:
+        period_step = jax.checkpoint(period_step, policy=remat_policy)
+
+    def scan_body(h, sliced):
+        return period_step(h, sliced)
+
+    xs = (params["blocks"], caches)
+    if caches is None:
+        # replace None with a per-step dummy so scan sees a consistent pytree
+        xs = (params["blocks"],
+              [jnp.zeros((cfg.n_layers // period,), jnp.float32)] * period)
+
+        def scan_body(h, sliced):  # noqa: F811
+            blocks, _ = sliced
+            return period_step(h, (blocks, None))
+
+    h, (new_caches, aux) = jax.lax.scan(scan_body, h, xs, unroll=unroll)
+    if caches is None and collect_cache_len is None and not decode:
+        new_caches = None
+    return h, new_caches, jnp.sum(aux)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / heads
+# ---------------------------------------------------------------------------
+
+
+def embed_inputs(cfg: ArchConfig, params, batch, dtype):
+    """Returns (h (b, s, d), positions (b, s), text_mask (b, s) or None)."""
+    if cfg.frontend == "audio" or (cfg.frontend == "vision"
+                                   and "tokens" not in batch):
+        key = "embeddings" if cfg.frontend == "audio" else "patch_embeddings"
+        h = batch[key].astype(dtype)                    # (b, s, d) stub frontend
+        b, s, _ = h.shape
+        pos = jnp.broadcast_to(jnp.arange(s), (b, s))
+        return h, pos, None
+    tok = batch["tokens"]
+    emb = jnp.take(params["embed"], tok, axis=0).astype(dtype)
+    if cfg.frontend == "vision" and "patch_embeddings" in batch:
+        patches = batch["patch_embeddings"].astype(dtype)  # (b, P, d)
+        h = jnp.concatenate([patches, emb], axis=1)
+        b, s, _ = h.shape
+        pos = jnp.broadcast_to(jnp.arange(s), (b, s))
+        text_mask = jnp.concatenate(
+            [jnp.zeros((b, patches.shape[1]), bool),
+             jnp.ones((b, tok.shape[1]), bool)], axis=1)
+        return h, pos, text_mask
+    b, s = tok.shape
+    pos = jnp.broadcast_to(jnp.arange(s), (b, s))
+    return emb, pos, None
+
+
+def logits_from_h(cfg: ArchConfig, params, h):
+    if cfg.tie_embeddings:
+        w = params["embed"].astype(h.dtype)
+        return jnp.einsum("bsd,vd->bsv", h, w)
+    return L.dense(h, params["lm_head"])
+
+
+# ---------------------------------------------------------------------------
+# Step functions
+# ---------------------------------------------------------------------------
+
+
+def lm_loss(cfg: ArchConfig, params, batch, *, dtype=jnp.float32,
+            remat_policy=None, moe_args=None, unroll: int = 1):
+    """Training loss.
+
+    decoder families: next-token CE over `tokens` (+`labels` if given).
+    encoder (hubert): masked-frame CE over `targets` where `mask` is set.
+    vlm: next-token CE on the text segment only.
+    """
+    h, pos, text_mask = embed_inputs(cfg, params, batch, dtype)
+    h, _, aux = forward(cfg, params, h, pos, remat_policy=remat_policy,
+                        moe_args=moe_args, unroll=unroll)
+    h = L.rms_norm(h, params["final_norm"], cfg.norm_eps)
+
+    if cfg.family == "encoder":
+        logits = logits_from_h(cfg, params, h).astype(jnp.float32)
+        targets = batch["targets"]                       # (b, s)
+        mask = batch["mask"].astype(jnp.float32)         # (b, s)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+        loss = jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    else:
+        logits = logits_from_h(cfg, params, h).astype(jnp.float32)
+        if text_mask is not None:                        # vlm: text tail only
+            P = batch["patch_embeddings"].shape[1]
+            logits = logits[:, P:, :]
+        tokens = batch["tokens"]
+        logp = jax.nn.log_softmax(logits[:, :-1], axis=-1)
+        tgt = tokens[:, 1:]
+        nll = -jnp.take_along_axis(logp, tgt[..., None], axis=-1)[..., 0]
+        mask = batch.get("loss_mask")
+        if mask is not None:
+            m = mask[:, 1:].astype(jnp.float32)
+            loss = jnp.sum(nll * m) / jnp.maximum(jnp.sum(m), 1.0)
+        else:
+            loss = jnp.mean(nll)
+    return loss + aux, {"xent": loss, "aux": aux}
+
+
+def init_caches(cfg: ArchConfig, batch: int, seq_len: int, dtype=jnp.bfloat16):
+    """Stacked per-period-position caches for decode."""
+    period = period_of(cfg)
+    n_periods = cfg.n_layers // period
+    kinds = cfg.layer_kinds()[:period]
+
+    def stack(make):
+        one = make()
+        return jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (n_periods, *x.shape)).copy(), one)
+
+    caches = []
+    for k in kinds:
+        if k == "attn":
+            caches.append(stack(
+                lambda: attn_lib.init_kv_cache(cfg, batch, seq_len, dtype)))
+        else:
+            caches.append(stack(
+                lambda: ssm_lib.init_ssm_cache(cfg, batch, dtype)))
+    return caches
+
+
+def prefill(cfg: ArchConfig, params, batch, *, dtype=jnp.bfloat16,
+            moe_args=None, collect_cache_len=None, unroll: int = 1):
+    """Full forward emitting last-position logits; with ``collect_cache_len``
+    also builds the decode caches (serving prefill). Returns logits or
+    (logits, caches)."""
+    h, pos, _ = embed_inputs(cfg, params, batch, dtype)
+    h, caches, _ = forward(cfg, params, h, pos, moe_args=moe_args,
+                           collect_cache_len=collect_cache_len, unroll=unroll)
+    h = L.rms_norm(h, params["final_norm"], cfg.norm_eps)
+    out = (logits_from_h(cfg, params, h[:, -1:, :]) if cfg.vocab > 0
+           else h[:, -1:, :])
+    if collect_cache_len is not None:
+        return out, caches
+    return out
+
+
+def decode_step(cfg: ArchConfig, params, token, pos, caches, *,
+                dtype=jnp.bfloat16, moe_args=None, unroll: int = 1):
+    """One decode step. token: (b, 1) int32; pos: scalar int32."""
+    h = jnp.take(params["embed"], token, axis=0).astype(dtype)
+    h, new_caches, _ = forward(cfg, params, h, pos, caches=caches, decode=True,
+                               moe_args=moe_args, unroll=unroll)
+    h = L.rms_norm(h, params["final_norm"], cfg.norm_eps)
+    return logits_from_h(cfg, params, h), new_caches
+
+
+def encode(cfg: ArchConfig, params, batch, *, dtype=jnp.float32,
+           remat_policy=None):
+    """Pooled representation for dual-encoder towers. Returns (b, d_model)."""
+    h, pos, _ = embed_inputs(cfg, params, batch, dtype)
+    h, _, _ = forward(cfg, params, h, pos, remat_policy=remat_policy)
+    h = L.rms_norm(h, params["final_norm"], cfg.norm_eps)
+    mask = batch.get("attn_mask")
+    if mask is not None:
+        m = mask.astype(h.dtype)[..., None]
+        return jnp.sum(h * m, axis=1) / jnp.maximum(jnp.sum(m, axis=1), 1.0)
+    return jnp.mean(h, axis=1)

@@ -1,0 +1,2 @@
+from repro.optim.adafactorw import AdaFactorW, apply_updates  # noqa: F401
+from repro.optim.schedules import warmup_cosine, warmup_linear  # noqa: F401

@@ -1,0 +1,160 @@
+"""AdaFactorW (paper App. B): AdaFactor's factored second moment +
+AdamW's decoupled weight decay + bf16-stored / f32-used first moment.
+
+Pure-JAX optimizer in the (init, update) style:
+
+    state = init(params)
+    updates, state = update(grads, state, params, lr)
+    params = apply_updates(params, updates)
+
+Second moments of matrices (ndim >= 2, both trailing dims >= factored_threshold)
+are stored as row/col running means (AdaFactor); smaller tensors keep a full
+second moment. The first moment is stored in bfloat16 and cast to f32 before
+use (paper: "we can *store* these moments in bfloat16, [but] convert them into
+float32 prior to computing our weight updates").
+
+``update_from_microbatches`` wires in core/moment_accum.py: the microbatch
+gradient stream is folded straight into the moment slots (paper §4.2) without
+ever allocating the averaged gradient ḡ. (Factored v2 rows/cols are linear in
+g², so the E[c²] accumulation is exact for them.)
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import moment_accum as ma
+
+
+class AdaFactorWState(NamedTuple):
+    step: jax.Array
+    m: dict        # first moment, bf16 leaves
+    v_row: dict    # factored second-moment rows (or full v for small leaves)
+    v_col: dict    # factored cols (zeros placeholder for unfactored leaves)
+
+
+def _factored(x, threshold):
+    return x.ndim >= 2 and x.shape[-1] >= threshold and x.shape[-2] >= threshold
+
+
+class AdaFactorW:
+    def __init__(self, beta1=0.9, beta2=0.99, eps=1e-30, weight_decay=0.0,
+                 clip_threshold=1.0, factored_threshold=128,
+                 store_m_bf16=True):
+        self.beta1, self.beta2, self.eps = beta1, beta2, eps
+        self.weight_decay = weight_decay
+        self.clip_threshold = clip_threshold
+        self.factored_threshold = factored_threshold
+        self.store_m_bf16 = store_m_bf16
+
+    # -- state ------------------------------------------------------------
+    def init(self, params):
+        mdt = jnp.bfloat16 if self.store_m_bf16 else jnp.float32
+        m = jax.tree.map(lambda p: jnp.zeros_like(p, dtype=mdt), params)
+
+        def vrow(p):
+            if _factored(p, self.factored_threshold):
+                return jnp.zeros(p.shape[:-1], jnp.float32)
+            return jnp.zeros_like(p, dtype=jnp.float32)
+
+        def vcol(p):
+            if _factored(p, self.factored_threshold):
+                return jnp.zeros((*p.shape[:-2], p.shape[-1]), jnp.float32)
+            return jnp.zeros((), jnp.float32)
+
+        return AdaFactorWState(step=jnp.zeros((), jnp.int32),
+                               m=jax.tree.map(lambda x: x, m),
+                               v_row=jax.tree.map(vrow, params),
+                               v_col=jax.tree.map(vcol, params))
+
+    # -- core update ------------------------------------------------------
+    def _precondition(self, g, vr, vc, p):
+        if _factored(p, self.factored_threshold):
+            r = vr[..., None]                                # (..., rows, 1)
+            c = vc[..., None, :]                             # (..., 1, cols)
+            denom = jnp.sqrt(r * c / jnp.maximum(
+                jnp.mean(vr, axis=-1, keepdims=True)[..., None], self.eps))
+            return g / jnp.maximum(denom, jnp.sqrt(self.eps))
+        return g / jnp.sqrt(vr + self.eps)
+
+    def _new_v(self, g, vr, vc, p):
+        g2 = g.astype(jnp.float32) ** 2 + self.eps
+        if _factored(p, self.factored_threshold):
+            nvr = self.beta2 * vr + (1 - self.beta2) * jnp.mean(g2, axis=-1)
+            nvc = self.beta2 * vc + (1 - self.beta2) * jnp.mean(g2, axis=-2)
+            return nvr, nvc
+        return self.beta2 * vr + (1 - self.beta2) * g2, vc
+
+    def update(self, grads, state: AdaFactorWState, params, lr):
+        step = state.step + 1
+
+        def upd(g, m, vr, vc, p):
+            g = g.astype(jnp.float32)
+            nvr, nvc = self._new_v(g, vr, vc, p)
+            # f32 math on the bf16-stored first moment (paper App. B)
+            nm = self.beta1 * m.astype(jnp.float32) + (1 - self.beta1) * g
+            u = self._precondition(nm, nvr, nvc, p)
+            # RMS update clipping (AdaFactor)
+            rms = jnp.sqrt(jnp.mean(u * u) + 1e-30)
+            u = u / jnp.maximum(1.0, rms / self.clip_threshold)
+            u = u + self.weight_decay * p.astype(jnp.float32)
+            return (-lr * u).astype(p.dtype), nm.astype(m.dtype), nvr, nvc
+
+        flat = jax.tree.map(upd, grads, state.m, state.v_row, state.v_col,
+                            params)
+        updates = jax.tree.map(lambda t: t[0], flat,
+                               is_leaf=lambda t: isinstance(t, tuple))
+        nm = jax.tree.map(lambda t: t[1], flat,
+                          is_leaf=lambda t: isinstance(t, tuple))
+        nvr = jax.tree.map(lambda t: t[2], flat,
+                           is_leaf=lambda t: isinstance(t, tuple))
+        nvc = jax.tree.map(lambda t: t[3], flat,
+                           is_leaf=lambda t: isinstance(t, tuple))
+        return updates, AdaFactorWState(step=step, m=nm, v_row=nvr, v_col=nvc)
+
+    # -- paper §4.2: fold a microbatch gradient stream into the slots ------
+    def update_from_microbatches(self, c_stream, state: AdaFactorWState,
+                                 params, lr, var_hat=None):
+        """c_stream: leaves (K, ...) — the Algorithm-1 'Yields' stream. The
+        first moment uses the exact K-step decomposition; the second moment
+        uses the E[c²]−VarHat estimator (exact for factored rows/cols up to
+        the same variance correction)."""
+        step = state.step + 1
+        m32 = jax.tree.map(lambda m: m.astype(jnp.float32), state.m)
+        nm = ma.accumulate_first_moment(m32, c_stream, self.beta1)
+
+        def v_update(c, vr, vc, p, vh):
+            g2 = jnp.mean(c.astype(jnp.float32) ** 2, axis=0) + self.eps
+            g2 = jnp.maximum(g2 - vh, self.eps)   # paper Eq. 4 correction
+            if _factored(p, self.factored_threshold):
+                nvr = self.beta2 * vr + (1 - self.beta2) * jnp.mean(g2, -1)
+                nvc = self.beta2 * vc + (1 - self.beta2) * jnp.mean(g2, -2)
+                return nvr, nvc
+            return self.beta2 * vr + (1 - self.beta2) * g2, vc
+
+        vh_tree = var_hat if var_hat is not None else jax.tree.map(
+            lambda _: jnp.zeros((), jnp.float32), params)
+        flat = jax.tree.map(v_update, c_stream, state.v_row, state.v_col,
+                            params, vh_tree)
+        nvr = jax.tree.map(lambda t: t[0], flat,
+                           is_leaf=lambda t: isinstance(t, tuple))
+        nvc = jax.tree.map(lambda t: t[1], flat,
+                           is_leaf=lambda t: isinstance(t, tuple))
+
+        def upd(m, vr, vc, p):
+            u = self._precondition(m, vr, vc, p)
+            rms = jnp.sqrt(jnp.mean(u * u) + 1e-30)
+            u = u / jnp.maximum(1.0, rms / self.clip_threshold)
+            u = u + self.weight_decay * p.astype(jnp.float32)
+            return (-lr * u).astype(p.dtype)
+
+        updates = jax.tree.map(upd, nm, nvr, nvc, params)
+        mdt = jnp.bfloat16 if self.store_m_bf16 else jnp.float32
+        nm = jax.tree.map(lambda x: x.astype(mdt), nm)
+        return updates, AdaFactorWState(step=step, m=nm, v_row=nvr, v_col=nvc)
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: p + u, params, updates)

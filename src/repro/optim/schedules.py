@@ -1,0 +1,26 @@
+"""LR schedules (paper Table 6: linear warmup -> cosine or linear decay)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def warmup_cosine(max_lr, min_lr, warmup_steps, total_steps):
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = max_lr * step / jnp.maximum(warmup_steps, 1)
+        t = (step - warmup_steps) / jnp.maximum(total_steps - warmup_steps, 1)
+        t = jnp.clip(t, 0.0, 1.0)
+        cos = min_lr + 0.5 * (max_lr - min_lr) * (1 + jnp.cos(jnp.pi * t))
+        return jnp.where(step < warmup_steps, warm, cos)
+    return lr
+
+
+def warmup_linear(max_lr, min_lr, warmup_steps, total_steps):
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = max_lr * step / jnp.maximum(warmup_steps, 1)
+        t = (step - warmup_steps) / jnp.maximum(total_steps - warmup_steps, 1)
+        t = jnp.clip(t, 0.0, 1.0)
+        lin = max_lr + (min_lr - max_lr) * t
+        return jnp.where(step < warmup_steps, warm, lin)
+    return lr

@@ -1,0 +1,85 @@
+"""Batched serving engine: prefill + decode loop over fixed batch slots.
+
+The engine compiles two programs per (batch, cache_len):
+  - ``prefill``: full forward over the (right-padded) prompt batch, building
+    per-layer KV/SSM caches,
+  - ``decode``: one token for every slot, cache updated in place (donated).
+
+Sampling: greedy or temperature. Per-slot EOS stops are tracked host-side;
+finished slots keep decoding pad tokens (masked out of the result) — the
+fixed-shape analog of continuous batching.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models import transformer as tf
+
+
+class Engine:
+    def __init__(self, cfg: ArchConfig, params, *, cache_len: int,
+                 dtype=jnp.float32, moe_args: Optional[dict] = None,
+                 eos_id: int = 3):
+        assert cfg.causal, f"{cfg.name} is encoder-only; no decode step"
+        self.cfg, self.params = cfg, params
+        self.cache_len = cache_len
+        self.dtype = dtype
+        self.moe_args = moe_args or {}
+        self.eos_id = eos_id
+
+        self._prefill = jax.jit(self._prefill_impl)
+        self._decode = jax.jit(self._decode_impl, donate_argnums=(1,))
+
+    # -- compiled bodies ---------------------------------------------------
+    def _prefill_impl(self, params, tokens):
+        batch = {"tokens": tokens}
+        logits, caches = tf.prefill(self.cfg, params, batch, dtype=self.dtype,
+                                    moe_args=self.moe_args,
+                                    collect_cache_len=self.cache_len)
+        return logits[:, 0, :], caches
+
+    def _decode_impl(self, params, caches, token, pos):
+        logits, caches = tf.decode_step(self.cfg, params, token, pos, caches,
+                                        dtype=self.dtype,
+                                        moe_args=self.moe_args)
+        return logits[:, 0, :], caches
+
+    # -- public API ----------------------------------------------------------
+    def generate(self, prompts: np.ndarray, max_new_tokens: int, *,
+                 temperature: float = 0.0, seed: int = 0) -> np.ndarray:
+        """prompts: (b, prompt_len) int32 (right-aligned, no padding support
+        inside the prompt for simplicity). Returns (b, max_new_tokens)."""
+        b, plen = prompts.shape
+        assert plen + max_new_tokens <= self.cache_len or \
+            self.cfg.sliding_window is not None, "cache too small"
+        logits, caches = self._prefill(self.params, jnp.asarray(prompts))
+        rng = np.random.default_rng(seed)
+        out = np.zeros((b, max_new_tokens), np.int32)
+        done = np.zeros((b,), bool)
+        tok = self._sample(logits, temperature, rng)
+        for i in range(max_new_tokens):
+            out[:, i] = np.where(done, 0, tok)
+            done |= (tok == self.eos_id)
+            if done.all():
+                break
+            pos = jnp.asarray(plen + i, jnp.int32)
+            logits, caches = self._decode(self.params, caches,
+                                          jnp.asarray(tok)[:, None], pos)
+            tok = self._sample(logits, temperature, rng)
+        return out
+
+    @staticmethod
+    def _sample(logits, temperature, rng):
+        logits = np.asarray(logits, np.float32)
+        if temperature <= 0:
+            return np.argmax(logits, axis=-1).astype(np.int32)
+        p = jax.nn.softmax(jnp.asarray(logits / temperature), axis=-1)
+        p = np.asarray(p)
+        return np.array([rng.choice(p.shape[-1], p=pi / pi.sum())
+                         for pi in p], np.int32)

@@ -1,0 +1,7 @@
+import os
+import sys
+
+# tests must see the single real CPU device (the 512-device override is
+# dryrun.py-local, never global).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

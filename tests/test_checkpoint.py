@@ -1,0 +1,55 @@
+"""Checkpoint save/restore roundtrip + atomicity."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import checkpoint as ckpt
+from repro.configs import get_arch, smoke_variant
+from repro.models import transformer as tf
+
+
+def test_roundtrip(tmp_path):
+    cfg = smoke_variant(get_arch("qwen3-32b"))
+    params = tf.init_params(cfg, jax.random.key(0))
+    path = ckpt.save(str(tmp_path), 7, params)
+    assert os.path.isdir(path)
+    assert ckpt.latest_step(str(tmp_path)) == 7
+
+    like = jax.eval_shape(lambda: params)
+    restored = ckpt.restore(str(tmp_path), 7, like)
+    for (pa, a), (pb, b) in zip(jax.tree_util.tree_leaves_with_path(params),
+                                jax.tree_util.tree_leaves_with_path(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_restore_rejects_wrong_structure(tmp_path):
+    tree = {"a": jnp.ones((3,)), "b": jnp.zeros((2, 2))}
+    ckpt.save(str(tmp_path), 1, tree)
+    with pytest.raises(AssertionError):
+        ckpt.restore(str(tmp_path), 1, {"a": jnp.ones((3,))})
+    with pytest.raises(AssertionError):
+        ckpt.restore(str(tmp_path), 1,
+                     {"a": jnp.ones((4,)), "b": jnp.zeros((2, 2))})
+
+
+def test_multiple_steps_latest(tmp_path):
+    tree = {"w": jnp.ones((2,))}
+    ckpt.save(str(tmp_path), 1, tree)
+    ckpt.save(str(tmp_path), 10, tree)
+    ckpt.save(str(tmp_path), 5, tree)
+    assert ckpt.latest_step(str(tmp_path)) == 10
+
+
+def test_optimizer_state_roundtrip(tmp_path):
+    from repro.optim import AdaFactorW
+    cfg = smoke_variant(get_arch("llama3.2-1b"))
+    params = tf.init_params(cfg, jax.random.key(1))
+    opt = AdaFactorW()
+    st = opt.init(params)
+    ckpt.save(str(tmp_path), 2, {"params": params, "opt": st})
+    like = jax.eval_shape(lambda: {"params": params, "opt": st})
+    restored = ckpt.restore(str(tmp_path), 2, like)
+    assert restored["opt"].m["final_norm"].dtype == jnp.bfloat16

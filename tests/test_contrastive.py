@@ -1,0 +1,109 @@
+"""Unit + property tests for the contrastive loss (paper §3)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as hst
+
+from repro.core.contrastive import (contrastive_loss, normalized_train_loss,
+                                    similarity)
+
+
+def _unit(rng, b, d):
+    z = rng.standard_normal((b, d)).astype(np.float32)
+    return jnp.asarray(z / np.linalg.norm(z, axis=1, keepdims=True))
+
+
+def test_loss_values_match_manual():
+    rng = np.random.default_rng(0)
+    x, y = _unit(rng, 8, 16), _unit(rng, 8, 16)
+    tau = 0.1
+    loss, m = contrastive_loss(x, y, tau)
+    a = np.asarray(similarity(x, y, tau))
+    row = np.mean([-np.log(np.exp(a[i, i]) / np.exp(a[i]).sum())
+                   for i in range(8)])
+    col = np.mean([-np.log(np.exp(a[j, j]) / np.exp(a[:, j]).sum())
+                   for j in range(8)])
+    np.testing.assert_allclose(float(loss), 0.5 * (row + col), rtol=1e-5)
+
+
+def test_perfect_alignment_minimizes():
+    """Identical, well-separated embeddings -> near-minimal loss."""
+    rng = np.random.default_rng(1)
+    x = _unit(rng, 16, 64)
+    loss_aligned, m = contrastive_loss(x, x, 0.01)
+    loss_random, _ = contrastive_loss(x, _unit(rng, 16, 64), 0.01)
+    assert float(loss_aligned) < 0.05
+    assert float(loss_aligned) < float(loss_random)
+    assert float(m["i2t_top1"]) == 1.0
+
+
+@settings(max_examples=25, deadline=None)
+@given(b=hst.integers(2, 24), d=hst.integers(2, 32),
+       seed=hst.integers(0, 2**30), log_tau=hst.floats(-3.0, 1.0))
+def test_loss_nonnegative_and_symmetric(b, d, seed, log_tau):
+    """Properties: loss >= 0 (diag is one of the LSE terms); swapping the
+    modalities leaves the loss invariant (row<->col exchange)."""
+    rng = np.random.default_rng(seed)
+    x, y = _unit(rng, b, d), _unit(rng, b, d)
+    tau = float(np.exp(log_tau))
+    l1, _ = contrastive_loss(x, y, tau)
+    l2, _ = contrastive_loss(y, x, tau)
+    assert float(l1) >= -1e-5
+    np.testing.assert_allclose(float(l1), float(l2), rtol=1e-5, atol=1e-6)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=hst.integers(0, 2**30))
+def test_permutation_invariance(seed):
+    """Permuting the pair order must not change the loss."""
+    rng = np.random.default_rng(seed)
+    x, y = _unit(rng, 12, 8), _unit(rng, 12, 8)
+    perm = rng.permutation(12)
+    l1, _ = contrastive_loss(x, y, 0.3)
+    l2, _ = contrastive_loss(x[perm], y[perm], 0.3)
+    np.testing.assert_allclose(float(l1), float(l2), rtol=1e-5, atol=1e-6)
+
+
+def test_gradient_row_stochasticity():
+    """Closed-form dA rows/cols sum to 0 for off-batch consistency:
+    sum_ij dA_ij = 0 (softmax mass conservation)."""
+    rng = np.random.default_rng(3)
+    x, y = _unit(rng, 10, 8), _unit(rng, 10, 8)
+
+    def loss_of_a(a):
+        row = jnp.mean(jax.nn.logsumexp(a, 1) - jnp.diagonal(a))
+        col = jnp.mean(jax.nn.logsumexp(a, 0) - jnp.diagonal(a))
+        return 0.5 * (row + col)
+
+    a = similarity(x, y, 0.2)
+    da = jax.grad(loss_of_a)(a)
+    np.testing.assert_allclose(float(jnp.sum(da)), 0.0, atol=1e-6)
+
+
+def test_normalized_loss_matches_paper_def():
+    rng = np.random.default_rng(4)
+    x, y = _unit(rng, 6, 8), _unit(rng, 6, 8)
+    ell = normalized_train_loss(x, y)
+    s = np.asarray(x) @ np.asarray(y).T
+    for i in range(6):
+        expect = -np.exp(s[i, i]) / np.mean(np.exp(s[i]))
+        np.testing.assert_allclose(float(ell[i]), expect, rtol=1e-5)
+
+
+def test_larger_batch_tightens_normalized_estimate():
+    """The 1/B sum in ell_B estimates E_y[exp(.)]; larger B -> lower variance
+    (the mechanism behind Theorem 1)."""
+    rng = np.random.default_rng(5)
+    x = _unit(rng, 1, 16)
+    pool = _unit(rng, 4096, 16)
+    target = float(jnp.mean(jnp.exp(x @ pool.T)))
+    errs = []
+    for b in (8, 64, 512):
+        ests = []
+        for trial in range(30):
+            idx = rng.integers(0, 4096, b)
+            ests.append(float(jnp.mean(jnp.exp(x @ pool[idx].T))))
+        errs.append(np.std(ests))
+    assert errs[0] > errs[1] > errs[2]
+    assert abs(np.mean(ests) - target) < 0.05

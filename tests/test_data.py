@@ -1,0 +1,101 @@
+"""Data substrate: tokenizer properties, synthetic world, pipeline."""
+import numpy as np
+from hypothesis import given, settings, strategies as hst
+
+from repro.data import (Tokenizer, caption_corpus, classification_prompts,
+                        contrastive_batch, host_rng, make_world)
+from repro.data.pipeline import Prefetcher
+
+
+_CACHE = {}
+
+
+def _tok():
+    if "wt" not in _CACHE:
+        rng = np.random.default_rng(0)
+        world = make_world(rng, n_classes=16, n_patches=4, patch_dim=32)
+        _CACHE["wt"] = (world, Tokenizer.train(
+            caption_corpus(world, rng, 500), vocab_size=512))
+    return _CACHE["wt"]
+
+
+def test_tokenizer_vocab_and_determinism():
+    _, tok = _tok()
+    assert tok.vocab_size <= 512
+    a = tok.encode("a photo of a red cat")
+    b = tok.encode("a photo of a red cat")
+    assert a == b
+    assert all(0 <= i < tok.vocab_size for i in a)
+
+
+@settings(max_examples=40, deadline=None)
+@given(hst.text(alphabet="abcdefghij z.,", min_size=0, max_size=200))
+def test_tokenizer_length_filter_and_bounds(text):
+    """Paper §7.1: sequences are capped at 64 tokens; ids stay in-vocab."""
+    _, tok = _tok()
+    ids = tok.encode(text, max_len=64)
+    assert len(ids) <= 64
+    assert all(0 <= i < tok.vocab_size for i in ids)
+
+
+def test_pad_batch_shapes():
+    _, tok = _tok()
+    toks, mask = tok.pad_batch([[2, 5, 6], [2, 5]], max_len=8)
+    assert toks.shape == (2, 8) and mask.shape == (2, 8)
+    assert mask[0].sum() == 3 and mask[1].sum() == 2
+
+
+def test_world_determinism_and_separability():
+    """Same seed -> identical data; images of the same class are closer to
+    their class mean than to other classes (so transfer is learnable)."""
+    rng1, rng2 = np.random.default_rng(7), np.random.default_rng(7)
+    w1, w2 = make_world(rng1), make_world(rng2)
+    np.testing.assert_array_equal(w1.concept_vecs, w2.concept_vecs)
+
+    world, tok = _tok()
+    rng = np.random.default_rng(1)
+    batch, cls = contrastive_batch(world, tok, 64, rng)
+    imgs = batch["images"]["patch_embeddings"].mean(axis=1)  # (64, pd)
+    # class centroids
+    cents = {c: imgs[cls == c].mean(0) for c in set(cls.tolist())
+             if (cls == c).sum() > 1}
+    correct = 0
+    total = 0
+    for i, c in enumerate(cls):
+        if c not in cents:
+            continue
+        dists = {cc: np.linalg.norm(imgs[i] - v) for cc, v in cents.items()}
+        correct += (min(dists, key=dists.get) == c)
+        total += 1
+    assert correct / total > 0.6
+
+
+def test_classification_prompts_cover_all_classes():
+    world, tok = _tok()
+    prompts = classification_prompts(world, tok)
+    assert prompts["tokens"].shape[0] == world.n_classes
+
+
+def test_host_rng_streams_disjoint():
+    a = host_rng(0, 0, 0).integers(0, 1 << 30, 8)
+    b = host_rng(0, 1, 0).integers(0, 1 << 30, 8)
+    c = host_rng(0, 0, 1).integers(0, 1 << 30, 8)
+    assert not np.array_equal(a, b) and not np.array_equal(a, c)
+    np.testing.assert_array_equal(a, host_rng(0, 0, 0).integers(0, 1 << 30, 8))
+
+
+def test_prefetcher_yields_deterministic_batches():
+    world, tok = _tok()
+
+    def make(step):
+        rng = host_rng(3, 0, step)
+        batch, _ = contrastive_batch(world, tok, 8, rng)
+        return batch
+
+    pf = Prefetcher(make, depth=2)
+    b0 = next(pf)
+    next(pf)
+    pf.close()
+    expect, _ = contrastive_batch(world, tok, 8, host_rng(3, 0, 0))
+    np.testing.assert_array_equal(b0["texts"]["tokens"],
+                                  expect["texts"]["tokens"])

@@ -1,0 +1,178 @@
+"""Pallas kernels vs pure-jnp oracles — shape/dtype sweeps, interpret mode."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.contrastive_loss import ops as cl_ops
+from repro.kernels.contrastive_loss import ref as cl_ref
+from repro.kernels.flash_attention import ops as fa_ops
+from repro.kernels.flash_attention import ref as fa_ref
+from repro.kernels.ssd_scan import ops as ssd_ops
+from repro.kernels.ssd_scan import ref as ssd_ref
+
+
+def _unit(key, b, d, dtype):
+    z = jax.random.normal(key, (b, d), jnp.float32)
+    z = z / jnp.linalg.norm(z, axis=1, keepdims=True)
+    return z.astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# contrastive loss kernel
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("b,d", [(16, 8), (32, 64), (64, 48), (128, 32),
+                                 (24, 16)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_contrastive_kernel_loss_sweep(b, d, dtype):
+    k1, k2 = jax.random.split(jax.random.key(b * d))
+    x, y = _unit(k1, b, d, dtype), _unit(k2, b, d, dtype)
+    lt = jnp.asarray(-1.0)
+    ref = cl_ref.loss_ref(x, y, lt)
+    got = cl_ops.fused_contrastive_loss(x, y, lt, True)
+    tol = 1e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(float(got), float(ref), rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("b,d", [(32, 16), (64, 32)])
+def test_contrastive_kernel_grads_sweep(b, d):
+    k1, k2 = jax.random.split(jax.random.key(7 * b + d))
+    x, y = _unit(k1, b, d, jnp.float32), _unit(k2, b, d, jnp.float32)
+    lt = jnp.asarray(-0.5)
+    gx_r, gy_r, gt_r = cl_ref.contrastive_grads_ref(x, y, lt)
+    gx, gy, gt = jax.grad(
+        lambda x, y, t: cl_ops.fused_contrastive_loss(x, y, t, True),
+        argnums=(0, 1, 2))(x, y, lt)
+    np.testing.assert_allclose(np.asarray(gx), np.asarray(gx_r), atol=1e-6)
+    np.testing.assert_allclose(np.asarray(gy), np.asarray(gy_r), atol=1e-6)
+    np.testing.assert_allclose(float(gt), float(gt_r), rtol=1e-4, atol=1e-6)
+
+
+def test_contrastive_kernel_grad_matches_autodiff_of_ref():
+    """Cross-check: kernel VJP == jax.grad of the materializing oracle."""
+    k1, k2 = jax.random.split(jax.random.key(0))
+    x, y = _unit(k1, 48, 24, jnp.float32), _unit(k2, 48, 24, jnp.float32)
+    lt = jnp.asarray(-1.2)
+    g_ref = jax.grad(cl_ref.loss_ref, argnums=(0, 1, 2))(x, y, lt)
+    g_k = jax.grad(
+        lambda x, y, t: cl_ops.fused_contrastive_loss(x, y, t, True),
+        argnums=(0, 1, 2))(x, y, lt)
+    for a, b_ in zip(g_ref, g_k):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b_), atol=5e-6)
+
+
+def test_contrastive_kernel_extreme_temperature_stable():
+    """Low tau -> large logits; the online LSE must stay finite."""
+    k1, k2 = jax.random.split(jax.random.key(1))
+    x, y = _unit(k1, 32, 16, jnp.float32), _unit(k2, 32, 16, jnp.float32)
+    lt = jnp.asarray(-4.6)  # tau ~ 0.01 -> logits ~ 100
+    loss = cl_ops.fused_contrastive_loss(x, y, lt, True)
+    assert np.isfinite(float(loss))
+    np.testing.assert_allclose(float(loss),
+                               float(cl_ref.loss_ref(x, y, lt)), rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# flash attention kernel
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("b,h,kv,s,d,causal,window", [
+    (2, 4, 2, 128, 64, True, None),
+    (1, 4, 4, 256, 32, True, 64),
+    (2, 2, 2, 128, 64, False, None),
+    (1, 8, 2, 64, 128, True, None),
+    (1, 2, 1, 192, 32, True, 100),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_sweep(b, h, kv, s, d, causal, window, dtype):
+    ks = jax.random.split(jax.random.key(b + h + s), 3)
+    q = jax.random.normal(ks[0], (b, h, s, d), jnp.float32).astype(dtype)
+    k = jax.random.normal(ks[1], (b, kv, s, d), jnp.float32).astype(dtype)
+    v = jax.random.normal(ks[2], (b, kv, s, d), jnp.float32).astype(dtype)
+    ref = fa_ref.attention_ref(q, k, v, causal=causal, window=window)
+    got = fa_ops.flash_attention(q, k, v, causal=causal, window=window,
+                                 block_q=64, block_k=64, interpret=True)
+    tol = 2e-5 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(ref, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_flash_attention_matches_model_sdpa():
+    """Kernel agrees with the model's naive attention path end-to-end."""
+    from repro.models.attention import _sdpa
+    ks = jax.random.split(jax.random.key(9), 3)
+    b, h, kvh, s, d = 2, 4, 2, 64, 32
+    q = jax.random.normal(ks[0], (b, s, h, d))
+    k = jax.random.normal(ks[1], (b, s, kvh, d))
+    v = jax.random.normal(ks[2], (b, s, kvh, d))
+    mask = jnp.where(jnp.tril(jnp.ones((s, s), bool)), 0.0, -1e30)
+    ref = _sdpa(q, k, v, mask)
+    got = fa_ops.flash_attention(
+        q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+        v.transpose(0, 2, 1, 3), causal=True, block_q=32, block_k=32,
+        interpret=True).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref), atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# SSD scan kernel
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("b,l,h,p,n,chunk", [
+    (2, 128, 4, 32, 16, 32),
+    (1, 64, 2, 64, 32, 64),
+    (1, 256, 8, 16, 8, 128),
+    (2, 96, 3, 32, 16, 32),
+])
+def test_ssd_kernel_vs_sequential_ref(b, l, h, p, n, chunk):
+    ks = jax.random.split(jax.random.key(l + h), 5)
+    x = jax.random.normal(ks[0], (b, l, h, p))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, l, h))) * 0.5
+    A = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.3)
+    Bm = jax.random.normal(ks[3], (b, l, n)) * 0.5
+    Cm = jax.random.normal(ks[4], (b, l, n)) * 0.5
+    D = jnp.ones((h,))
+    y_ref, _ = ssd_ref.ssd_ref(x, dt, A, Bm, Cm, D)
+    y_k = ssd_ops.ssd_scan(x, dt, A, Bm, Cm, D, chunk=chunk, interpret=True)
+    scale = float(jnp.max(jnp.abs(y_ref))) + 1e-6
+    np.testing.assert_allclose(np.asarray(y_k) / scale,
+                               np.asarray(y_ref) / scale, atol=2e-5)
+
+
+def test_ssd_kernel_matches_model_chunked():
+    """Kernel output == models.ssm.ssd_chunked (the jnp path the model uses)."""
+    from repro.models.ssm import ssd_chunked
+    ks = jax.random.split(jax.random.key(11), 5)
+    b, l, h, p, n = 1, 128, 4, 32, 16
+    x = jax.random.normal(ks[0], (b, l, h, p))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, l, h))) * 0.5
+    A = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.3)
+    Bm = jax.random.normal(ks[3], (b, l, n)) * 0.5
+    Cm = jax.random.normal(ks[4], (b, l, n)) * 0.5
+    y_m, _ = ssd_chunked(x, dt, A, Bm, Cm, 32)
+    y_k = ssd_ops.ssd_scan(x, dt, A, Bm, Cm, None, chunk=32, interpret=True)
+    scale = float(jnp.max(jnp.abs(y_m))) + 1e-6
+    np.testing.assert_allclose(np.asarray(y_k) / scale,
+                               np.asarray(y_m) / scale, atol=2e-5)
+
+
+def test_ssd_kernel_decay_extremes():
+    """Very fast decay (large dt*|A|) must not overflow the chunk exps."""
+    ks = jax.random.split(jax.random.key(12), 5)
+    b, l, h, p, n = 1, 64, 2, 16, 8
+    x = jax.random.normal(ks[0], (b, l, h, p))
+    dt = jnp.full((b, l, h), 3.0)
+    A = jnp.asarray([-5.0, -0.001])
+    Bm = jax.random.normal(ks[3], (b, l, n)) * 0.5
+    Cm = jax.random.normal(ks[4], (b, l, n)) * 0.5
+    y_ref, _ = ssd_ref.ssd_ref(x, dt, A, Bm, Cm)
+    y_k = ssd_ops.ssd_scan(x, dt, A, Bm, Cm, chunk=32, interpret=True)
+    assert np.all(np.isfinite(np.asarray(y_k)))
+    scale = float(jnp.max(jnp.abs(y_ref))) + 1e-6
+    np.testing.assert_allclose(np.asarray(y_k) / scale,
+                               np.asarray(y_ref) / scale, atol=5e-5)

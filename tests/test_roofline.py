@@ -1,0 +1,53 @@
+"""Roofline extraction: HLO collective parsing + term math."""
+import numpy as np
+
+from repro.configs import INPUT_SHAPES, get_arch
+from repro.launch import roofline as rf
+
+HLO = """
+ENTRY %main {
+  %ag = bf16[16,1024,512]{2,1,0} all-gather(bf16[1,1024,512] %p0), dim=0
+  %ar = f32[256,4096]{1,0} all-reduce(f32[256,4096] %x), to_apply=%add
+  %rs = f32[16,256]{1,0} reduce-scatter(f32[256,256] %y), dimensions={0}
+  %a2a = (bf16[8,128]{1,0}, bf16[8,128]{1,0}) all-to-all(%a, %b)
+  %cp = bf16[64,64]{1,0} collective-permute(bf16[64,64] %z)
+  %ags = bf16[2,8]{1,0} all-gather-start(bf16[1,8] %q), dim=0
+  %dot = f32[128,128]{1,0} dot(%l, %r)
+}
+"""
+
+
+def test_collective_bytes_parses_all_kinds():
+    c = rf.collective_bytes(HLO)
+    assert c["all-gather"] == 16 * 1024 * 512 * 2 + 2 * 8 * 2
+    assert c["all-reduce"] == 256 * 4096 * 4
+    assert c["reduce-scatter"] == 16 * 256 * 4
+    assert c["all-to-all"] == 2 * (8 * 128 * 2)
+    assert c["collective-permute"] == 64 * 64 * 2
+    assert c["count"] == 6
+    assert c["total"] == sum(c[k] for k in
+                             ("all-gather", "all-reduce", "reduce-scatter",
+                              "all-to-all", "collective-permute"))
+
+
+def test_dot_not_counted():
+    c = rf.collective_bytes("%d = f32[4096,4096] dot(%a, %b)")
+    assert c["total"] == 0
+
+
+def test_roofline_terms_and_bottleneck():
+    t = rf.roofline_terms({"flops": 197e12, "bytes accessed": 819e9 * 2},
+                          {"total": 50e9 * 0.5})
+    np.testing.assert_allclose(t["compute_s"], 1.0)
+    np.testing.assert_allclose(t["memory_s"], 2.0)
+    np.testing.assert_allclose(t["collective_s"], 0.5)
+    assert t["bottleneck"] == "memory"
+
+
+def test_model_flops_train_vs_decode():
+    cfg = get_arch("llama3.2-1b")
+    n = cfg.param_counts()["active"]
+    tr = rf.model_flops(cfg, INPUT_SHAPES["train_4k"], n)
+    de = rf.model_flops(cfg, INPUT_SHAPES["decode_32k"], n)
+    assert tr == 6 * n * 256 * 4096
+    assert de == 2 * n * 128

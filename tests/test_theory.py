@@ -1,0 +1,48 @@
+"""Theory module (paper §6): bound shape + empirical gap machinery."""
+import numpy as np
+
+from repro.core.theory import bound_terms, empirical_gap, norm_product
+
+
+def _params():
+    rng = np.random.default_rng(0)
+    return {"blocks": [{"w": rng.standard_normal((4, 16, 16))}],
+            "proj": rng.standard_normal((16, 8))}
+
+
+def test_bound_decreases_in_B_and_m():
+    p = _params()
+    b1 = bound_terms(None, p, p, m=1000, B=64)
+    b2 = bound_terms(None, p, p, m=1000, B=1024)
+    b3 = bound_terms(None, p, p, m=16000, B=64)
+    assert b2["term_1_over_sqrt_2B"] < b1["term_1_over_sqrt_2B"]
+    assert b3["term_1_over_sqrt_m"] < b1["term_1_over_sqrt_m"]
+    assert b2["gap_shape"] < b1["gap_shape"]
+    assert b3["gap_shape"] < b1["gap_shape"]
+
+
+def test_bound_rate_is_one_over_sqrt_B():
+    p = _params()
+    t = [bound_terms(None, p, p, m=1000, B=b)["term_1_over_sqrt_2B"]
+         for b in (64, 256, 1024)]
+    np.testing.assert_allclose(t[0] / t[1], 2.0, rtol=0.05)
+    np.testing.assert_allclose(t[1] / t[2], 2.0, rtol=0.05)
+
+
+def test_norm_product_counts_matrices():
+    p = _params()
+    out = norm_product(p)
+    assert out["depth"] == 5  # 4 stacked + 1 proj
+    assert np.isfinite(out["log_prod"])
+
+
+def test_empirical_gap_near_zero_for_same_distribution():
+    rng = np.random.default_rng(1)
+
+    def unit(n, d):
+        z = rng.standard_normal((n, d)).astype(np.float32)
+        return z / np.linalg.norm(z, axis=1, keepdims=True)
+
+    x, y = unit(256, 16), unit(256, 16)
+    gap = empirical_gap(x, y, x, y)
+    assert abs(gap) < 0.2

@@ -1,0 +1,36 @@
+"""Distributed trainer: loss decreases; checkpoint resume continues exactly."""
+import types
+
+import numpy as np
+
+from repro.launch.train_distributed import train
+
+
+def _args(**kw):
+    base = dict(arch="llama3.2-1b", smoke=True, steps=12, batch=4, seq=32,
+                lr=3e-3, seed=0, sharding="basic_ws", remat="basic",
+                model_parallel=1, log_every=100, ckpt_dir=None, ckpt_every=0,
+                stop_after=None)
+    base.update(kw)
+    return types.SimpleNamespace(**base)
+
+
+def test_trainer_reduces_loss():
+    # uniform-random tokens have an entropy floor of ln(vocab) ~ 6.24; from
+    # a ~6.6 init the trainer must close most of the gap to the floor.
+    losses = train(_args(steps=40, lr=5e-3))
+    assert np.mean(losses[-5:]) < np.mean(losses[:5]) - 0.05, \
+        (np.mean(losses[:5]), np.mean(losses[-5:]))
+    assert all(np.isfinite(losses))
+
+
+def test_checkpoint_resume_is_exact(tmp_path):
+    """train 12 straight == train 6, checkpoint, resume 6 more (bitwise-close
+    — the data stream is keyed by absolute step, so resume sees the same
+    batches)."""
+    full = train(_args(steps=12))
+    d = str(tmp_path / "ck")
+    # stop_after keeps the LR-schedule horizon (steps=12) identical
+    train(_args(steps=12, stop_after=6, ckpt_dir=d))
+    resumed = train(_args(steps=12, ckpt_dir=d))
+    np.testing.assert_allclose(resumed, full[6:], rtol=1e-4)
