@@ -1,5 +1,12 @@
 # One function per paper table. Prints ``name,us_per_call,derived`` CSV.
+#
+# ``--json`` additionally runs the kernel perf bench (benchmarks.kernel_bench),
+# rewrites BENCH_kernels.json, and gates the fresh numbers against the
+# previously committed content via scripts.check_bench (>1.3x fails).
 import argparse
+import importlib
+import json
+import os
 import sys
 import traceback
 
@@ -9,25 +16,79 @@ TABLES = {
     "zeroshot": "benchmarks.zero_shot",      # Tables 1/3 analog
     "theory": "benchmarks.theory_bound",     # Theorems 1-2 gap vs B
     "roofline": "benchmarks.roofline_table", # §Roofline aggregation
+    "kernels": "benchmarks.kernel_bench",    # contrastive kernel perf (DESIGN.md §5)
 }
+
+# slow full-sweep benches only run when selected explicitly (or via --json)
+_OPT_IN = {"kernels"}
+
+BENCH_JSON = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "BENCH_kernels.json")
+
+
+def _run_kernel_bench_json() -> int:
+    """Run the kernel bench and gate it against the checked-out
+    BENCH_kernels.json. On pass the file is refreshed (committing it is how
+    the perf trajectory ratchets forward — review its git diff, since
+    sub-threshold drift accumulates by design); on failure the baseline is
+    kept and the fresh numbers go to BENCH_kernels.json.new, so re-running
+    can't silently accept a regression by comparing it against itself.
+    Returns rc."""
+    from benchmarks import kernel_bench
+    from scripts import check_bench
+
+    baseline = None
+    if os.path.exists(BENCH_JSON):
+        with open(BENCH_JSON) as f:
+            baseline = json.load(f)
+    fresh = kernel_bench.run()
+    if baseline is None:
+        kernel_bench.write_json(BENCH_JSON, fresh)
+        print("run.py --json: no prior baseline; wrote initial "
+              f"{BENCH_JSON}", file=sys.stderr)
+        return 0
+    print(f"check_bench: {check_bench.summarize(fresh, baseline)}")
+    failures = check_bench.compare(fresh, baseline)
+    for line in failures:
+        print(f"check_bench: REGRESSION {line}", file=sys.stderr)
+    if failures:
+        kernel_bench.write_json(BENCH_JSON + ".new", fresh)
+        print(f"run.py --json: baseline kept; fresh (regressed) numbers in "
+              f"{BENCH_JSON}.new", file=sys.stderr)
+        return 1
+    kernel_bench.write_json(BENCH_JSON, fresh)
+    if os.path.exists(BENCH_JSON + ".new"):
+        os.remove(BENCH_JSON + ".new")  # stale output of an older failed run
+    print("check_bench: OK")
+    return 0
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", choices=sorted(TABLES), default=None)
+    ap.add_argument("--json", action="store_true",
+                    help="run the kernel bench, rewrite BENCH_kernels.json, "
+                         "and fail on >1.3x regression vs the committed file")
     args = ap.parse_args()
     print("name,us_per_call,derived")
     failed = 0
     for name, mod_name in TABLES.items():
         if args.only and name != args.only:
             continue
+        if name in _OPT_IN and (args.json or args.only != name):
+            continue  # opt-in only; with --json the gate runs it instead
         try:
-            import importlib
             importlib.import_module(mod_name).run()
         except Exception as e:  # noqa: BLE001
             failed += 1
             print(f"{name}/ERROR,0,{type(e).__name__}:{e}", file=sys.stderr)
             traceback.print_exc()
+    if args.json:
+        if args.only not in (None, "kernels"):
+            print(f"run.py: --json ignored with --only {args.only} "
+                  "(the kernel gate is out of scope)", file=sys.stderr)
+        else:
+            failed += _run_kernel_bench_json()
     sys.exit(1 if failed else 0)
 
 

@@ -1,0 +1,119 @@
+"""Perf-regression gate: diff a fresh BENCH_kernels.json against the
+committed baseline and fail on >1.3× slowdown of any kernel entry.
+
+Used standalone (``python scripts/check_bench.py NEW.json``) and by
+``benchmarks/run.py --json``, which regenerates BENCH_kernels.json and then
+compares it to the previously committed content (DESIGN.md §5). Entries
+present on only one side are reported but never fail the check (new shapes
+or paths are allowed to appear/retire); only matched entries gate.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import statistics
+import sys
+
+THRESHOLD = 1.3
+
+# Shared bench hosts drift globally (noisy neighbors, turbo state): every
+# entry — including the code-stable jnp ``ref`` path — can shift 1.5-2x
+# between runs. The median new/baseline ratio over the ``ref/`` entries
+# (whose implementation no kernel change touches) estimates that host
+# factor and is divided out, so the gate fires on *relative* regressions —
+# which a kernel change actually causes, even when it hits both Pallas
+# paths through a shared helper. When too few ref entries match, the
+# median over all gated entries is the (weaker) fallback anchor.
+_MIN_REF_ENTRIES_FOR_NORMALIZATION = 3
+_MIN_ENTRIES_FOR_NORMALIZATION = 6
+
+# Sub-50ms calls on CPU-interpret hosts jitter 2-3x run to run even with
+# min-of-N timing; gating them would make the check flappy. Entries below
+# the floor are reported but never fail (the ≥50ms entries — the large
+# shapes the perf work actually targets — carry the gate). On compiled
+# accelerator baselines (meta.interpret false on both sides) timings are
+# stable at sub-ms scale, so no floor applies — otherwise a fast-TPU
+# baseline would silently gate nothing.
+_MIN_GATED_BASELINE_US = 50_000.0
+
+
+def _floor(new: dict, baseline: dict) -> float:
+    interp = (new.get("meta", {}).get("interpret", True)
+              or baseline.get("meta", {}).get("interpret", True))
+    return _MIN_GATED_BASELINE_US if interp else 0.0
+
+
+def _gated_ratios(new: dict, baseline: dict) -> dict:
+    base_entries = baseline.get("entries", {})
+    new_entries = new.get("entries", {})
+    floor = _floor(new, baseline)
+    return {name: new_entries[name]["us"] / base_entries[name]["us"]
+            for name in sorted(new_entries)
+            if name in base_entries and base_entries[name]["us"] >= floor
+            and base_entries[name]["us"] > 0}
+
+
+def compare(new: dict, baseline: dict,
+            threshold: float = THRESHOLD) -> list[str]:
+    """Returns a list of human-readable regression failures (empty = pass)."""
+    ratios = _gated_ratios(new, baseline)
+
+    ref_ratios = [r for name, r in ratios.items() if name.startswith("ref/")]
+    if len(ref_ratios) >= _MIN_REF_ENTRIES_FOR_NORMALIZATION:
+        host_factor = statistics.median(ref_ratios)
+    elif len(ratios) >= _MIN_ENTRIES_FOR_NORMALIZATION:
+        host_factor = statistics.median(ratios.values())
+    else:
+        host_factor = 1.0
+
+    base_entries = baseline.get("entries", {})
+    new_entries = new.get("entries", {})
+    failures = []
+    for name, ratio in ratios.items():
+        if ratio > threshold * host_factor:
+            failures.append(
+                f"{name}: {new_entries[name]['us']:.1f}us vs baseline "
+                f"{base_entries[name]['us']:.1f}us ({ratio:.2f}x > "
+                f"{threshold}x with host factor {host_factor:.2f})")
+    return failures
+
+
+def summarize(new: dict, baseline: dict) -> str:
+    base_keys = set(baseline.get("entries", {}))
+    new_keys = set(new.get("entries", {}))
+    gated = len(_gated_ratios(new, baseline))
+    lines = [f"gating {gated} of {len(base_keys & new_keys)} matched entries"]
+    if new_keys - base_keys:
+        lines.append(f"new (ungated): {sorted(new_keys - base_keys)}")
+    if base_keys - new_keys:
+        lines.append(f"missing vs baseline: {sorted(base_keys - new_keys)}")
+    return "; ".join(lines)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("new", help="freshly generated bench JSON")
+    ap.add_argument("--baseline", default="BENCH_kernels.json")
+    ap.add_argument("--threshold", type=float, default=THRESHOLD)
+    args = ap.parse_args(argv)
+
+    with open(args.new) as f:
+        new = json.load(f)
+    try:
+        with open(args.baseline) as f:
+            baseline = json.load(f)
+    except FileNotFoundError:
+        print(f"check_bench: no baseline at {args.baseline}; nothing to gate")
+        return 0
+
+    print(f"check_bench: {summarize(new, baseline)}")
+    failures = compare(new, baseline, args.threshold)
+    for line in failures:
+        print(f"check_bench: REGRESSION {line}", file=sys.stderr)
+    if not failures:
+        print("check_bench: OK")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,6 +1,6 @@
 """BASIC-S (paper Table 5): CoAtNet-0 image tower (25M) + 6L/1024 text tower.
 
-The CoAtNet conv stages are a vision frontend STUB (DESIGN.md §2): the image
+The CoAtNet conv stages are a vision frontend STUB (DESIGN.md §4): the image
 tower here is the transformer backbone consuming precomputed patch embeddings.
 Text tower: 6 layers, hidden 1024, head dim 64 (Table 5).
 """

@@ -39,19 +39,24 @@ def contrastive_loss(x_emb, y_emb, tau, label_smoothing: float = 0.0):
                   "i2t_top1": acc}
 
 
-def fused_kernel_loss(x_emb, y_emb, tau, interpret=True):
-    """Same value/gradients as ``contrastive_loss`` but via the Pallas fused
-    blockwise kernel — the B×B similarity matrix never materializes in HBM
-    (beyond-paper; DESIGN.md §2). ``interpret=True`` runs the kernel body in
-    Python (CPU validation); pass False on real TPUs.
+def fused_kernel_loss(x_emb, y_emb, tau, interpret=None, bm=None, bn=None):
+    """Same value/gradients as ``contrastive_loss`` but via the single-pass
+    Pallas fused kernels (one fwd sweep, one bwd sweep) — the B×B similarity
+    matrix never materializes in HBM (beyond-paper; DESIGN.md §2).
+
+    ``interpret=None`` auto-detects the backend: the compiled kernel on
+    accelerators, the interpreted kernel body when ``jax.default_backend()``
+    is "cpu" (where Mosaic cannot compile). bf16 embeddings are passed
+    through unconverted (fp32 accumulation happens inside the kernel);
+    ``bm``/``bn`` override the VMEM-model block autotuner (DESIGN.md §2.4).
 
     Drop-in ``loss_fn`` for core.gradaccum (metrics limited to the loss —
     the argmax-accuracy metric would need the full matrix)."""
     from repro.kernels.contrastive_loss.ops import fused_contrastive_loss
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
     log_tau = jnp.log(tau)
-    loss = fused_contrastive_loss(x_emb.astype(jnp.float32),
-                                  y_emb.astype(jnp.float32), log_tau,
-                                  interpret)
+    loss = fused_contrastive_loss(x_emb, y_emb, log_tau, interpret, bm, bn)
     zero = jnp.zeros((), jnp.float32)
     return loss, {"row_loss": zero, "col_loss": zero, "i2t_top1": zero}
 

@@ -35,13 +35,18 @@ def _split(tree, k):
 
 def contrastive_step(encode_image: Callable, encode_text: Callable,
                      params, batch, num_micro: int,
-                     loss_fn: Callable = contrastive_loss):
+                     loss_fn: Callable = contrastive_loss,
+                     loss_opts: dict | None = None):
     """Exact full-batch contrastive gradient via Algorithm 1.
 
     encode_image(params, images_mb) -> (M, D) embeddings (unit-norm)
     encode_text(params, texts_mb)   -> (M, D)
     params must contain 'log_tau'. batch = {'images': ..., 'texts': ...} with
     leading batch dim B on every leaf; num_micro must divide B.
+
+    ``loss_opts`` is forwarded to ``loss_fn`` as keyword arguments — e.g.
+    ``loss_fn=fused_kernel_loss, loss_opts={"interpret": True, "bm": 256}``
+    plumbs explicit interpret/block overrides down to the Pallas kernels.
 
     Returns (loss, metrics, grads) with grads exactly equal to
     jax.grad of the monolithic loss (same contraction order).
@@ -62,7 +67,7 @@ def contrastive_step(encode_image: Callable, encode_text: Callable,
     # ---- lines 6-12: loss on embeddings + d(loss)/d(X, Y, log_tau) ----
     def loss_on_emb(x, y, log_tau):
         tau = jnp.exp(log_tau)
-        return loss_fn(x, y, tau)
+        return loss_fn(x, y, tau, **(loss_opts or {}))
 
     (loss, metrics), (dX, dY, dlog_tau) = jax.value_and_grad(
         loss_on_emb, argnums=(0, 1, 2), has_aux=True)(
@@ -91,7 +96,8 @@ def contrastive_step(encode_image: Callable, encode_text: Callable,
 
 def microbatch_grads(encode_image: Callable, encode_text: Callable,
                      params, batch, num_micro: int,
-                     loss_fn: Callable = contrastive_loss):
+                     loss_fn: Callable = contrastive_loss,
+                     loss_opts: dict | None = None):
     """Streaming form: returns (loss, metrics, c) where c is the stacked
     per-microbatch gradient stream, leaves (K, ...); mean over K equals the
     exact full-batch gradient (up to the 1/K normalization, paper §4.1)."""
@@ -108,7 +114,7 @@ def microbatch_grads(encode_image: Callable, encode_text: Callable,
 
     def loss_on_emb(x, y, log_tau):
         tau = jnp.exp(log_tau)
-        return loss_fn(x, y, tau)
+        return loss_fn(x, y, tau, **(loss_opts or {}))
 
     (loss, metrics), (dX, dY, dlog_tau) = jax.value_and_grad(
         loss_on_emb, argnums=(0, 1, 2), has_aux=True)(

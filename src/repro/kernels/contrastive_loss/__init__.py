@@ -1,4 +1,8 @@
 from repro.kernels.contrastive_loss.ops import (  # noqa: F401
+    autotune_blocks,
     fused_contrastive_loss,
+    fused_contrastive_loss_4pass,
     fused_loss_and_lse,
+    fused_loss_and_lse_4pass,
+    pick_blocks,
 )

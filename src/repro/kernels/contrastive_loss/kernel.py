@@ -1,11 +1,27 @@
-"""Pallas TPU kernel: blockwise contrastive loss — B×B never hits HBM.
+"""Pallas TPU kernels: blockwise contrastive loss — B×B never hits HBM.
 
 TPU adaptation of the paper's memory insight (DESIGN.md §2): Algorithm 1
 stores the full similarity matrix (Θ(B²) = 16 GB at B=65536); here tiles of
 X·Yᵀ live only in VMEM and row/column log-sum-exps are accumulated online
 (flash-attention-style running max/sum), so HBM traffic is Θ(B·D).
 
-Four kernels (each a clean single-reduction grid, innermost axis = reduction):
+Single-pass kernels (DESIGN.md §2.3) — the default path, 2 launches total:
+  _fused_fwd_kernel : grid (nI, nJ) -> row LSE and col LSE in ONE sweep.
+      Row LSE runs the usual online rescale over the inner j axis (row
+      running max/sum live in VMEM scratch, finalized at j == nJ-1).
+      Col LSE is carried in full-length VMEM scratch across the OUTER i
+      axis: each tile updates the (bn,)-slice of the (B,) column running
+      max/sum, finalized into the resident output at i == nI-1.
+  _fused_bwd_kernel : grid (nI, nJ) -> dX, dY, dlog_tau in ONE sweep.
+      Each X·Yᵀ tile is computed once and contracted both ways: dX_i
+      accumulates in its streamed output block over the inner j axis; dY
+      accumulates slice-wise into a VMEM-resident (B, D) fp32 output
+      (constant index map) across the outer i axis; dτ is a resident
+      scalar. Versus the legacy 4-pass path this halves X·Yᵀ matmul FLOPs
+      and roughly halves HBM reads of X/Y.
+
+Legacy 4-pass kernels (kept for the perf-regression baseline in
+benchmarks/kernel_bench.py; each a clean single-reduction grid):
   _row_lse_kernel : grid (nI, nJ) -> row LSE          (J inner, online LSE)
   _col_lse_kernel : grid (nJ, nI) -> col LSE          (I inner, online LSE)
   _dx_kernel      : grid (nI, nJ) -> dX rows + dlog_tau partials
@@ -14,8 +30,11 @@ Four kernels (each a clean single-reduction grid, innermost axis = reduction):
 Backward recomputes each tile from (row_lse, col_lse):
   dA_ij = (exp(A_ij - row_lse_i) + exp(A_ij - col_lse_j) - 2·δ_ij) / (2B)
 
-Block sizes are multiples of (8, 128) sublane×lane tiling; D is kept whole in
-VMEM (embedding dims here are ≤ 2048 ⇒ X/Y tiles of bm×D ≤ 1 MB each).
+Inputs may be bf16 (fed straight to the MXU with fp32 accumulation via
+``preferred_element_type``) or fp32. Block sizes are multiples of (8, 128)
+sublane×lane tiling; D is kept whole in VMEM (embedding dims here are
+≤ 2048 ⇒ X/Y tiles of bm×D ≤ 1 MB each). The VMEM footprint model behind
+block selection is in ops.pick_blocks (DESIGN.md §2.4).
 """
 from __future__ import annotations
 
@@ -24,15 +43,176 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 NEG = -1e30
 
 
 def _tile(x_ref, y_ref, inv_tau):
-    x = x_ref[...].astype(jnp.float32)
-    y = y_ref[...].astype(jnp.float32)
-    return jax.lax.dot_general(x, y, (((1,), (1,)), ((), ())),
+    """X_i · Y_jᵀ tile with fp32 MXU accumulation (bf16 inputs stay bf16)."""
+    return jax.lax.dot_general(x_ref[...], y_ref[...], (((1,), (1,)), ((), ())),
                                preferred_element_type=jnp.float32) * inv_tau
+
+
+def _contract(da, v_ref):
+    """da · V tile; da is cast to the operand dtype so bf16 uses the MXU."""
+    return jax.lax.dot_general(da.astype(v_ref.dtype), v_ref[...],
+                               (((1,), (0,)), ((), ())),
+                               preferred_element_type=jnp.float32)
+
+
+def _online_update(m, s, a, axis):
+    """One online-LSE step: returns updated (max, sum) over ``axis`` of a."""
+    m_new = jnp.maximum(m, jnp.max(a, axis=axis))
+    exp_a = jnp.exp(a - (m_new[:, None] if axis == 1 else m_new[None, :]))
+    s_new = s * jnp.exp(m - m_new) + jnp.sum(exp_a, axis=axis)
+    return m_new, s_new
+
+
+# ---------------------------------------------------------------------------
+# single-pass forward: row LSE + col LSE in one sweep
+# ---------------------------------------------------------------------------
+
+
+def _fused_fwd_kernel(x_ref, y_ref, inv_tau_ref, rlse_ref, clse_ref,
+                      rm, rs, cm, cs, *, bn, ni, nj):
+    i, j = pl.program_id(0), pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init_row():
+        rm[...] = jnp.full_like(rm, NEG)
+        rs[...] = jnp.zeros_like(rs)
+
+    @pl.when((i == 0) & (j == 0))
+    def _init_col():
+        cm[...] = jnp.full_like(cm, NEG)
+        cs[...] = jnp.zeros_like(cs)
+
+    a = _tile(x_ref, y_ref, inv_tau_ref[0])            # (bm, bn)
+
+    rm[...], rs[...] = _online_update(rm[...], rs[...], a, axis=1)
+
+    sl = pl.ds(j * bn, bn)
+    cm[sl], cs[sl] = _online_update(cm[sl], cs[sl], a, axis=0)
+
+    @pl.when(j == nj - 1)
+    def _finalize_row():
+        rlse_ref[...] = rm[...] + jnp.log(rs[...])
+
+    @pl.when(i == ni - 1)
+    def _finalize_col():
+        clse_ref[sl] = cm[sl] + jnp.log(cs[sl])
+
+
+def fwd_fused(x, y, inv_tau, *, bm=128, bn=128, interpret=False):
+    """Single grid sweep -> (row_lse, col_lse), each (B,) fp32."""
+    b, d = x.shape
+    assert b % bm == 0 and b % bn == 0, (b, bm, bn)
+    ni, nj = b // bm, b // bn
+    inv_tau = jnp.asarray([inv_tau], jnp.float32)
+
+    return pl.pallas_call(
+        functools.partial(_fused_fwd_kernel, bn=bn, ni=ni, nj=nj),
+        grid=(ni, nj),
+        in_specs=[
+            pl.BlockSpec((bm, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((bn, d), lambda i, j: (j, 0)),
+            pl.BlockSpec((1,), lambda i, j: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bm,), lambda i, j: (i,)),
+            pl.BlockSpec((b,), lambda i, j: (0,)),
+        ],
+        out_shape=[jax.ShapeDtypeStruct((b,), jnp.float32)] * 2,
+        scratch_shapes=[
+            pltpu.VMEM((bm,), jnp.float32),   # row running max
+            pltpu.VMEM((bm,), jnp.float32),   # row running sum
+            pltpu.VMEM((b,), jnp.float32),    # col running max (full length)
+            pltpu.VMEM((b,), jnp.float32),    # col running sum (full length)
+        ],
+        interpret=interpret,
+    )(x, y, inv_tau)
+
+
+# ---------------------------------------------------------------------------
+# single-pass backward: dX, dY, dlog_tau in one sweep
+# ---------------------------------------------------------------------------
+
+
+def _diag_mask(i, j, bm, bn):
+    """2·δ_ij contribution for the (i, j) tile (global diagonal)."""
+    rows = jax.lax.broadcasted_iota(jnp.int32, (bm, bn), 0) + i * bm
+    cols = jax.lax.broadcasted_iota(jnp.int32, (bm, bn), 1) + j * bn
+    return (rows == cols).astype(jnp.float32)
+
+
+def _fused_bwd_kernel(x_ref, y_ref, inv_tau_ref, rlse_ref, clse_ref,
+                      dx_ref, dy_ref, dtau_ref, *, bm, bn, b):
+    i, j = pl.program_id(0), pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init_dx():
+        dx_ref[...] = jnp.zeros_like(dx_ref)
+
+    @pl.when((i == 0) & (j == 0))
+    def _init_dtau():
+        dtau_ref[...] = jnp.zeros_like(dtau_ref)
+
+    inv_tau = inv_tau_ref[0]
+    a = _tile(x_ref, y_ref, inv_tau)
+    p_row = jnp.exp(a - rlse_ref[...][:, None])
+    p_col = jnp.exp(a - clse_ref[...][None, :])
+    da = (p_row + p_col - 2.0 * _diag_mask(i, j, bm, bn)) / (2.0 * b)
+
+    dx_ref[...] += _contract(da, y_ref) * inv_tau
+    dy_contrib = _contract(da.T, x_ref) * inv_tau
+    sl = pl.ds(j * bn, bn)
+
+    @pl.when(i == 0)
+    def _dy_first():
+        dy_ref[sl, :] = dy_contrib
+
+    @pl.when(i > 0)
+    def _dy_accum():
+        dy_ref[sl, :] += dy_contrib
+
+    dtau_ref[...] += -jnp.sum(da * a)
+
+
+def bwd_fused(x, y, inv_tau, row_lse, col_lse, *, bm=128, bn=128,
+              interpret=False):
+    """Single grid sweep -> (dX, dY, dlog_tau), gradients in fp32."""
+    b, d = x.shape
+    assert b % bm == 0 and b % bn == 0, (b, bm, bn)
+    ni, nj = b // bm, b // bn
+    inv_tau = jnp.asarray([inv_tau], jnp.float32)
+
+    dx, dy, dtau = pl.pallas_call(
+        functools.partial(_fused_bwd_kernel, bm=bm, bn=bn, b=b),
+        grid=(ni, nj),
+        in_specs=[
+            pl.BlockSpec((bm, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((bn, d), lambda i, j: (j, 0)),
+            pl.BlockSpec((1,), lambda i, j: (0,)),
+            pl.BlockSpec((bm,), lambda i, j: (i,)),
+            pl.BlockSpec((bn,), lambda i, j: (j,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bm, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((b, d), lambda i, j: (0, 0)),
+            pl.BlockSpec((1,), lambda i, j: (0,)),
+        ],
+        out_shape=[jax.ShapeDtypeStruct((b, d), jnp.float32),
+                   jax.ShapeDtypeStruct((b, d), jnp.float32),
+                   jax.ShapeDtypeStruct((1,), jnp.float32)],
+        interpret=interpret,
+    )(x, y, inv_tau, row_lse, col_lse)
+    return dx, dy, dtau[0]
+
+
+# ---------------------------------------------------------------------------
+# legacy 4-pass kernels (perf-regression baseline; see DESIGN.md §2.2)
+# ---------------------------------------------------------------------------
 
 
 def _row_lse_kernel(x_ref, y_ref, inv_tau_ref, m_ref, s_ref, *, nj):
@@ -44,10 +224,7 @@ def _row_lse_kernel(x_ref, y_ref, inv_tau_ref, m_ref, s_ref, *, nj):
         s_ref[...] = jnp.zeros_like(s_ref)
 
     a = _tile(x_ref, y_ref, inv_tau_ref[0])            # (bm, bn)
-    m_new = jnp.maximum(m_ref[...], jnp.max(a, axis=1))
-    s_ref[...] = s_ref[...] * jnp.exp(m_ref[...] - m_new) \
-        + jnp.sum(jnp.exp(a - m_new[:, None]), axis=1)
-    m_ref[...] = m_new
+    m_ref[...], s_ref[...] = _online_update(m_ref[...], s_ref[...], a, axis=1)
 
 
 def _col_lse_kernel(y_ref, x_ref, inv_tau_ref, m_ref, s_ref, *, ni):
@@ -60,17 +237,7 @@ def _col_lse_kernel(y_ref, x_ref, inv_tau_ref, m_ref, s_ref, *, ni):
 
     # tile = X_i · Y_j^T transposed -> (bn, bm) scores of columns vs rows
     a = _tile(y_ref, x_ref, inv_tau_ref[0])            # (bn, bm)
-    m_new = jnp.maximum(m_ref[...], jnp.max(a, axis=1))
-    s_ref[...] = s_ref[...] * jnp.exp(m_ref[...] - m_new) \
-        + jnp.sum(jnp.exp(a - m_new[:, None]), axis=1)
-    m_ref[...] = m_new
-
-
-def _diag_mask(i, j, bm, bn):
-    """2·δ_ij contribution for the (i, j) tile (global diagonal)."""
-    rows = jax.lax.broadcasted_iota(jnp.int32, (bm, bn), 0) + i * bm
-    cols = jax.lax.broadcasted_iota(jnp.int32, (bm, bn), 1) + j * bn
-    return (rows == cols).astype(jnp.float32)
+    m_ref[...], s_ref[...] = _online_update(m_ref[...], s_ref[...], a, axis=1)
 
 
 def _dx_kernel(x_ref, y_ref, inv_tau_ref, rlse_ref, clse_ref,
@@ -89,9 +256,7 @@ def _dx_kernel(x_ref, y_ref, inv_tau_ref, rlse_ref, clse_ref,
     p_row = jnp.exp(a - rlse_ref[...][:, None])
     p_col = jnp.exp(a - clse_ref[...][None, :])
     da = (p_row + p_col - 2.0 * _diag_mask(i, j, bm, bn)) / (2.0 * b)
-    dx_ref[...] += jax.lax.dot_general(
-        da, y_ref[...].astype(jnp.float32), (((1,), (0,)), ((), ())),
-        preferred_element_type=jnp.float32) * inv_tau_ref[0]
+    dx_ref[...] += _contract(da, y_ref) * inv_tau_ref[0]
     dtau_ref[...] += -jnp.sum(da * a)
 
 
@@ -107,14 +272,7 @@ def _dy_kernel(y_ref, x_ref, inv_tau_ref, rlse_ref, clse_ref, dy_ref,
     p_row = jnp.exp(a_t - rlse_ref[...][None, :])      # softmax over rows of A
     p_col = jnp.exp(a_t - clse_ref[...][:, None])
     da_t = (p_row + p_col - 2.0 * _diag_mask(j, i, bn, bm)) / (2.0 * b)
-    dy_ref[...] += jax.lax.dot_general(
-        da_t, x_ref[...].astype(jnp.float32), (((1,), (0,)), ((), ())),
-        preferred_element_type=jnp.float32) * inv_tau_ref[0]
-
-
-# ---------------------------------------------------------------------------
-# pallas_call wrappers
-# ---------------------------------------------------------------------------
+    dy_ref[...] += _contract(da_t, x_ref) * inv_tau_ref[0]
 
 
 def row_col_lse(x, y, inv_tau, *, bm=128, bn=128, interpret=False):

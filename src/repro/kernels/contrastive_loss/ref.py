@@ -39,3 +39,11 @@ def contrastive_grads_ref(x, y, log_tau):
 
 def loss_ref(x, y, log_tau):
     return contrastive_fwd_ref(x, y, log_tau)[0]
+
+
+def loss_and_grads_ref(x, y, log_tau):
+    """(loss, dX, dY, dlog_tau) in one call — the materializing baseline
+    timed by benchmarks/kernel_bench.py against the fused paths."""
+    loss = loss_ref(x, y, log_tau)
+    dx, dy, dlog_tau = contrastive_grads_ref(x, y, log_tau)
+    return loss, dx, dy, dlog_tau

@@ -1,6 +1,6 @@
 """Pallas TPU kernel: Mamba2 SSD chunked scan.
 
-TPU adaptation of SSD (DESIGN.md §2): the chunk-quadratic term runs on the
+TPU adaptation of SSD (DESIGN.md §3): the chunk-quadratic term runs on the
 MXU as (chunk × chunk) matmuls entirely in VMEM; the inter-chunk recurrence is
 carried in a VMEM scratch state across the innermost (chunk) grid axis, so the
 only HBM traffic is x/B/C/dt in and y out — the (l × l) semiseparable matrix

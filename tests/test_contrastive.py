@@ -1,9 +1,11 @@
-"""Unit + property tests for the contrastive loss (paper §3)."""
+"""Unit tests for the contrastive loss (paper §3).
+
+Hypothesis-based property tests live in test_contrastive_properties.py so
+that this module collects cleanly on environments without ``hypothesis``.
+"""
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
-from hypothesis import given, settings, strategies as hst
 
 from repro.core.contrastive import (contrastive_loss, normalized_train_loss,
                                     similarity)
@@ -36,33 +38,6 @@ def test_perfect_alignment_minimizes():
     assert float(loss_aligned) < 0.05
     assert float(loss_aligned) < float(loss_random)
     assert float(m["i2t_top1"]) == 1.0
-
-
-@settings(max_examples=25, deadline=None)
-@given(b=hst.integers(2, 24), d=hst.integers(2, 32),
-       seed=hst.integers(0, 2**30), log_tau=hst.floats(-3.0, 1.0))
-def test_loss_nonnegative_and_symmetric(b, d, seed, log_tau):
-    """Properties: loss >= 0 (diag is one of the LSE terms); swapping the
-    modalities leaves the loss invariant (row<->col exchange)."""
-    rng = np.random.default_rng(seed)
-    x, y = _unit(rng, b, d), _unit(rng, b, d)
-    tau = float(np.exp(log_tau))
-    l1, _ = contrastive_loss(x, y, tau)
-    l2, _ = contrastive_loss(y, x, tau)
-    assert float(l1) >= -1e-5
-    np.testing.assert_allclose(float(l1), float(l2), rtol=1e-5, atol=1e-6)
-
-
-@settings(max_examples=15, deadline=None)
-@given(seed=hst.integers(0, 2**30))
-def test_permutation_invariance(seed):
-    """Permuting the pair order must not change the loss."""
-    rng = np.random.default_rng(seed)
-    x, y = _unit(rng, 12, 8), _unit(rng, 12, 8)
-    perm = rng.permutation(12)
-    l1, _ = contrastive_loss(x, y, 0.3)
-    l2, _ = contrastive_loss(x[perm], y[perm], 0.3)
-    np.testing.assert_allclose(float(l1), float(l2), rtol=1e-5, atol=1e-6)
 
 
 def test_gradient_row_stochasticity():

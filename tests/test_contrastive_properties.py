@@ -1,0 +1,47 @@
+"""Hypothesis property tests for the contrastive loss (paper §3).
+
+Kept separate from test_contrastive.py and guarded with ``importorskip`` so
+the suite collects cleanly on bare environments without ``hypothesis``; the
+property tests still run wherever it is installed.
+"""
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as hst  # noqa: E402
+
+import jax.numpy as jnp  # noqa: E402
+
+from repro.core.contrastive import contrastive_loss  # noqa: E402
+
+
+def _unit(rng, b, d):
+    z = rng.standard_normal((b, d)).astype(np.float32)
+    return jnp.asarray(z / np.linalg.norm(z, axis=1, keepdims=True))
+
+
+@settings(max_examples=25, deadline=None)
+@given(b=hst.integers(2, 24), d=hst.integers(2, 32),
+       seed=hst.integers(0, 2**30), log_tau=hst.floats(-3.0, 1.0))
+def test_loss_nonnegative_and_symmetric(b, d, seed, log_tau):
+    """Properties: loss >= 0 (diag is one of the LSE terms); swapping the
+    modalities leaves the loss invariant (row<->col exchange)."""
+    rng = np.random.default_rng(seed)
+    x, y = _unit(rng, b, d), _unit(rng, b, d)
+    tau = float(np.exp(log_tau))
+    l1, _ = contrastive_loss(x, y, tau)
+    l2, _ = contrastive_loss(y, x, tau)
+    assert float(l1) >= -1e-5
+    np.testing.assert_allclose(float(l1), float(l2), rtol=1e-5, atol=1e-6)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=hst.integers(0, 2**30))
+def test_permutation_invariance(seed):
+    """Permuting the pair order must not change the loss."""
+    rng = np.random.default_rng(seed)
+    x, y = _unit(rng, 12, 8), _unit(rng, 12, 8)
+    perm = rng.permutation(12)
+    l1, _ = contrastive_loss(x, y, 0.3)
+    l2, _ = contrastive_loss(x[perm], y[perm], 0.3)
+    np.testing.assert_allclose(float(l1), float(l2), rtol=1e-5, atol=1e-6)

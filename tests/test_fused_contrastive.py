@@ -1,0 +1,315 @@
+"""Single-pass fused contrastive kernels (DESIGN.md §2.3-§2.4).
+
+Covers what tests/test_kernels.py's long-standing sweeps do not: the exact
+launch count (forward + backward = 2 pallas_calls), bf16 gradient parity,
+rectangular blocks through the public op, the block autotuner's VMEM model
+and its non-multiple-of-8 error, old-vs-new path equivalence, and the
+check_bench regression gate.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.contrastive_loss import kernel, ops
+from repro.kernels.contrastive_loss import ref as cl_ref
+
+
+def _unit(key, b, d, dtype=jnp.float32):
+    z = jax.random.normal(key, (b, d), jnp.float32)
+    z = z / jnp.linalg.norm(z, axis=1, keepdims=True)
+    return z.astype(dtype)
+
+
+def _pair(b, d, dtype=jnp.float32, seed=0):
+    k1, k2 = jax.random.split(jax.random.key(seed + b * d))
+    return _unit(k1, b, d, dtype), _unit(k2, b, d, dtype)
+
+
+# ---------------------------------------------------------------------------
+# launch count: one forward sweep + one backward sweep
+# ---------------------------------------------------------------------------
+
+
+def test_loss_and_grad_use_exactly_two_pallas_launches(monkeypatch):
+    calls = []
+    real = kernel.pl.pallas_call
+
+    def counting(*args, **kwargs):
+        calls.append(kwargs.get("grid"))
+        return real(*args, **kwargs)
+
+    monkeypatch.setattr(kernel.pl, "pallas_call", counting)
+    x, y = _pair(32, 16)
+    lt = jnp.asarray(-1.0)
+    loss, grads_ = jax.value_and_grad(
+        lambda x, y, t: ops.fused_contrastive_loss(x, y, t, True),
+        argnums=(0, 1, 2))(x, y, lt)
+    assert len(calls) == 2, f"expected 2 launches, saw grids {calls}"
+    assert np.isfinite(float(loss))
+
+
+def test_legacy_path_uses_four_launches(monkeypatch):
+    calls = []
+    real = kernel.pl.pallas_call
+
+    def counting(*args, **kwargs):
+        calls.append(kwargs.get("grid"))
+        return real(*args, **kwargs)
+
+    monkeypatch.setattr(kernel.pl, "pallas_call", counting)
+    x, y = _pair(32, 16)
+    ops.fused_contrastive_loss_4pass(x, y, jnp.asarray(-1.0), True)
+    assert len(calls) == 4, f"expected 4 launches, saw grids {calls}"
+
+
+# ---------------------------------------------------------------------------
+# value/gradient parity: bf16, rectangular blocks, old-vs-new
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("b,d", [(32, 16), (64, 32), (128, 48)])
+def test_bf16_value_and_grad_parity(b, d):
+    x, y = _pair(b, d, jnp.bfloat16)
+    lt = jnp.asarray(-0.8)
+    ref_loss = cl_ref.loss_ref(x, y, lt)
+    gx_r, gy_r, gt_r = cl_ref.contrastive_grads_ref(x, y, lt)
+    loss, (gx, gy, gt) = jax.value_and_grad(
+        lambda x, y, t: ops.fused_contrastive_loss(x, y, t, True),
+        argnums=(0, 1, 2))(x, y, lt)
+    assert gx.dtype == jnp.bfloat16 and gy.dtype == jnp.bfloat16
+    np.testing.assert_allclose(float(loss), float(ref_loss),
+                               rtol=2e-2, atol=2e-2)
+    np.testing.assert_allclose(np.asarray(gx, np.float32),
+                               np.asarray(gx_r), atol=2e-2)
+    np.testing.assert_allclose(np.asarray(gy, np.float32),
+                               np.asarray(gy_r), atol=2e-2)
+    np.testing.assert_allclose(float(gt), float(gt_r), rtol=2e-2, atol=2e-2)
+
+
+@pytest.mark.parametrize("bm,bn", [(16, 32), (32, 8), (8, 64), (64, 64)])
+def test_rectangular_blocks_match_reference(bm, bn):
+    b, d = 64, 24
+    x, y = _pair(b, d)
+    lt = jnp.asarray(-1.2)
+    loss, (gx, gy, gt) = jax.value_and_grad(
+        lambda x, y, t: ops.fused_contrastive_loss(x, y, t, True, bm, bn),
+        argnums=(0, 1, 2))(x, y, lt)
+    np.testing.assert_allclose(float(loss), float(cl_ref.loss_ref(x, y, lt)),
+                               rtol=1e-5, atol=1e-5)
+    gx_r, gy_r, gt_r = cl_ref.contrastive_grads_ref(x, y, lt)
+    np.testing.assert_allclose(np.asarray(gx), np.asarray(gx_r), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(gy), np.asarray(gy_r), atol=1e-5)
+    np.testing.assert_allclose(float(gt), float(gt_r), rtol=1e-4, atol=1e-6)
+
+
+def test_single_pass_matches_legacy_4pass():
+    x, y = _pair(96, 32)
+    lt = jnp.asarray(-0.5)
+    l_new, (gx, gy, gt) = jax.value_and_grad(
+        lambda x, y, t: ops.fused_contrastive_loss(x, y, t, True),
+        argnums=(0, 1, 2))(x, y, lt)
+    l_old, dx, dy, dtau = ops.fused_contrastive_loss_4pass(x, y, lt, True)
+    np.testing.assert_allclose(float(l_new), float(l_old), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(gx), np.asarray(dx), atol=1e-6)
+    np.testing.assert_allclose(np.asarray(gy), np.asarray(dy), atol=1e-6)
+    np.testing.assert_allclose(float(gt), float(dtau), rtol=1e-5, atol=1e-7)
+
+
+def test_fused_loss_and_lse_matches_reference():
+    x, y = _pair(48, 16)
+    lt = jnp.asarray(-1.0)
+    loss, rlse, clse = ops.fused_loss_and_lse(x, y, lt, True)
+    ref_loss, rlse_r, clse_r, _ = cl_ref.contrastive_fwd_ref(x, y, lt)
+    np.testing.assert_allclose(float(loss), float(ref_loss), rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(rlse), np.asarray(rlse_r),
+                               atol=1e-5)
+    np.testing.assert_allclose(np.asarray(clse), np.asarray(clse_r),
+                               atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# block autotuner
+# ---------------------------------------------------------------------------
+
+
+def test_pick_blocks_rejects_non_multiple_of_8():
+    with pytest.raises(ValueError, match="multiple of 8"):
+        ops.pick_blocks(12, 64)
+    with pytest.raises(ValueError, match="multiple of 8"):
+        ops.pick_blocks(500, 64)
+
+
+def test_pick_blocks_rejects_bad_overrides():
+    with pytest.raises(ValueError, match="bm=48"):
+        ops.pick_blocks(64, 16, bm=48)
+    with pytest.raises(ValueError, match="bn=12"):
+        ops.pick_blocks(64, 16, bn=12)
+
+
+def test_pick_blocks_prefers_large_tiles_within_budget():
+    bm, bn = ops.pick_blocks(8192, 256)
+    assert (bm, bn) == (512, 256)
+    # larger D shrinks the feasible tile; blocks divide B; model stays in budget
+    bm2, bn2 = ops.pick_blocks(8192, 4096)
+    assert 8192 % bm2 == 0 and 8192 % bn2 == 0
+    assert ops.block_bytes(bm2, bn2, 4096, 4) <= ops.DEFAULT_VMEM_BUDGET
+    assert bm2 * bn2 <= bm * bn
+    # explicit overrides win
+    assert ops.pick_blocks(8192, 256, bm=128, bn=128) == (128, 128)
+
+
+def test_pick_blocks_small_batches_stay_blockwise():
+    for b in (8, 16, 24, 48, 104):
+        bm, bn = ops.pick_blocks(b, 32)
+        assert b % bm == 0 and b % bn == 0 and bm >= 8 and bn >= 8
+
+
+def test_autotune_timed_sweep_returns_feasible_pair():
+    bm, bn = ops.autotune_blocks(32, 16, timed=True, interpret=True, iters=1)
+    assert 32 % bm == 0 and 32 % bn == 0
+    # cached on second call (same key, iters included)
+    assert ops.autotune_blocks(32, 16, timed=True, interpret=True,
+                               iters=1) == (bm, bn)
+
+
+# ---------------------------------------------------------------------------
+# plumbing: core.contrastive and gradaccum overrides
+# ---------------------------------------------------------------------------
+
+
+def test_fused_kernel_loss_autodetects_cpu_interpret():
+    from repro.core.contrastive import contrastive_loss, fused_kernel_loss
+    x, y = _pair(32, 16)
+    loss, _ = fused_kernel_loss(x, y, 0.3)        # interpret=None -> detect
+    ref_loss, _ = contrastive_loss(x, y, 0.3)
+    np.testing.assert_allclose(float(loss), float(ref_loss), rtol=1e-5)
+
+
+def test_gradaccum_plumbs_block_overrides_to_kernel():
+    from repro.core.contrastive import contrastive_loss, fused_kernel_loss
+    from repro.core.gradaccum import contrastive_step
+
+    key = jax.random.key(3)
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    b, din, d = 32, 12, 16
+    params = {"wi": 0.3 * jax.random.normal(k1, (din, d)),
+              "wt": 0.3 * jax.random.normal(k2, (din, d)),
+              "log_tau": jnp.asarray(-1.0)}
+    batch = {"images": jax.random.normal(k3, (b, din)),
+             "texts": jax.random.normal(k4, (b, din))}
+
+    def norm(z):
+        return z / jnp.linalg.norm(z, axis=-1, keepdims=True)
+
+    enc_i = lambda p, x: norm(jnp.tanh(x @ p["wi"]))   # noqa: E731
+    enc_t = lambda p, y: norm(jnp.tanh(y @ p["wt"]))   # noqa: E731
+
+    l_ref, _, g_ref = contrastive_step(enc_i, enc_t, params, batch, 4,
+                                       loss_fn=contrastive_loss)
+    l_k, _, g_k = contrastive_step(
+        enc_i, enc_t, params, batch, 4, loss_fn=fused_kernel_loss,
+        loss_opts={"interpret": True, "bm": 8, "bn": 16})
+    np.testing.assert_allclose(float(l_ref), float(l_k), rtol=1e-5)
+    for k in g_ref:
+        np.testing.assert_allclose(np.asarray(g_ref[k]), np.asarray(g_k[k]),
+                                   rtol=1e-4, atol=1e-6, err_msg=k)
+
+
+# ---------------------------------------------------------------------------
+# perf-regression gate (scripts/check_bench.py)
+# ---------------------------------------------------------------------------
+
+
+def _bench(us_by_name):
+    # x1000 puts synthetic entries above check_bench's 50ms gating floor
+    return {"entries": {k: {"us": v * 1000.0, "gbps": 1.0}
+                        for k, v in us_by_name.items()}}
+
+
+def test_check_bench_ignores_sub_floor_entries():
+    from scripts.check_bench import THRESHOLD, compare
+    base = {"entries": {"tiny/fwd": {"us": 1000.0, "gbps": 1.0}}}
+    new = {"entries": {"tiny/fwd": {"us": 9000.0, "gbps": 1.0}}}
+    assert compare(new, base, THRESHOLD) == []   # 9x, but below 50ms floor
+
+
+def test_check_bench_flags_only_regressions():
+    from scripts.check_bench import compare
+    base = _bench({"fused2/B512_D256/fwd": 100.0,
+                   "fused2/B512_D256/fwdbwd": 200.0,
+                   "old4/B512_D256/fwd": 150.0})
+    ok = _bench({"fused2/B512_D256/fwd": 129.9,       # < 1.3x: fine
+                 "fused2/B512_D256/fwdbwd": 150.0,    # faster: fine
+                 "new/path/fwd": 9999.0})             # unmatched: ungated
+    assert compare(ok, base) == []
+    bad = _bench({"fused2/B512_D256/fwd": 131.0})
+    failures = compare(bad, base)
+    assert len(failures) == 1 and "fused2/B512_D256/fwd" in failures[0]
+
+
+def test_check_bench_cli_roundtrip(tmp_path):
+    import json
+
+    from scripts.check_bench import main
+    base = tmp_path / "base.json"
+    new = tmp_path / "new.json"
+    base.write_text(json.dumps(_bench({"k/fwd": 100.0})))
+    new.write_text(json.dumps(_bench({"k/fwd": 105.0})))
+    assert main([str(new), "--baseline", str(base)]) == 0
+    new.write_text(json.dumps(_bench({"k/fwd": 250.0})))
+    assert main([str(new), "--baseline", str(base)]) == 1
+    assert main([str(new), "--baseline", str(tmp_path / "none.json")]) == 0
+
+
+def test_check_bench_normalizes_uniform_host_drift():
+    from scripts.check_bench import compare
+    names = [f"{p}/B512_D256/{t}" for p in ("ref", "old4", "fused2")
+             for t in ("fwd", "fwdbwd")]
+    base = _bench({n: 100.0 for n in names})
+    # everything uniformly 1.6x slower (host drift, >= 6 entries): no failure
+    drifted = _bench({n: 160.0 for n in names})
+    assert compare(drifted, base) == []
+    # one path regresses 2x on top of the drift: only those entries flagged
+    drifted["entries"]["fused2/B512_D256/fwd"]["us"] = 320_000.0
+    drifted["entries"]["fused2/B512_D256/fwdbwd"]["us"] = 320_000.0
+    failures = compare(drifted, base)
+    assert len(failures) == 2
+    assert all("fused2" in f for f in failures)
+
+
+def test_check_bench_ref_anchor_catches_shared_path_regression():
+    from scripts.check_bench import compare
+    names = [f"{p}/B2048_D{dd}/{t}" for p in ("ref", "old4", "fused2")
+             for dd in (256, 1024) for t in ("fwd", "fwdbwd")]
+    base = _bench({n: 100.0 for n in names})
+    # a shared kernel helper slows BOTH Pallas paths 2x; ref is untouched.
+    # 2/3 of entries move, but the ref-anchored host factor stays ~1.0.
+    new = _bench({n: (100.0 if n.startswith("ref/") else 200.0)
+                  for n in names})
+    failures = compare(new, base)
+    assert len(failures) == 8
+    assert all("ref/" not in f for f in failures)
+
+
+def test_check_bench_no_floor_for_compiled_baselines():
+    from scripts.check_bench import compare
+    # sub-50ms entries, but both sides ran compiled (interpret False):
+    # accelerator timings are stable, so they must gate.
+    base = {"meta": {"interpret": False},
+            "entries": {"fused2/B8192_D1024/fwdbwd": {"us": 4000.0}}}
+    new = {"meta": {"interpret": False},
+           "entries": {"fused2/B8192_D1024/fwdbwd": {"us": 8000.0}}}
+    assert len(compare(new, base)) == 1
+    # same numbers under interpret mode stay advisory (below the floor)
+    base["meta"]["interpret"] = True
+    assert compare(new, base) == []
+
+
+def test_bwd_fused_vmem_fallback_threshold():
+    # paper-scale shard: (B, D) fp32 dY carrier alone exceeds VMEM
+    assert not ops.bwd_fits_fused(65536, 1024, 512, 256, 4)
+    assert not ops.bwd_fits_fused(8192, 1024, 512, 256, 4)
+    # bench/test scales fit comfortably
+    assert ops.bwd_fits_fused(2048, 256, 256, 256, 4)
+    assert ops.bwd_fits_fused(512, 1024, 128, 128, 4)
