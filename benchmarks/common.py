@@ -1,9 +1,16 @@
 """Shared benchmark helpers."""
 import dataclasses
+import json
 import time
 
 import jax
 import numpy as np
+
+
+def write_json(path: str, payload: dict) -> None:
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1, sort_keys=True)
+        f.write("\n")
 
 
 def timeit(fn, *args, iters=5, warmup=2):

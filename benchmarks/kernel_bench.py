@@ -18,13 +18,12 @@ perf trajectory that scripts/check_bench.py regresses against.
 from __future__ import annotations
 
 import argparse
-import json
 import time
 
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import csv_line
+from benchmarks.common import csv_line, write_json  # noqa: F401 (run.py API)
 from repro.kernels.contrastive_loss import ops, ref
 from repro.kernels.contrastive_loss.ops import pick_blocks
 
@@ -74,12 +73,6 @@ def _paths(b, d, interpret):
             jax.jit(jax.value_and_grad(fused, argnums=(0, 1, 2))),
         ),
     }
-
-
-def write_json(path: str, payload: dict) -> None:
-    with open(path, "w") as f:
-        json.dump(payload, f, indent=1, sort_keys=True)
-        f.write("\n")
 
 
 def run(json_path: str | None = None, shapes=None) -> dict:

@@ -1,8 +1,10 @@
 # One function per paper table. Prints ``name,us_per_call,derived`` CSV.
 #
-# ``--json`` additionally runs the kernel perf bench (benchmarks.kernel_bench),
-# rewrites BENCH_kernels.json, and gates the fresh numbers against the
-# previously committed content via scripts.check_bench (>1.3x fails).
+# ``--json`` additionally runs the committed perf benches (contrastive
+# kernels + zero-shot serving), rewrites BENCH_kernels.json /
+# BENCH_serving.json, and gates the fresh numbers against the previously
+# committed content via scripts.check_bench (>1.3x, plus the serving
+# bench's intra-run must_beat invariants).
 import argparse
 import importlib
 import json
@@ -17,49 +19,60 @@ TABLES = {
     "theory": "benchmarks.theory_bound",     # Theorems 1-2 gap vs B
     "roofline": "benchmarks.roofline_table", # §Roofline aggregation
     "kernels": "benchmarks.kernel_bench",    # contrastive kernel perf (DESIGN.md §5)
+    "serving": "benchmarks.serving_bench",   # similarity->top-k + e2e (DESIGN.md §6.4)
 }
 
 # slow full-sweep benches only run when selected explicitly (or via --json)
-_OPT_IN = {"kernels"}
+_OPT_IN = {"kernels", "serving"}
 
-BENCH_JSON = os.path.join(os.path.dirname(os.path.dirname(
-    os.path.abspath(__file__))), "BENCH_kernels.json")
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+# gated perf-trajectory files: bench module -> committed baseline JSON
+GATED = {
+    "kernels": os.path.join(_ROOT, "BENCH_kernels.json"),
+    "serving": os.path.join(_ROOT, "BENCH_serving.json"),
+}
 
 
-def _run_kernel_bench_json() -> int:
-    """Run the kernel bench and gate it against the checked-out
-    BENCH_kernels.json. On pass the file is refreshed (committing it is how
-    the perf trajectory ratchets forward — review its git diff, since
-    sub-threshold drift accumulates by design); on failure the baseline is
-    kept and the fresh numbers go to BENCH_kernels.json.new, so re-running
-    can't silently accept a regression by comparing it against itself.
-    Returns rc."""
-    from benchmarks import kernel_bench
+def _run_bench_json(name: str, json_path: str) -> int:
+    """Run bench ``name`` and gate it against the checked-out JSON. On pass
+    the file is refreshed (committing it is how the perf trajectory ratchets
+    forward — review its git diff, since sub-threshold drift accumulates by
+    design); on failure the baseline is kept and the fresh numbers go to
+    ``<file>.new``, so re-running can't silently accept a regression by
+    comparing it against itself. Returns rc."""
     from scripts import check_bench
 
+    mod = importlib.import_module(TABLES[name])
     baseline = None
-    if os.path.exists(BENCH_JSON):
-        with open(BENCH_JSON) as f:
+    if os.path.exists(json_path):
+        with open(json_path) as f:
             baseline = json.load(f)
-    fresh = kernel_bench.run()
+    fresh = mod.run()
     if baseline is None:
-        kernel_bench.write_json(BENCH_JSON, fresh)
-        print("run.py --json: no prior baseline; wrote initial "
-              f"{BENCH_JSON}", file=sys.stderr)
+        failures = check_bench.must_beat_failures(fresh)
+        for line in failures:
+            print(f"check_bench[{name}]: REGRESSION {line}", file=sys.stderr)
+        if failures:
+            mod.write_json(json_path + ".new", fresh)
+            return 1
+        mod.write_json(json_path, fresh)
+        print(f"run.py --json: no prior baseline; wrote initial "
+              f"{json_path}", file=sys.stderr)
         return 0
-    print(f"check_bench: {check_bench.summarize(fresh, baseline)}")
+    print(f"check_bench[{name}]: {check_bench.summarize(fresh, baseline)}")
     failures = check_bench.compare(fresh, baseline)
     for line in failures:
-        print(f"check_bench: REGRESSION {line}", file=sys.stderr)
+        print(f"check_bench[{name}]: REGRESSION {line}", file=sys.stderr)
     if failures:
-        kernel_bench.write_json(BENCH_JSON + ".new", fresh)
+        mod.write_json(json_path + ".new", fresh)
         print(f"run.py --json: baseline kept; fresh (regressed) numbers in "
-              f"{BENCH_JSON}.new", file=sys.stderr)
+              f"{json_path}.new", file=sys.stderr)
         return 1
-    kernel_bench.write_json(BENCH_JSON, fresh)
-    if os.path.exists(BENCH_JSON + ".new"):
-        os.remove(BENCH_JSON + ".new")  # stale output of an older failed run
-    print("check_bench: OK")
+    mod.write_json(json_path, fresh)
+    if os.path.exists(json_path + ".new"):
+        os.remove(json_path + ".new")  # stale output of an older failed run
+    print(f"check_bench[{name}]: OK")
     return 0
 
 
@@ -67,8 +80,8 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", choices=sorted(TABLES), default=None)
     ap.add_argument("--json", action="store_true",
-                    help="run the kernel bench, rewrite BENCH_kernels.json, "
-                         "and fail on >1.3x regression vs the committed file")
+                    help="run the gated perf benches, rewrite BENCH_*.json, "
+                         "and fail on >1.3x regression vs the committed files")
     args = ap.parse_args()
     print("name,us_per_call,derived")
     failed = 0
@@ -84,11 +97,12 @@ def main() -> None:
             print(f"{name}/ERROR,0,{type(e).__name__}:{e}", file=sys.stderr)
             traceback.print_exc()
     if args.json:
-        if args.only not in (None, "kernels"):
+        gated = [n for n in GATED if args.only in (None, n)]
+        if not gated:
             print(f"run.py: --json ignored with --only {args.only} "
-                  "(the kernel gate is out of scope)", file=sys.stderr)
-        else:
-            failed += _run_kernel_bench_json()
+                  "(no perf gate covers it)", file=sys.stderr)
+        for name in gated:
+            failed += _run_bench_json(name, GATED[name])
     sys.exit(1 if failed else 0)
 
 

@@ -1,0 +1,156 @@
+"""Zero-shot serving perf bench: fused similarity→top-k vs the materializing
+matmul+argsort reference, plus end-to-end classify latency through the
+ZeroShotService (DESIGN.md §6.4).
+
+Kernel comparison at n_classes ∈ {1k, 16k, 100k} (b=128, d=256, k=5):
+
+  topk_ref   : jnp matmul -> stable argsort -> slice (materializes (b, n))
+  topk_fused : blockwise Pallas kernel, running top-k in VMEM scratch
+
+The 100k fused entry carries ``must_beat: topk_ref`` — scripts/check_bench.py
+fails the gate if the kernel ever stops beating the reference at the label
+scale the subsystem exists for. End-to-end entries time a warm classify()
+(micro-batcher + registry hit + fused kernel) on a smoke dual encoder;
+they are recorded for the trajectory but marked ``ungated`` (thread/deadline
+jitter would flap the 1.3x gate).
+
+``run(json_path=...)`` emits BENCH_serving.json, the committed perf
+trajectory regressed by scripts/check_bench.py via benchmarks/run.py --json.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import csv_line, write_json
+from repro.kernels.similarity_topk import ops as topk_ops
+from repro.kernels.similarity_topk import ref as topk_ref
+
+N_CLASSES = (1_000, 16_000, 100_000)
+B, D, K = 128, 256, 5
+E2E_BATCH = 16
+MUST_BEAT_N = 100_000
+
+
+def _timeit(fn, *args, iters):
+    """Min-of-N µs/call (same robustness rationale as kernel_bench)."""
+    jax.block_until_ready(fn(*args))          # compile + warm
+    best = float("inf")
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e6  # us
+
+
+def _unit(key, rows, d):
+    z = jax.random.normal(key, (rows, d), jnp.float32)
+    return z / jnp.linalg.norm(z, axis=1, keepdims=True)
+
+
+def _kernel_entries(entries, n_classes, interpret):
+    for n in n_classes:
+        k1, k2 = jax.random.split(jax.random.key(n))
+        x = _unit(k1, B, D)
+        c = _unit(k2, n, D)
+        iters = 2 if n >= 100_000 else 3
+        ref_fn = jax.jit(lambda x, c: topk_ref.similarity_topk_ref(x, c, K))
+        fused_fn = jax.jit(lambda x, c: topk_ops.similarity_topk(
+            x, c, K, interpret=interpret))
+        ref_key, fused_key = f"topk_ref/N{n}", f"topk_fused/N{n}"
+        entries[ref_key] = {"us": round(_timeit(ref_fn, x, c, iters=iters), 1)}
+        entries[fused_key] = {
+            "us": round(_timeit(fused_fn, x, c, iters=iters), 1)}
+        entries[fused_key]["speedup_vs_ref"] = round(
+            entries[ref_key]["us"] / entries[fused_key]["us"], 2)
+        if n == MUST_BEAT_N:
+            entries[fused_key]["must_beat"] = ref_key
+        for key in (ref_key, fused_key):
+            csv_line(f"serving/{key}", entries[key]["us"],
+                     f"b={B};d={D};k={K}")
+
+
+def _e2e_entries(entries, interpret):
+    """Warm classify() latency through the full service stack."""
+    import dataclasses
+    import tempfile
+
+    from repro.configs import get_arch, smoke_variant
+    from repro.data import Tokenizer, caption_corpus, make_world
+    from repro.data.synthetic import render_images
+    from repro.models import dual_encoder as de
+    from repro.serving import ZeroShotService
+
+    cfg = get_arch("basic-s")
+    cfg = dataclasses.replace(
+        cfg, image_tower=smoke_variant(cfg.image_tower),
+        text_tower=smoke_variant(cfg.text_tower), embed_dim=32)
+    rng = np.random.default_rng(0)
+    world = make_world(rng, n_classes=32,
+                       n_patches=cfg.image_tower.frontend_len,
+                       patch_dim=cfg.image_tower.d_model)
+    tok = Tokenizer.train(caption_corpus(world, rng, 300), vocab_size=400)
+    params = de.init_params(cfg, jax.random.key(0))
+    imgs = render_images(world, rng.integers(0, 32, E2E_BATCH), rng)
+
+    with tempfile.TemporaryDirectory() as td, \
+            ZeroShotService(cfg, params, tok, registry_dir=td,
+                            max_delay_ms=1.0, interpret=interpret) as svc:
+        svc.classify(imgs, world.class_names, k=5)   # compile + class matrix
+        lat = []
+        for _ in range(5):
+            t0 = time.perf_counter()
+            svc.classify(imgs, world.class_names, k=5)
+            lat.append(time.perf_counter() - t0)
+        us = min(lat) * 1e6
+        # ungated: this times the threaded micro-batcher's deadline waits and
+        # scheduler, not a kernel — it jitters 2x run-to-run on shared hosts
+        # and would make the 1.3x gate flappy; the topk_* entries carry it.
+        entries[f"e2e/classify_b{E2E_BATCH}"] = {
+            "us": round(us, 1),
+            "img_per_s": round(E2E_BATCH / (us * 1e-6), 1),
+            "ungated": True,
+        }
+        csv_line(f"serving/e2e/classify_b{E2E_BATCH}", us,
+                 f"{E2E_BATCH / (us * 1e-6):.1f}img/s")
+
+
+def run(json_path: str | None = None, n_classes=None, e2e: bool = True):
+    interpret = jax.default_backend() == "cpu"
+    entries: dict = {}
+    _kernel_entries(entries, n_classes or N_CLASSES, interpret)
+    if e2e:
+        _e2e_entries(entries, interpret)
+    result = {
+        "meta": {
+            "backend": jax.default_backend(),
+            "interpret": interpret,
+            "kernel_shape": {"b": B, "d": D, "k": K},
+            "n_classes": list(n_classes or N_CLASSES),
+        },
+        "entries": entries,
+    }
+    if json_path:
+        write_json(json_path, result)
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write BENCH_serving.json-style output here")
+    ap.add_argument("--smoke", action="store_true",
+                    help="small label spaces only (CI sanity, not a baseline)")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    run(json_path=args.json,
+        n_classes=[1_000, 4_000] if args.smoke else None,
+        e2e=not args.smoke)
+
+
+if __name__ == "__main__":
+    main()

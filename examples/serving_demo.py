@@ -1,28 +1,92 @@
-"""Batched serving demo: prefill + decode loop on a reduced llama3.2 config,
-plus a state-space (mamba2) engine to show the O(1)-state decode path.
+"""Zero-shot serving demo: the ZeroShotService over a briefly-trained BASIC
+dual encoder — micro-batched embedding, registry-cached class matrix, and the
+fused Pallas similarity→top-k kernel (DESIGN.md §6).
 
-  PYTHONPATH=src python examples/serving_demo.py
+  PYTHONPATH=src python examples/serving_demo.py --smoke
+
+--smoke runs everything on CPU in Pallas interpret mode (auto-detected), with
+a shorter training loop. The decode-loop engine demo this file used to hold
+lives on in `python -m repro.launch.serve`.
 """
+import argparse
+import dataclasses
+import tempfile
 import time
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_arch, smoke_variant
-from repro.models import transformer as tf
-from repro.serving import Engine
+from repro.core.gradaccum import contrastive_step
+from repro.data import Tokenizer, caption_corpus, contrastive_batch, make_world
+from repro.data.synthetic import render_images
+from repro.models import dual_encoder as de
+from repro.optim import AdaFactorW, apply_updates
+from repro.serving import ZeroShotService
 
-for arch in ("llama3.2-1b", "mamba2-130m"):
-    cfg = smoke_variant(get_arch(arch))
-    params = tf.init_params(cfg, jax.random.key(0))
-    eng = Engine(cfg, params, cache_len=128,
-                 moe_args={"dispatch": "dense"})
-    rng = np.random.default_rng(0)
-    prompts = rng.integers(4, cfg.vocab, (4, 12)).astype(np.int32)
+ap = argparse.ArgumentParser()
+ap.add_argument("--smoke", action="store_true",
+                help="CPU-sized run: tiny towers, short training")
+ap.add_argument("--steps", type=int, default=None)
+args = ap.parse_args()
+steps = args.steps if args.steps is not None else (40 if args.smoke else 120)
+
+cfg = get_arch("basic-s")
+cfg = dataclasses.replace(cfg,
+                          image_tower=smoke_variant(cfg.image_tower),
+                          text_tower=smoke_variant(cfg.text_tower),
+                          embed_dim=32)
+rng = np.random.default_rng(0)
+world = make_world(rng, n_classes=16,
+                   n_patches=cfg.image_tower.frontend_len,
+                   patch_dim=cfg.image_tower.d_model, noise=0.2)
+tok = Tokenizer.train(caption_corpus(world, rng, 400), vocab_size=400)
+
+print(f"training the dual encoder for {steps} steps ...")
+params = de.init_params(cfg, jax.random.key(0))
+opt = AdaFactorW()
+st = opt.init(params)
+enc_i = lambda p, im: de.encode_image(cfg, p, im)   # noqa: E731
+enc_t = lambda p, tx: de.encode_text(cfg, p, tx)    # noqa: E731
+
+
+@jax.jit
+def step(params, st, batch):
+    _, _, g = contrastive_step(enc_i, enc_t, params, batch, 2)
+    up, st = opt.update(g, st, params, 2e-3)
+    return apply_updates(params, up), st
+
+
+for _ in range(steps):
+    batch, _ = contrastive_batch(world, tok, 24, rng)
+    params, st = step(params, st, jax.tree.map(jnp.asarray, batch))
+
+with tempfile.TemporaryDirectory() as registry_dir, \
+        ZeroShotService(cfg, params, tok, registry_dir=registry_dir,
+                        max_delay_ms=1.0) as svc:
+    cls = rng.integers(0, world.n_classes, 12)
+    imgs = render_images(world, cls, rng)
 
     t0 = time.time()
-    out = eng.generate(prompts, 24, temperature=0.8, seed=0)
-    dt = time.time() - t0
-    print(f"[{arch}] {out.size} tokens in {dt:.2f}s "
-          f"({out.size/dt:.0f} tok/s incl. compile)")
-    print("  sample:", out[0, :12].tolist())
+    res = svc.classify(imgs, world.class_names, k=5)
+    print(f"\ncold classify (compile + class matrix v{res.version}): "
+          f"{time.time()-t0:.2f}s")
+    t0 = time.time()
+    res = svc.classify(imgs, world.class_names, k=5)
+    print(f"warm classify (registry hit):                {time.time()-t0:.3f}s")
+
+    top1 = float(np.mean(res.indices[:, 0] == cls))
+    print(f"\ntop-1 {top1:.2f} (chance {1/world.n_classes:.2f}) — sample:")
+    for r in range(3):
+        truth = world.class_names[int(cls[r])]
+        print(f"  truth {truth!r:18s} top-5 {res.top_names(r)}")
+
+    queries = [f"a photo of a {world.class_names[int(c)]}" for c in cls[:4]]
+    gallery = svc.embed_images(imgs)
+    _, ridx = svc.retrieve(queries, gallery, k=3)
+    print("\ntext->image retrieval (gallery = the 12 demo images):")
+    for q, row in zip(queries[:2], ridx[:2]):
+        print(f"  {q!r} -> gallery rows {row.tolist()}")
+
+    print("\nservice stats:", svc.stats())

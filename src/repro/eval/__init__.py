@@ -2,6 +2,7 @@ from repro.eval.zero_shot import (  # noqa: F401
     class_embeddings,
     classify,
     evaluate_benchmark,
+    evaluate_with_service,
     mean_per_class_recall,
     retrieval_recall_at_k,
     topk_accuracy,

@@ -1,0 +1,5 @@
+from repro.kernels.similarity_topk.ops import (  # noqa: F401
+    classify,
+    similarity_topk,
+)
+from repro.kernels.similarity_topk.ref import similarity_topk_ref  # noqa: F401

@@ -1,0 +1,119 @@
+"""Public op: fused similarity→top-k over a class-embedding matrix.
+
+``similarity_topk(image_emb, class_emb, k)`` returns the top-k
+``(values, indices)`` of ``image_emb @ class_emb.T * inv_tau`` per row and
+matches ``ref.similarity_topk_ref`` exactly on ordering (descending value,
+ties to the lower class index) without ever materializing the (b, n_classes)
+logit matrix — peak memory of the kernel path is O(b·k + b·block) beyond the
+inputs (DESIGN.md §6.3). Handles arbitrary b (row padding) and n_classes not
+divisible by the class block (column masking inside the kernel). bf16 inputs
+are fed straight to the MXU with fp32 accumulation.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.similarity_topk import kernel
+
+_BM_CANDIDATES = (128, 64, 32, 16, 8)
+_BC_CANDIDATES = (4096, 2048, 1024, 512, 256, 128)
+MAX_K = 64  # the select/retire merge unrolls k rounds; keep it bounded
+
+# Per-step VMEM budget for the compiled kernel's block working set (same
+# 8 MiB headroom policy as the contrastive autotuner, DESIGN.md §2.4).
+DEFAULT_VMEM_BUDGET = 8 * 2 ** 20
+
+# Interpret mode (the CPU bench/test host) has no VMEM limit and its cost is
+# per-grid-step overhead, so the class block grows until the sweep is a
+# handful of steps (DESIGN.md §6.3).
+INTERPRET_BC = 8192
+
+
+def _round_up(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+def pick_bm(b: int) -> int:
+    """Largest row block ≤ 128 that keeps padding waste low: the smallest
+    sublane-aligned cover of b, capped at 128."""
+    cover = _round_up(b, 8)
+    for bm in _BM_CANDIDATES:
+        if bm <= cover:
+            return bm
+    return 8
+
+
+def block_bytes(bm: int, bc: int, d: int, k: int, itemsize: int) -> int:
+    """VMEM bytes per grid step: double-buffered class-row stream, the x
+    tile, the fp32 logit tile, and the merge's candidate-pool temporaries
+    (values + indices over bm×(k+bc))."""
+    return (2 * bc * d * itemsize + bm * d * itemsize
+            + bm * bc * 4 + 2 * bm * (bc + k) * 4)
+
+
+def pick_bc(n: int, d: int, k: int, bm: int, itemsize: int, *,
+            interpret: bool,
+            vmem_budget: int = DEFAULT_VMEM_BUDGET) -> int:
+    """Class-axis block. Interpret mode: as large as the class axis needs
+    (per-step overhead dominates). Compiled: largest candidate whose working
+    set fits the VMEM budget."""
+    cover = _round_up(n, 128)
+    if interpret:
+        return min(INTERPRET_BC, cover)
+    for bc in _BC_CANDIDATES:
+        if block_bytes(bm, bc, d, k, itemsize) <= vmem_budget:
+            return min(bc, cover)
+    return 128
+
+
+def similarity_topk(image_emb, class_emb, k: int, *, inv_tau=1.0,
+                    bm: int | None = None, bc: int | None = None,
+                    interpret: bool | None = None):
+    """Top-k similarities of each image row against every class row.
+
+    image_emb: (b, d); class_emb: (n, d); returns (values (b, k) fp32,
+    indices (b, k) int32), rows sorted descending, ties broken by lower
+    class index. ``interpret=None`` auto-detects the backend (compiled on
+    accelerators, interpreter on CPU).
+    """
+    b, d = image_emb.shape
+    n, d2 = class_emb.shape
+    if d != d2:
+        raise ValueError(f"embed dims differ: image {d} vs class {d2}")
+    k = int(k)
+    if not 1 <= k <= n:
+        raise ValueError(f"k={k} must be in [1, n_classes={n}]")
+    if k > MAX_K:
+        raise ValueError(f"k={k} > MAX_K={MAX_K} (the merge unrolls k rounds)")
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    bm = bm or pick_bm(b)
+    bc = bc or pick_bc(n, d, k, bm, image_emb.dtype.itemsize,
+                       interpret=interpret)
+    if bm % 8 != 0:
+        raise ValueError(f"bm={bm} must be a multiple of 8")
+    if k > bc:
+        raise ValueError(f"k={k} > class block bc={bc}: the running top-k "
+                         f"needs ≥ k real candidates per tile")
+
+    bp = _round_up(b, bm)
+    n_pad = _round_up(n, bc)
+    x = image_emb
+    if bp != b:
+        x = jnp.pad(x, ((0, bp - b), (0, 0)))
+    c = class_emb
+    if n_pad != n:
+        c = jnp.pad(c, ((0, n_pad - n), (0, 0)))
+
+    vals, idx = kernel.topk_fused(x, c, inv_tau, k=k, bm=bm, bc=bc,
+                                  n_classes=n, interpret=interpret)
+    return vals[:b], idx[:b]
+
+
+def classify(image_emb, class_emb, *, inv_tau=1.0, bm=None, bc=None,
+             interpret=None):
+    """Top-1 class id per row (b,) int32 via the fused kernel."""
+    _, idx = similarity_topk(image_emb, class_emb, 1, inv_tau=inv_tau,
+                             bm=bm, bc=bc, interpret=interpret)
+    return idx[:, 0]

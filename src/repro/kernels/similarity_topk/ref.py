@@ -1,0 +1,36 @@
+"""Pure-jnp oracle for the fused similarity→top-k kernel.
+
+Materializes the full (b, n_classes) logit matrix — the kernel must return
+the same top-k without ever forming it. Ordering contract: descending by
+logit, ties broken by LOWER class index (stable argsort of the negated
+logits preserves ascending index order among equal values).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def similarity_topk_ref(image_emb, class_emb, k: int, inv_tau=1.0):
+    """Top-k of ``image_emb @ class_emb.T * inv_tau``.
+
+    image_emb: (b, d), class_emb: (n, d) — any float dtype (accumulated in
+    fp32). Returns (values (b, k) fp32, indices (b, k) int32), sorted
+    descending, ties broken by lower class index.
+    """
+    logits = logits_ref(image_emb, class_emb, inv_tau)
+    order = jnp.argsort(-logits, axis=1, stable=True)
+    idx = order[:, :k]
+    vals = jnp.take_along_axis(logits, idx, axis=1)
+    return vals, idx.astype(jnp.int32)
+
+
+def logits_ref(image_emb, class_emb, inv_tau=1.0):
+    """The materializing similarity matrix (b, n) in fp32."""
+    return jnp.einsum("bd,nd->bn", image_emb.astype(jnp.float32),
+                      class_emb.astype(jnp.float32)) * inv_tau
+
+
+def classify_ref(image_emb, class_emb, inv_tau=1.0):
+    """argmax class id per row (b,) int32 — top-1 of the oracle."""
+    _, idx = similarity_topk_ref(image_emb, class_emb, 1, inv_tau)
+    return idx[:, 0]

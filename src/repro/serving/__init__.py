@@ -1,1 +1,6 @@
 from repro.serving.engine import Engine  # noqa: F401
+from repro.serving.embed import (  # noqa: F401
+    ClassEmbeddingRegistry,
+    MicroBatcher,
+    ZeroShotService,
+)

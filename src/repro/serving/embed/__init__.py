@@ -1,0 +1,10 @@
+from repro.serving.embed.batcher import MicroBatcher  # noqa: F401
+from repro.serving.embed.registry import (  # noqa: F401
+    ClassEmbeddingRegistry,
+    ClassMatrix,
+    params_fingerprint,
+)
+from repro.serving.embed.service import (  # noqa: F401
+    ClassifyResult,
+    ZeroShotService,
+)

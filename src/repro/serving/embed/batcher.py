@@ -1,0 +1,249 @@
+"""Async micro-batching embedding engine (DESIGN.md §6.1).
+
+Encoders have no decode loop, so the continuous-batching trick of the decode
+engine does not apply; its fixed-shape analog is MICRO-BATCHING: concurrent
+encode requests are queued per tower, coalesced into one of a small set of
+padded batch shapes (the bucket ladder), and flushed either when the largest
+bucket fills (size trigger) or when the oldest request has waited
+``max_delay_ms`` (deadline trigger). Callers get futures immediately; the
+flush path pads the coalesced batch up to the bucket size so every shape the
+towers ever compile is one of ``len(buckets)`` shapes per tower — the
+compiled-shape cache is keyed on ``(tower, bucket, example shape/dtype)``.
+
+Padding replicates the last real example (never zeros: an all-pad attention
+mask would produce NaN rows that, while sliced off, make debugging
+miserable); padded rows are dropped before futures resolve.
+
+The engine is model-agnostic: it batches any pytree-of-arrays payload and
+calls the per-tower ``encode_fns`` you hand it. ``ZeroShotService`` wires it
+to the dual encoder's towers.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from concurrent.futures import Future
+from typing import Callable, Dict, Sequence
+
+import jax
+import numpy as np
+
+DEFAULT_BUCKETS = (1, 2, 4, 8, 16, 32, 64)
+
+
+class _Group:
+    """One submit_many() call: a batched payload awaiting one future."""
+
+    __slots__ = ("payload", "n", "future", "t_submit")
+
+    def __init__(self, payload, n: int, t_submit: float):
+        self.payload = payload
+        self.n = n
+        self.future: Future = Future()
+        self.t_submit = t_submit
+
+
+def _leading(payload) -> int:
+    leaves = jax.tree_util.tree_leaves(payload)
+    if not leaves:
+        raise ValueError("empty payload")
+    n = leaves[0].shape[0]
+    if any(leaf.shape[0] != n for leaf in leaves):
+        raise ValueError("payload leaves disagree on the batch axis")
+    return n
+
+
+def _shape_sig(payload):
+    return tuple((tuple(leaf.shape[1:]), np.dtype(leaf.dtype).name)
+                 for leaf in jax.tree_util.tree_leaves(payload))
+
+
+class MicroBatcher:
+    """Queue → bucket → flush-on-size-or-deadline → futures.
+
+    encode_fns: tower name -> fn(batch pytree) -> (b, D) embeddings. Fns are
+    called as-is — jit them yourself with whatever argument discipline keeps
+    your params cache-friendly (the service passes closures over a jitted
+    (params, batch) fn, so params stay a real jit argument rather than
+    trace-time constants). The bucket ladder bounds how many batch shapes a
+    fn ever sees.
+    """
+
+    def __init__(self, encode_fns: Dict[str, Callable], *,
+                 buckets: Sequence[int] = DEFAULT_BUCKETS,
+                 max_delay_ms: float = 2.0, autostart: bool = True):
+        if not buckets or any(b <= 0 for b in buckets):
+            raise ValueError(f"bad bucket ladder {buckets}")
+        self.buckets = tuple(sorted(set(int(b) for b in buckets)))
+        self.max_delay = float(max_delay_ms) / 1e3
+        self._fns = dict(encode_fns)
+        self._pending: Dict[str, list] = {t: [] for t in self._fns}
+        self._cv = threading.Condition()
+        self._compiled: Dict[tuple, int] = {}   # shape-cache key -> hit count
+        self._stop = False
+        self._thread = None
+        self.stats = {"requests": 0, "size_flushes": 0, "deadline_flushes": 0,
+                      "manual_flushes": 0, "encoded_examples": 0,
+                      "padded_examples": 0, "batches": 0}
+        if autostart:
+            self.start()
+
+    # -- lifecycle ---------------------------------------------------------
+    @property
+    def running(self) -> bool:
+        return self._thread is not None and self._thread.is_alive()
+
+    def start(self):
+        if self.running:
+            return
+        self._stop = False
+        self._thread = threading.Thread(target=self._worker,
+                                        name="microbatcher", daemon=True)
+        self._thread.start()
+
+    def stop(self):
+        with self._cv:
+            self._stop = True
+            self._cv.notify_all()
+        if self._thread is not None:
+            self._thread.join(timeout=5.0)
+            self._thread = None
+        self.flush_now()  # drain anything left behind
+
+    # -- submission --------------------------------------------------------
+    def submit(self, tower: str, example) -> Future:
+        """One example (pytree WITHOUT batch axis) -> Future of (D,) emb."""
+        batched = jax.tree_util.tree_map(lambda a: np.asarray(a)[None],
+                                         example)
+        group = self._enqueue(tower, batched, 1)
+        out: Future = Future()
+        group.future.add_done_callback(
+            lambda f: out.set_exception(f.exception()) if f.exception()
+            else out.set_result(f.result()[0]))
+        return out
+
+    def submit_many(self, tower: str, payload) -> Future:
+        """A batched payload (pytree WITH batch axis) -> Future of (n, D).
+        The group is kept contiguous but batches with other pending work."""
+        payload = jax.tree_util.tree_map(np.asarray, payload)
+        return self._enqueue(tower, payload, _leading(payload)).future
+
+    def _enqueue(self, tower: str, payload, n: int) -> _Group:
+        if tower not in self._fns:
+            raise KeyError(f"unknown tower {tower!r}; "
+                           f"have {sorted(self._fns)}")
+        group = _Group(payload, n, time.monotonic())
+        with self._cv:
+            self._pending[tower].append(group)
+            self.stats["requests"] += n
+            self._cv.notify_all()
+        return group
+
+    # -- flushing ----------------------------------------------------------
+    def flush_now(self) -> int:
+        """Synchronously encode everything pending (manual trigger; also the
+        path tests use for deterministic, thread-free stepping). Returns the
+        number of examples encoded."""
+        return sum(self._flush_tower(t, "manual_flushes")
+                   for t in list(self._pending))
+
+    def _worker(self):
+        while True:
+            with self._cv:
+                if self._stop:
+                    return
+                deadline = self._earliest_deadline_locked()
+                if deadline is None:
+                    self._cv.wait()
+                else:
+                    now = time.monotonic()
+                    if deadline > now and not self._size_due_locked():
+                        self._cv.wait(timeout=deadline - now)
+                if self._stop:
+                    return
+                due = [(t, "size_flushes" if self._size_due_locked(t)
+                        else "deadline_flushes")
+                       for t in self._pending if self._due_locked(t)]
+            for tower, reason in due:
+                self._flush_tower(tower, reason)
+
+    def _earliest_deadline_locked(self):
+        oldest = [g.t_submit for gs in self._pending.values() for g in gs]
+        return min(oldest) + self.max_delay if oldest else None
+
+    def _size_due_locked(self, tower=None) -> bool:
+        towers = [tower] if tower else list(self._pending)
+        return any(sum(g.n for g in self._pending[t]) >= self.buckets[-1]
+                   for t in towers)
+
+    def _due_locked(self, tower) -> bool:
+        groups = self._pending[tower]
+        if not groups:
+            return False
+        if sum(g.n for g in groups) >= self.buckets[-1]:
+            return True
+        return time.monotonic() - groups[0].t_submit >= self.max_delay
+
+    def _flush_tower(self, tower: str, reason: str) -> int:
+        with self._cv:
+            groups, self._pending[tower] = self._pending[tower], []
+        if not groups:
+            return 0
+        self.stats[reason] += 1
+        # only structurally identical payloads may coalesce: mixing treedefs
+        # or per-example shapes would mispair leaves under one treedef and
+        # silently scramble results, so each cohort encodes separately
+        cohorts: dict = {}
+        for g in groups:
+            key = (jax.tree_util.tree_structure(g.payload),
+                   _shape_sig(g.payload))
+            cohorts.setdefault(key, []).append(g)
+        for cohort in cohorts.values():
+            self._encode_chunk(tower, cohort)
+        return sum(g.n for g in groups)
+
+    def _bucket_for(self, n: int) -> int:
+        for b in self.buckets:
+            if b >= n:
+                return b
+        return self.buckets[-1]
+
+    def _encode_chunk(self, tower: str, groups: list):
+        n = sum(g.n for g in groups)
+        try:
+            leaves = [jax.tree_util.tree_leaves(g.payload) for g in groups]
+            treedef = jax.tree_util.tree_structure(groups[0].payload)
+            cat = [np.concatenate(parts) for parts in zip(*leaves)]
+            outs = []
+            # slice through the ladder so every encode is a bucket shape
+            # (one oversized submit_many group must not compile its own)
+            for s in range(0, n, self.buckets[-1]):
+                part = [a[s:s + self.buckets[-1]] for a in cat]
+                m = part[0].shape[0]
+                bucket = self._bucket_for(m)
+                if bucket > m:  # replicate the last row up to the bucket
+                    part = [np.concatenate(
+                        [a, np.repeat(a[-1:], bucket - m, axis=0)])
+                        for a in part]
+                batch = jax.tree_util.tree_unflatten(treedef, part)
+                key = (tower, bucket, _shape_sig(batch))
+                self._compiled[key] = self._compiled.get(key, 0) + 1
+                outs.append(np.asarray(self._fns[tower](batch))[:m])
+                self.stats["padded_examples"] += bucket - m
+                self.stats["batches"] += 1
+            emb = np.concatenate(outs) if len(outs) > 1 else outs[0]
+        except Exception as e:  # noqa: BLE001 — deliver, don't kill worker
+            for g in groups:
+                g.future.set_exception(e)
+            return
+        self.stats["encoded_examples"] += n
+        off = 0
+        for g in groups:
+            g.future.set_result(emb[off:off + g.n])
+            off += g.n
+
+    # -- observability -----------------------------------------------------
+    def compiled_shapes(self):
+        """{(tower, bucket, example-shape-sig): batches run} — its length is
+        the number of distinct compiled encoder shapes."""
+        return dict(self._compiled)

@@ -1,0 +1,132 @@
+"""Class-embedding registry (DESIGN.md §6.2).
+
+CLIP-style deployment hinges on precomputing the prompt-ensembled class
+matrix ONCE per label space and amortizing it over every classify call
+(Radford et al. 2021 §3.1.4); at open-vocabulary scales the text-tower cost
+of rebuilding it per request dwarfs the image-side matmul. The registry
+memoizes unit-normalized class matrices keyed on
+``(class_names, templates, checkpoint)`` — the checkpoint fingerprint is in
+the key, so loading new weights INVALIDATES every matrix computed under the
+old ones by construction. Artifacts persist through ``repro.checkpoint.io``
+(atomic step directories), so eval jobs and serving replicas share one
+on-disk artifact instead of re-encoding the label space per process.
+
+Versioning: each key directory holds checkpoint steps; ``refresh()`` writes
+version+1 (e.g. after a kernel/numerics change), ``get()`` serves the
+latest. The version travels with the matrix so responses can cite which
+artifact classified them.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import os
+from typing import Callable, Optional, Sequence
+
+import jax
+import numpy as np
+
+from repro.checkpoint import io as ckpt_io
+
+
+def params_fingerprint(params) -> str:
+    """Checkpoint identity: sha256 over every leaf's bytes + the treedef.
+    Two parameter sets that classify differently must fingerprint
+    differently; serving init pays the one-time hash."""
+    h = hashlib.sha256()
+    leaves, treedef = jax.tree_util.tree_flatten(params)
+    h.update(str(treedef).encode())
+    for leaf in leaves:
+        arr = np.asarray(jax.device_get(leaf))
+        h.update(str((arr.dtype.str, arr.shape)).encode())
+        h.update(np.ascontiguousarray(arr).tobytes())
+    return h.hexdigest()
+
+
+@dataclasses.dataclass(frozen=True)
+class ClassMatrix:
+    key: str            # full registry key (sha256 hex)
+    version: int        # artifact version under this key
+    matrix: np.ndarray  # (n_classes, D) unit-norm fp32
+    source: str         # "memory" | "disk" | "computed"
+
+
+class ClassEmbeddingRegistry:
+    """Memoized prompt-ensembled class matrices with disk persistence.
+
+    compute_fn(class_names, templates) -> (n, D) array; typically the
+    service's batched text encode + ensembling (shared with
+    ``eval.zero_shot.class_embeddings``).
+    """
+
+    def __init__(self, compute_fn: Optional[Callable] = None, *,
+                 cache_dir: Optional[str] = None):
+        self._compute = compute_fn
+        self.cache_dir = cache_dir
+        self._mem: dict = {}
+        self.stats = {"mem_hits": 0, "disk_hits": 0, "computes": 0}
+
+    @staticmethod
+    def key(class_names: Sequence[str], templates: Sequence[str],
+            checkpoint_tag: str) -> str:
+        h = hashlib.sha256()
+        for part in ("classes", *class_names, "templates", *templates,
+                     "ckpt", checkpoint_tag):
+            h.update(part.encode())
+            h.update(b"\x00")
+        return h.hexdigest()
+
+    def _key_dir(self, key: str) -> Optional[str]:
+        return (os.path.join(self.cache_dir, key[:16])
+                if self.cache_dir else None)
+
+    def get(self, class_names: Sequence[str], templates: Sequence[str],
+            checkpoint_tag: str, *, embed_dim: int) -> ClassMatrix:
+        """Memory → disk → compute, persisting on the compute path."""
+        key = self.key(class_names, templates, checkpoint_tag)
+        hit = self._mem.get(key)
+        if hit is not None:
+            self.stats["mem_hits"] += 1
+            return dataclasses.replace(hit, source="memory")
+
+        kdir = self._key_dir(key)
+        if kdir is not None:
+            version = ckpt_io.latest_step(kdir)
+            if version is not None:
+                like = {"class_emb": jax.ShapeDtypeStruct(
+                    (len(class_names), embed_dim), np.float32)}
+                tree = ckpt_io.restore(kdir, version, like)
+                cm = ClassMatrix(key, version,
+                                 np.asarray(tree["class_emb"]), "disk")
+                self._mem[key] = cm
+                self.stats["disk_hits"] += 1
+                return cm
+        return self._compute_and_store(key, class_names, templates, 1)
+
+    def refresh(self, class_names: Sequence[str], templates: Sequence[str],
+                checkpoint_tag: str) -> ClassMatrix:
+        """Force a recompute under the same key, bumping the version."""
+        key = self.key(class_names, templates, checkpoint_tag)
+        kdir = self._key_dir(key)
+        latest = ckpt_io.latest_step(kdir) if kdir else None
+        if latest is None:
+            latest = self._mem[key].version if key in self._mem else 0
+        return self._compute_and_store(key, class_names, templates,
+                                       latest + 1)
+
+    def _compute_and_store(self, key, class_names, templates,
+                           version) -> ClassMatrix:
+        if self._compute is None:
+            raise RuntimeError(
+                f"registry miss for key {key[:16]} and no compute_fn given")
+        matrix = np.asarray(self._compute(class_names, templates), np.float32)
+        if matrix.shape[0] != len(class_names):
+            raise ValueError(f"compute_fn returned {matrix.shape} for "
+                             f"{len(class_names)} classes")
+        self.stats["computes"] += 1
+        kdir = self._key_dir(key)
+        if kdir is not None:
+            ckpt_io.save(kdir, version, {"class_emb": matrix})
+        cm = ClassMatrix(key, version, matrix, "computed")
+        self._mem[key] = cm
+        return cm

@@ -1,0 +1,156 @@
+"""ZeroShotService: the public zero-shot inference API (DESIGN.md §6).
+
+Ties the three layers of the embedding subsystem together over a BASIC dual
+encoder (paper §3):
+
+  classify(images, class_names)  — image tower via the micro-batcher, class
+      matrix via the registry (computed once per label space + checkpoint,
+      persisted), fused Pallas similarity→top-k over the class axis with the
+      learned temperature — the (b, n_classes) logit matrix never exists.
+  embed(tower, ...)              — raw unit-norm embeddings, micro-batched.
+  retrieve(queries, gallery)     — text→gallery top-k with the same fused
+      kernel (inv_tau=1: retrieval convention, no temperature sharpening).
+
+``eval.zero_shot.evaluate_with_service`` and ``examples/serving_demo.py``
+are the first two consumers.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.dual import DualEncoderConfig
+from repro.eval.zero_shot import DEFAULT_TEMPLATES, class_embeddings
+from repro.kernels.similarity_topk import ops as topk_ops
+from repro.models import dual_encoder as de
+from repro.serving.embed.batcher import DEFAULT_BUCKETS, MicroBatcher
+from repro.serving.embed.registry import (ClassEmbeddingRegistry,
+                                          params_fingerprint)
+
+
+@dataclasses.dataclass(frozen=True)
+class ClassifyResult:
+    values: np.ndarray        # (b, k) fp32 similarity/temperature logits
+    indices: np.ndarray       # (b, k) int32 class ids, ties to lower id
+    class_names: tuple        # the label space, for decoding
+    version: int              # registry artifact version that classified
+
+    def top_names(self, row: int):
+        return [self.class_names[i] for i in self.indices[row]]
+
+
+class ZeroShotService:
+    def __init__(self, cfg: DualEncoderConfig, params, tok, *,
+                 templates: Sequence[str] = DEFAULT_TEMPLATES,
+                 text_len: int = 16,
+                 registry_dir: Optional[str] = None,
+                 buckets: Sequence[int] = DEFAULT_BUCKETS,
+                 max_delay_ms: float = 2.0,
+                 dtype=jnp.float32,
+                 interpret: Optional[bool] = None,
+                 autostart: bool = True):
+        self.cfg = cfg
+        self.params = params
+        self.tok = tok
+        self.templates = tuple(templates)
+        self.text_len = int(text_len)
+        self.interpret = interpret
+        self.checkpoint_tag = params_fingerprint(params)
+        # 1/tau from the learned log-temperature (paper §3: A = X·Yᵀ/tau)
+        self.inv_tau = float(jnp.exp(-params["log_tau"]))
+
+        enc_i = jax.jit(lambda p, im: de.encode_image(cfg, p, im,
+                                                      dtype=dtype))
+        enc_t = jax.jit(lambda p, tx: de.encode_text(cfg, p, tx,
+                                                     dtype=dtype))
+        self.batcher = MicroBatcher(
+            {"image": lambda im: enc_i(self.params, im),
+             "text": lambda tx: enc_t(self.params, tx)},
+            buckets=buckets, max_delay_ms=max_delay_ms, autostart=autostart)
+        self.registry = ClassEmbeddingRegistry(self._compute_class_matrix,
+                                               cache_dir=registry_dir)
+
+    # -- embedding ---------------------------------------------------------
+    def embed_images(self, images, *, wait: bool = True):
+        """images: (b, P, patch_dim) patch embeddings (or dict payload).
+        Returns (b, D) unit-norm fp32 — or the future when wait=False."""
+        payload = images if isinstance(images, dict) else \
+            {"patch_embeddings": np.asarray(images, np.float32)}
+        fut = self.batcher.submit_many("image", payload)
+        return self._result(fut) if wait else fut
+
+    def embed_texts(self, texts, *, wait: bool = True):
+        """texts: list of strings (tokenized here) or a pre-tokenized
+        {'tokens', 'attn_mask'} payload. Returns (b, D) — or the future."""
+        if not isinstance(texts, dict):
+            ids = [self.tok.encode(t, max_len=self.text_len) for t in texts]
+            tokens, mask = self.tok.pad_batch(ids, max_len=self.text_len)
+            texts = {"tokens": tokens, "attn_mask": mask}
+        fut = self.batcher.submit_many("text", texts)
+        return self._result(fut) if wait else fut
+
+    def _result(self, fut):
+        if not self.batcher.running:
+            self.batcher.flush_now()   # thread-free (autostart=False) path
+        return np.asarray(fut.result(timeout=60.0))
+
+    # -- classification ----------------------------------------------------
+    def classify(self, images, class_names: Sequence[str], *,
+                 templates: Optional[Sequence[str]] = None,
+                 k: int = 5) -> ClassifyResult:
+        class_names = tuple(class_names)
+        templates = tuple(templates) if templates is not None \
+            else self.templates
+        iemb_fut = self.embed_images(images, wait=False)
+        cm = self.registry.get(class_names, templates, self.checkpoint_tag,
+                               embed_dim=self.cfg.embed_dim)
+        iemb = self._result(iemb_fut)
+        vals, idx = topk_ops.similarity_topk(
+            jnp.asarray(iemb), jnp.asarray(cm.matrix),
+            min(int(k), len(class_names)),
+            inv_tau=self.inv_tau, interpret=self.interpret)
+        return ClassifyResult(np.asarray(vals), np.asarray(idx),
+                              class_names, cm.version)
+
+    def retrieve(self, queries: Sequence[str], gallery_emb, *, k: int = 5):
+        """Text→gallery retrieval: top-k gallery rows per query by cosine
+        similarity. gallery_emb: (m, D) unit-norm (e.g. from embed_images).
+        Returns (values (q, k), indices (q, k))."""
+        qemb = self.embed_texts(list(queries))
+        vals, idx = topk_ops.similarity_topk(
+            jnp.asarray(qemb), jnp.asarray(gallery_emb),
+            min(int(k), int(np.shape(gallery_emb)[0])),
+            inv_tau=1.0, interpret=self.interpret)
+        return np.asarray(vals), np.asarray(idx)
+
+    # -- internals ---------------------------------------------------------
+    def _compute_class_matrix(self, class_names, templates):
+        """Registry compute path: batched prompt ensembling through the
+        text tower, via the SAME ``eval.zero_shot.class_embeddings`` the
+        offline eval uses — one code path, one artifact."""
+        def encode(texts):
+            fut = self.batcher.submit_many("text", texts)
+            if not self.batcher.running:
+                self.batcher.flush_now()
+            return jnp.asarray(fut.result(timeout=60.0))
+        return class_embeddings(encode, self.tok, class_names, templates,
+                                text_len=self.text_len)
+
+    def stats(self) -> dict:
+        return {"batcher": dict(self.batcher.stats),
+                "compiled_shapes": len(self.batcher.compiled_shapes()),
+                "registry": dict(self.registry.stats)}
+
+    def close(self):
+        self.batcher.stop()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+        return False

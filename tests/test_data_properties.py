@@ -1,0 +1,34 @@
+"""Hypothesis property tests for the data substrate (paper §7.1).
+
+Kept separate from test_data.py and guarded with ``importorskip`` so the
+suite collects cleanly on bare environments without ``hypothesis``; the
+property tests still run wherever it is installed.
+"""
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as hst  # noqa: E402
+
+from repro.data import Tokenizer, caption_corpus, make_world  # noqa: E402
+
+_CACHE = {}
+
+
+def _tok():
+    if "tok" not in _CACHE:
+        rng = np.random.default_rng(0)
+        world = make_world(rng, n_classes=16, n_patches=4, patch_dim=32)
+        _CACHE["tok"] = Tokenizer.train(
+            caption_corpus(world, rng, 500), vocab_size=512)
+    return _CACHE["tok"]
+
+
+@settings(max_examples=40, deadline=None)
+@given(hst.text(alphabet="abcdefghij z.,", min_size=0, max_size=200))
+def test_tokenizer_length_filter_and_bounds(text):
+    """Paper §7.1: sequences are capped at 64 tokens; ids stay in-vocab."""
+    tok = _tok()
+    ids = tok.encode(text, max_len=64)
+    assert len(ids) <= 64
+    assert all(0 <= i < tok.vocab_size for i in ids)

@@ -1,0 +1,291 @@
+"""Zero-shot inference subsystem: micro-batcher flush behavior, registry
+caching/invalidation/persistence, and the ZeroShotService end-to-end."""
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_arch, smoke_variant
+from repro.data import Tokenizer, caption_corpus, make_world
+from repro.data.synthetic import render_images
+from repro.models import dual_encoder as de
+from repro.serving import MicroBatcher, ZeroShotService
+from repro.serving.embed.registry import (ClassEmbeddingRegistry,
+                                          params_fingerprint)
+
+_CACHE = {}
+
+
+def _world():
+    if "w" not in _CACHE:
+        cfg = get_arch("basic-s")
+        cfg = dataclasses.replace(
+            cfg, image_tower=smoke_variant(cfg.image_tower),
+            text_tower=smoke_variant(cfg.text_tower), embed_dim=32)
+        rng = np.random.default_rng(0)
+        world = make_world(rng, n_classes=10,
+                           n_patches=cfg.image_tower.frontend_len,
+                           patch_dim=cfg.image_tower.d_model, noise=0.2)
+        tok = Tokenizer.train(caption_corpus(world, rng, 300), vocab_size=400)
+        params = de.init_params(cfg, jax.random.key(0))
+        _CACHE["w"] = (cfg, world, tok, params)
+    return _CACHE["w"]
+
+
+# ---------------------------------------------------------------------------
+# micro-batcher
+# ---------------------------------------------------------------------------
+
+
+def _sum_encoder(batch):
+    """Deterministic stand-in encoder: per-example, batch-size invariant."""
+    return jnp.stack([jnp.sum(batch["v"], axis=1),
+                      jnp.max(batch["v"], axis=1)], axis=1)
+
+
+def test_batcher_flush_on_size():
+    mb = MicroBatcher({"t": _sum_encoder}, buckets=(1, 2, 4),
+                      max_delay_ms=60_000.0)  # deadline can't fire
+    try:
+        futs = [mb.submit("t", {"v": np.full((3,), i, np.float32)})
+                for i in range(4)]
+        out = [f.result(timeout=10.0) for f in futs]
+    finally:
+        mb.stop()
+    np.testing.assert_allclose(np.stack(out)[:, 0], [0.0, 3.0, 6.0, 9.0])
+    assert mb.stats["size_flushes"] >= 1
+    assert mb.stats["deadline_flushes"] == 0
+
+
+def test_batcher_flush_on_deadline_pads_to_bucket():
+    mb = MicroBatcher({"t": _sum_encoder}, buckets=(1, 2, 4, 8),
+                      max_delay_ms=30.0)
+    try:
+        t0 = time.monotonic()
+        futs = [mb.submit("t", {"v": np.full((3,), i, np.float32)})
+                for i in range(3)]  # 3 < largest bucket: only time flushes
+        out = [f.result(timeout=10.0) for f in futs]
+        dt = time.monotonic() - t0
+    finally:
+        mb.stop()
+    np.testing.assert_allclose(np.stack(out)[:, 0], [0.0, 3.0, 6.0])
+    assert mb.stats["deadline_flushes"] >= 1
+    assert dt >= 0.03  # not before the deadline
+    # 3 requests padded into the 4-bucket
+    assert mb.stats["padded_examples"] == 1
+    ((key, _),) = mb.compiled_shapes().items()
+    assert key[1] == 4
+
+
+def test_batcher_compiled_shape_cache_reuses_buckets():
+    mb = MicroBatcher({"t": _sum_encoder}, buckets=(1, 2, 4),
+                      max_delay_ms=60_000.0, autostart=False)
+    for n in (3, 4, 3, 1):
+        mb.submit_many("t", {"v": np.zeros((n, 3), np.float32)})
+        mb.flush_now()
+    keys = mb.compiled_shapes()
+    assert mb.stats["manual_flushes"] == 4
+    # 3→4, 4→4, 3→4, 1→1: exactly two distinct compiled shapes
+    assert sorted(k[1] for k in keys) == [1, 4]
+    assert keys[("t", 4, ((((3,), "float32")),))] == 3
+
+
+def test_batcher_oversized_group_slices_through_ladder():
+    mb = MicroBatcher({"t": _sum_encoder}, buckets=(1, 2, 4),
+                      max_delay_ms=60_000.0, autostart=False)
+    fut = mb.submit_many("t", {"v": np.arange(30, dtype=np.float32)
+                               .reshape(10, 3)})
+    mb.flush_now()
+    out = fut.result(timeout=10.0)
+    assert out.shape == (10, 2)
+    np.testing.assert_allclose(
+        out[:, 0], np.arange(30, dtype=np.float32).reshape(10, 3).sum(1))
+    assert all(k[1] <= 4 for k in mb.compiled_shapes())
+
+
+def test_batcher_matches_unbatched_encode():
+    """Bucket padding must not leak into real rows."""
+    cfg, world, tok, params = _world()
+    rng = np.random.default_rng(1)
+    imgs = render_images(world, rng.integers(0, 10, 3), rng)
+    enc = jax.jit(lambda im: de.encode_image(cfg, params, im))
+    mb = MicroBatcher({"image": enc}, buckets=(1, 2, 4, 8),
+                      max_delay_ms=60_000.0, autostart=False)
+    fut = mb.submit_many("image", {"patch_embeddings": imgs})
+    mb.flush_now()
+    got = fut.result(timeout=10.0)
+    want = np.asarray(enc({"patch_embeddings": jnp.asarray(imgs)}))
+    np.testing.assert_allclose(got, want, atol=1e-5)
+
+
+def test_batcher_mixed_payload_structures_do_not_coalesce():
+    """Groups with different treedefs/shapes in one flush window must encode
+    in separate cohorts, not silently mispair leaves under one treedef."""
+    def enc(batch):
+        out = jnp.sum(batch["v"], axis=1)
+        if "w" in batch:
+            out = out + 100.0 * jnp.sum(batch["w"], axis=1)
+        return out[:, None]
+
+    mb = MicroBatcher({"t": enc}, buckets=(1, 2, 4),
+                      max_delay_ms=60_000.0, autostart=False)
+    f1 = mb.submit_many("t", {"v": np.ones((2, 3), np.float32)})
+    f2 = mb.submit_many("t", {"v": np.ones((2, 3), np.float32),
+                              "w": np.ones((2, 3), np.float32)})
+    f3 = mb.submit_many("t", {"v": np.ones((2, 5), np.float32)})
+    mb.flush_now()
+    np.testing.assert_allclose(f1.result(timeout=10.0)[:, 0], [3.0, 3.0])
+    np.testing.assert_allclose(f2.result(timeout=10.0)[:, 0], [303.0, 303.0])
+    np.testing.assert_allclose(f3.result(timeout=10.0)[:, 0], [5.0, 5.0])
+
+
+def test_batcher_delivers_encoder_errors():
+    def bad(batch):
+        raise RuntimeError("boom")
+    mb = MicroBatcher({"t": bad}, buckets=(1, 2), max_delay_ms=60_000.0,
+                      autostart=False)
+    fut = mb.submit("t", {"v": np.zeros((3,), np.float32)})
+    mb.flush_now()
+    with pytest.raises(RuntimeError, match="boom"):
+        fut.result(timeout=10.0)
+    with pytest.raises(KeyError):
+        mb.submit("nope", {"v": np.zeros((3,), np.float32)})
+
+
+# ---------------------------------------------------------------------------
+# class-embedding registry
+# ---------------------------------------------------------------------------
+
+
+def _fake_compute(calls):
+    def compute(names, templates):
+        calls.append(tuple(names))
+        rng = np.random.default_rng(len(names))
+        m = rng.standard_normal((len(names), 8)).astype(np.float32)
+        return m / np.linalg.norm(m, axis=1, keepdims=True)
+    return compute
+
+
+def test_registry_cache_hit_and_checkpoint_invalidation(tmp_path):
+    calls = []
+    reg = ClassEmbeddingRegistry(_fake_compute(calls),
+                                 cache_dir=str(tmp_path))
+    names, tmpl = ("a b", "c d"), ("a {} {}",)
+    m1 = reg.get(names, tmpl, "ckpt-1", embed_dim=8)
+    m2 = reg.get(names, tmpl, "ckpt-1", embed_dim=8)
+    assert len(calls) == 1 and m2.source == "memory"
+    assert m1.version == m2.version == 1
+    np.testing.assert_array_equal(m1.matrix, m2.matrix)
+
+    # checkpoint change -> different key -> recompute
+    m3 = reg.get(names, tmpl, "ckpt-2", embed_dim=8)
+    assert len(calls) == 2 and m3.key != m1.key
+
+    # template change -> different key too
+    reg.get(names, ("b {} {}",), "ckpt-1", embed_dim=8)
+    assert len(calls) == 3
+
+
+def test_registry_persists_across_instances(tmp_path):
+    calls = []
+    reg = ClassEmbeddingRegistry(_fake_compute(calls),
+                                 cache_dir=str(tmp_path))
+    names, tmpl = ("a b", "c d", "e f"), ("x {} {}",)
+    m1 = reg.get(names, tmpl, "ckpt", embed_dim=8)
+
+    calls2 = []
+    reg2 = ClassEmbeddingRegistry(_fake_compute(calls2),
+                                  cache_dir=str(tmp_path))
+    m2 = reg2.get(names, tmpl, "ckpt", embed_dim=8)
+    assert calls2 == [] and m2.source == "disk"
+    assert m2.version == m1.version
+    np.testing.assert_allclose(m2.matrix, m1.matrix)
+
+
+def test_registry_refresh_bumps_version(tmp_path):
+    calls = []
+    reg = ClassEmbeddingRegistry(_fake_compute(calls),
+                                 cache_dir=str(tmp_path))
+    names, tmpl = ("a b",), ("x {} {}",)
+    assert reg.get(names, tmpl, "ckpt", embed_dim=8).version == 1
+    assert reg.refresh(names, tmpl, "ckpt").version == 2
+    assert reg.get(names, tmpl, "ckpt", embed_dim=8).version == 2
+
+
+def test_params_fingerprint_sensitivity():
+    cfg, _, _, params = _world()
+    tag = params_fingerprint(params)
+    assert tag == params_fingerprint(params)
+    bumped = jax.tree.map(lambda a: a, params)
+    bumped["log_tau"] = params["log_tau"] + 1e-3
+    assert params_fingerprint(bumped) != tag
+
+
+# ---------------------------------------------------------------------------
+# ZeroShotService end-to-end
+# ---------------------------------------------------------------------------
+
+
+def test_service_classify_matches_offline_pipeline(tmp_path):
+    from repro.eval import class_embeddings
+
+    cfg, world, tok, params = _world()
+    rng = np.random.default_rng(2)
+    cls = rng.integers(0, 10, 6)
+    imgs = render_images(world, cls, rng)
+    with ZeroShotService(cfg, params, tok, registry_dir=str(tmp_path),
+                         max_delay_ms=1.0) as svc:
+        res = svc.classify(imgs, world.class_names, k=5)
+        res2 = svc.classify(imgs, world.class_names, k=5)
+        stats = svc.stats()
+        inv_tau = svc.inv_tau
+
+    assert res.values.shape == (6, 5) and res.indices.shape == (6, 5)
+    assert stats["registry"]["computes"] == 1      # class matrix built once
+    assert stats["registry"]["mem_hits"] == 1
+    np.testing.assert_array_equal(res.indices, res2.indices)
+
+    cemb = class_embeddings(lambda tx: de.encode_text(cfg, params, tx),
+                            tok, world.class_names)
+    iemb = de.encode_image(cfg, params,
+                           {"patch_embeddings": jnp.asarray(imgs)})
+    logits = jnp.asarray(np.asarray(iemb @ cemb.T)) * inv_tau
+    order = np.asarray(jnp.argsort(-logits, axis=1, stable=True))[:, :5]
+    np.testing.assert_array_equal(res.indices, order)
+
+
+def test_service_retrieve_and_embed(tmp_path):
+    cfg, world, tok, params = _world()
+    rng = np.random.default_rng(3)
+    imgs = render_images(world, rng.integers(0, 10, 5), rng)
+    with ZeroShotService(cfg, params, tok, registry_dir=str(tmp_path),
+                         max_delay_ms=1.0) as svc:
+        gal = svc.embed_images(imgs)
+        assert gal.shape == (5, cfg.embed_dim)
+        np.testing.assert_allclose(np.linalg.norm(gal, axis=1), 1.0,
+                                   atol=1e-5)
+        vals, idx = svc.retrieve(["a photo of a red cat"], gal, k=3)
+    assert vals.shape == (1, 3) and idx.shape == (1, 3)
+    assert np.all(idx < 5)
+    assert np.all(np.diff(vals[0]) <= 1e-7)  # descending
+
+
+def test_service_eval_consumer(tmp_path):
+    """eval.zero_shot.evaluate_with_service: same metric plumbing as
+    evaluate_benchmark, served through the subsystem."""
+    from repro.eval import evaluate_with_service
+
+    cfg, world, tok, params = _world()
+    rng = np.random.default_rng(4)
+    cls = rng.integers(0, 10, 20)
+    imgs = render_images(world, cls, rng)
+    with ZeroShotService(cfg, params, tok, registry_dir=str(tmp_path),
+                         max_delay_ms=1.0) as svc:
+        out = evaluate_with_service(svc, world.class_names, imgs, cls)
+    assert set(out) >= {"top1", "top5", "mean_per_class_recall", "n",
+                        "headline", "class_matrix_version"}
+    assert 0.0 <= out["top1"] <= out["top5"] <= 1.0
+    assert out["n"] == 20 and out["class_matrix_version"] == 1

