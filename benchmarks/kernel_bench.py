@@ -18,30 +18,18 @@ perf trajectory that scripts/check_bench.py regresses against.
 from __future__ import annotations
 
 import argparse
-import time
 
 import jax
 import jax.numpy as jnp
 
 from benchmarks.common import csv_line, write_json  # noqa: F401 (run.py API)
+from benchmarks.common import timeit_min as _timeit
 from repro.kernels.contrastive_loss import ops, ref
 from repro.kernels.contrastive_loss.ops import pick_blocks
 
 SHAPES = [(512, 256), (512, 1024), (2048, 256), (2048, 1024),
           (8192, 256), (8192, 1024)]
 LOG_TAU = -1.0
-
-
-def _timeit(fn, *args, iters):
-    """Min-of-N µs/call — min is robust to scheduler interference, which a
-    1.3× regression gate (scripts/check_bench.py) must not trip on."""
-    jax.block_until_ready(fn(*args))          # compile + warm
-    best = float("inf")
-    for _ in range(iters):
-        t0 = time.perf_counter()
-        jax.block_until_ready(fn(*args))
-        best = min(best, time.perf_counter() - t0)
-    return best * 1e6  # us
 
 
 def _ideal_bytes(b, d, itemsize, with_grads):

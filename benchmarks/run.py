@@ -12,18 +12,32 @@ import os
 import sys
 import traceback
 
-TABLES = {
-    "table2": "benchmarks.table2_memory",    # step time/memory: DP vs GradAccum
-    "table4": "benchmarks.table4_batch",     # batch-size ablation
-    "zeroshot": "benchmarks.zero_shot",      # Tables 1/3 analog
-    "theory": "benchmarks.theory_bound",     # Theorems 1-2 gap vs B
-    "roofline": "benchmarks.roofline_table", # §Roofline aggregation
-    "kernels": "benchmarks.kernel_bench",    # contrastive kernel perf (DESIGN.md §5)
-    "serving": "benchmarks.serving_bench",   # similarity->top-k + e2e (DESIGN.md §6.4)
+# suite name -> (module, one-line description shown in --help)
+SUITES = {
+    "table2": ("benchmarks.table2_memory",
+               "step time/memory: DP vs GradAccum (paper Table 2)"),
+    "table4": ("benchmarks.table4_batch",
+               "batch-size ablation (paper Table 4)"),
+    "zeroshot": ("benchmarks.zero_shot",
+                 "zero-shot accuracy sweep (paper Tables 1/3 analog)"),
+    "theory": ("benchmarks.theory_bound",
+               "Theorems 1-2 generalization gap vs B"),
+    "roofline": ("benchmarks.roofline_table",
+                 "roofline aggregation over dryrun outputs"),
+    "kernels": ("benchmarks.kernel_bench",
+                "contrastive loss kernels: ref vs 4-pass vs fused "
+                "(gated, DESIGN.md §5)"),
+    "serving": ("benchmarks.serving_bench",
+                "similarity->top-k kernel + e2e classify "
+                "(gated, DESIGN.md §6.4)"),
+    "distributed": ("benchmarks.distributed_bench",
+                    "cross-shard global-batch loss, simulated mesh "
+                    "(gated, DESIGN.md §7.5)"),
 }
+TABLES = {name: mod for name, (mod, _) in SUITES.items()}
 
 # slow full-sweep benches only run when selected explicitly (or via --json)
-_OPT_IN = {"kernels", "serving"}
+_OPT_IN = {"kernels", "serving", "distributed"}
 
 _ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
@@ -31,6 +45,7 @@ _ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 GATED = {
     "kernels": os.path.join(_ROOT, "BENCH_kernels.json"),
     "serving": os.path.join(_ROOT, "BENCH_serving.json"),
+    "distributed": os.path.join(_ROOT, "BENCH_distributed.json"),
 }
 
 
@@ -77,8 +92,18 @@ def _run_bench_json(name: str, json_path: str) -> int:
 
 
 def main() -> None:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--only", choices=sorted(TABLES), default=None)
+    suites = "\n".join(f"  {n:<12} {d}" + ("  [opt-in]" if n in _OPT_IN
+                                           else "")
+                       for n, (_, d) in sorted(SUITES.items()))
+    ap = argparse.ArgumentParser(
+        description="run the repo's benchmark suites "
+                    "(CSV: name,us_per_call,derived)",
+        epilog=f"registered suites:\n{suites}\n\n[opt-in] suites only run "
+               "with --only <name> or --json (they are slow full sweeps "
+               "and carry the perf-regression gate)",
+        formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("--only", choices=sorted(TABLES), default=None,
+                    help="run a single suite")
     ap.add_argument("--json", action="store_true",
                     help="run the gated perf benches, rewrite BENCH_*.json, "
                          "and fail on >1.3x regression vs the committed files")

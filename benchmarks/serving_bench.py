@@ -27,6 +27,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import csv_line, write_json
+from benchmarks.common import timeit_min as _timeit
 from repro.kernels.similarity_topk import ops as topk_ops
 from repro.kernels.similarity_topk import ref as topk_ref
 
@@ -34,17 +35,6 @@ N_CLASSES = (1_000, 16_000, 100_000)
 B, D, K = 128, 256, 5
 E2E_BATCH = 16
 MUST_BEAT_N = 100_000
-
-
-def _timeit(fn, *args, iters):
-    """Min-of-N µs/call (same robustness rationale as kernel_bench)."""
-    jax.block_until_ready(fn(*args))          # compile + warm
-    best = float("inf")
-    for _ in range(iters):
-        t0 = time.perf_counter()
-        jax.block_until_ready(fn(*args))
-        best = min(best, time.perf_counter() - t0)
-    return best * 1e6  # us
 
 
 def _unit(key, rows, d):
@@ -76,19 +66,15 @@ def _kernel_entries(entries, n_classes, interpret):
 
 def _e2e_entries(entries, interpret):
     """Warm classify() latency through the full service stack."""
-    import dataclasses
     import tempfile
 
-    from repro.configs import get_arch, smoke_variant
+    from benchmarks.common import tiny_dual_cfg
     from repro.data import Tokenizer, caption_corpus, make_world
     from repro.data.synthetic import render_images
     from repro.models import dual_encoder as de
     from repro.serving import ZeroShotService
 
-    cfg = get_arch("basic-s")
-    cfg = dataclasses.replace(
-        cfg, image_tower=smoke_variant(cfg.image_tower),
-        text_tower=smoke_variant(cfg.text_tower), embed_dim=32)
+    cfg = tiny_dual_cfg()
     rng = np.random.default_rng(0)
     world = make_world(rng, n_classes=32,
                        n_patches=cfg.image_tower.frontend_len,

@@ -4,12 +4,13 @@ fused Pallas similarity→top-k kernel (DESIGN.md §6).
 
   PYTHONPATH=src python examples/serving_demo.py --smoke
 
---smoke runs everything on CPU in Pallas interpret mode (auto-detected), with
-a shorter training loop. The decode-loop engine demo this file used to hold
-lives on in `python -m repro.launch.serve`.
+The demo always runs CPU-sized (smoke-variant towers, embed_dim=32; Pallas
+interpret mode is auto-detected on CPU). ``--smoke`` shortens the training
+loop to 40 steps (120 without it); ``--steps N`` overrides both. The
+decode-loop engine demo this file used to hold lives on in
+`python -m repro.launch.serve`.
 """
 import argparse
-import dataclasses
 import tempfile
 import time
 
@@ -17,7 +18,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs import get_arch, smoke_variant
+from repro.configs import get_arch, smoke_dual_variant
 from repro.core.gradaccum import contrastive_step
 from repro.data import Tokenizer, caption_corpus, contrastive_batch, make_world
 from repro.data.synthetic import render_images
@@ -25,18 +26,17 @@ from repro.models import dual_encoder as de
 from repro.optim import AdaFactorW, apply_updates
 from repro.serving import ZeroShotService
 
-ap = argparse.ArgumentParser()
+ap = argparse.ArgumentParser(
+    description="zero-shot serving demo (always CPU-sized; see module "
+                "docstring)")
 ap.add_argument("--smoke", action="store_true",
-                help="CPU-sized run: tiny towers, short training")
-ap.add_argument("--steps", type=int, default=None)
+                help="shorter demo training loop (40 steps instead of 120)")
+ap.add_argument("--steps", type=int, default=None,
+                help="explicit training step count (overrides --smoke)")
 args = ap.parse_args()
 steps = args.steps if args.steps is not None else (40 if args.smoke else 120)
 
-cfg = get_arch("basic-s")
-cfg = dataclasses.replace(cfg,
-                          image_tower=smoke_variant(cfg.image_tower),
-                          text_tower=smoke_variant(cfg.text_tower),
-                          embed_dim=32)
+cfg = smoke_dual_variant(get_arch("basic-s"))
 rng = np.random.default_rng(0)
 world = make_world(rng, n_classes=16,
                    n_patches=cfg.image_tower.frontend_len,

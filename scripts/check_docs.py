@@ -1,0 +1,91 @@
+"""Docstring gate for the public API surface (ISSUE-3 satellite).
+
+Fails (exit 1, one line per offender) when a public symbol in the covered
+modules lacks a docstring:
+
+  - every module under src/repro/core/
+  - every kernels public-op module src/repro/kernels/*/ops.py
+  - every module under src/repro/serving/embed/
+
+"Public" = top-level ``def``/``class`` whose name has no leading
+underscore, plus the module itself (module docstring required). Purely
+AST-based — nothing is imported, so the gate runs on hosts without jax.
+
+Wired into tier-1 as tests/test_docs.py; run standalone with
+
+  python scripts/check_docs.py [--root PATH]
+"""
+from __future__ import annotations
+
+import argparse
+import ast
+import os
+import sys
+from glob import glob
+
+_DEFAULT_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+COVERED_GLOBS = (
+    os.path.join("src", "repro", "core", "*.py"),
+    os.path.join("src", "repro", "kernels", "*", "ops.py"),
+    os.path.join("src", "repro", "serving", "embed", "*.py"),
+)
+
+
+def covered_files(root: str = _DEFAULT_ROOT) -> list[str]:
+    """The source files the gate covers, sorted, as paths under ``root``."""
+    out = []
+    for pat in COVERED_GLOBS:
+        out.extend(glob(os.path.join(root, pat)))
+    return sorted(out)
+
+
+def missing_docstrings(path: str, root: str = _DEFAULT_ROOT) -> list[str]:
+    """Public symbols in ``path`` lacking docstrings, as
+    '<relpath-under-root>:<line>: <kind> <name>' lines (empty = clean)."""
+    with open(path, encoding="utf-8") as f:
+        tree = ast.parse(f.read(), filename=path)
+    rel = os.path.relpath(path, root)
+    failures = []
+    if not ast.get_docstring(tree) and os.path.basename(path) != "__init__.py":
+        failures.append(f"{rel}:1: module {os.path.basename(path)}")
+    for node in tree.body:
+        if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                 ast.ClassDef)):
+            continue
+        if node.name.startswith("_"):
+            continue
+        if not ast.get_docstring(node):
+            kind = "class" if isinstance(node, ast.ClassDef) else "function"
+            failures.append(f"{rel}:{node.lineno}: {kind} {node.name}")
+    return failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="fail when a public symbol in core/, kernels/*/ops.py "
+                    "or serving/embed/ lacks a docstring")
+    ap.add_argument("--root", default=_DEFAULT_ROOT,
+                    help="repo root (default: this script's parent)")
+    args = ap.parse_args(argv)
+
+    files = covered_files(args.root)
+    if not files:
+        print(f"check_docs: no covered files under {args.root}",
+              file=sys.stderr)
+        return 1
+    failures = []
+    for path in files:
+        failures.extend(missing_docstrings(path, args.root))
+    for line in failures:
+        print(f"check_docs: MISSING DOCSTRING {line}", file=sys.stderr)
+    if failures:
+        print(f"check_docs: {len(failures)} public symbols undocumented "
+              f"across {len(files)} files", file=sys.stderr)
+        return 1
+    print(f"check_docs: OK ({len(files)} files)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -10,4 +10,7 @@ from repro.configs.base import (  # noqa: F401
     register,
     smoke_variant,
 )
-from repro.configs.dual import DualEncoderConfig  # noqa: F401
+from repro.configs.dual import (  # noqa: F401
+    DualEncoderConfig,
+    smoke_dual_variant,
+)

@@ -29,3 +29,16 @@ def _tower(name, L, d, H, dff, vocab, frontend=None, frontend_len=0,
         frontend_len=frontend_len, head_dim=head_dim, rope_theta=1e4,
         source="arXiv:2111.10050",
     )
+
+
+def smoke_dual_variant(cfg: DualEncoderConfig,
+                       embed_dim: int = 32) -> DualEncoderConfig:
+    """CPU-sized variant of a dual-encoder config: both towers shrunk via
+    ``smoke_variant`` and the shared embedding dim reduced. The ONE
+    smoke-dual transform — trainer smoke runs, memstats accounting rows,
+    bench tiny configs and tests must all build theirs here so the model
+    they describe cannot drift apart."""
+    from repro.configs.base import smoke_variant
+    return dataclasses.replace(
+        cfg, image_tower=smoke_variant(cfg.image_tower),
+        text_tower=smoke_variant(cfg.text_tower), embed_dim=embed_dim)

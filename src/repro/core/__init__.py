@@ -1,4 +1,5 @@
 """BASIC's primary contributions (paper §3-§6) as composable JAX modules."""
 from repro.core.contrastive import contrastive_loss, similarity  # noqa: F401
+from repro.core.distributed_loss import make_global_loss_fn  # noqa: F401
 from repro.core.gradaccum import contrastive_step, microbatch_grads  # noqa: F401
-from repro.core.remat import get_policy  # noqa: F401
+from repro.core.remat import get_policy, list_policies  # noqa: F401

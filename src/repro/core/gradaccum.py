@@ -36,7 +36,8 @@ def _split(tree, k):
 def contrastive_step(encode_image: Callable, encode_text: Callable,
                      params, batch, num_micro: int,
                      loss_fn: Callable = contrastive_loss,
-                     loss_opts: dict | None = None):
+                     loss_opts: dict | None = None,
+                     emb_sharding=None):
     """Exact full-batch contrastive gradient via Algorithm 1.
 
     encode_image(params, images_mb) -> (M, D) embeddings (unit-norm)
@@ -48,11 +49,24 @@ def contrastive_step(encode_image: Callable, encode_text: Callable,
     ``loss_fn=fused_kernel_loss, loss_opts={"interpret": True, "bm": 256}``
     plumbs explicit interpret/block overrides down to the Pallas kernels.
 
+    ``loss_fn`` may also be a cross-shard GLOBAL-batch loss
+    (``core.distributed_loss.make_global_loss_fn(mesh, ...)``); pass
+    ``emb_sharding=distributed_loss.emb_sharding(mesh)`` with it, so the
+    (B, D) embedding block and its dX/dY cotangents are pinned
+    batch-sharded over the data axes between the tower scans and the
+    shard_map'd loss — accumulation × data-parallel × tensor-parallel
+    then compose under one jit (launch/train_distributed.py).
+
     Returns (loss, metrics, grads) with grads exactly equal to
     jax.grad of the monolithic loss (same contraction order).
     """
     images = _split(batch["images"], num_micro)
     texts = _split(batch["texts"], num_micro)
+
+    def _pin(z):
+        if emb_sharding is None:
+            return z
+        return jax.lax.with_sharding_constraint(z, emb_sharding)
 
     # ---- pass 1: embeddings only (lines 2-5) ----
     def fwd(_, mb):
@@ -61,8 +75,8 @@ def contrastive_step(encode_image: Callable, encode_text: Callable,
 
     _, (X, Y) = jax.lax.scan(fwd, None, (images, texts))
     D = X.shape[-1]
-    X = X.reshape(-1, D)
-    Y = Y.reshape(-1, D)
+    X = _pin(X.reshape(-1, D))
+    Y = _pin(Y.reshape(-1, D))
 
     # ---- lines 6-12: loss on embeddings + d(loss)/d(X, Y, log_tau) ----
     def loss_on_emb(x, y, log_tau):
@@ -73,8 +87,8 @@ def contrastive_step(encode_image: Callable, encode_text: Callable,
         loss_on_emb, argnums=(0, 1, 2), has_aux=True)(
             X, Y, params["log_tau"])
 
-    dXm = dX.reshape(num_micro, -1, D)
-    dYm = dY.reshape(num_micro, -1, D)
+    dXm = _pin(dX).reshape(num_micro, -1, D)
+    dYm = _pin(dY).reshape(num_micro, -1, D)
 
     # ---- pass 2: rematerialize per microbatch, VJP into weights ----
     zero = jax.tree.map(jnp.zeros_like, params)

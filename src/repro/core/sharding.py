@@ -34,10 +34,13 @@ POD, DATA, MODEL = "pod", "data", "model"
 
 
 def mesh_axis_size(mesh, name):
+    """Extent of mesh axis ``name`` (int), 1 when the mesh lacks it."""
     return mesh.shape[name] if name in mesh.shape else 1
 
 
 def data_axes(mesh):
+    """The batch-distribution axes of ``mesh``: ('pod', 'data') on
+    multi-pod meshes, ('data',) otherwise. Returns a tuple of str."""
     return (POD, DATA) if POD in mesh.shape else (DATA,)
 
 
@@ -216,5 +219,7 @@ def cache_specs(caches, mesh, *, seq_axis_names=(MODEL,)):
 
 
 def to_named(tree_of_specs, mesh):
+    """Wrap every PartitionSpec leaf into a NamedSharding on ``mesh`` —
+    the form ``jax.jit(in_shardings=...)`` accepts."""
     return jax.tree.map(lambda s: NamedSharding(mesh, s), tree_of_specs,
                         is_leaf=lambda s: isinstance(s, P))

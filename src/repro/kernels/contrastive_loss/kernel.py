@@ -147,7 +147,7 @@ def _diag_mask(i, j, bm, bn):
 
 
 def _fused_bwd_kernel(x_ref, y_ref, inv_tau_ref, rlse_ref, clse_ref,
-                      dx_ref, dy_ref, dtau_ref, *, bm, bn, b):
+                      dx_ref, dy_ref, dtau_ref, *, bm, bn, b_norm, with_diag):
     i, j = pl.program_id(0), pl.program_id(1)
 
     @pl.when(j == 0)
@@ -162,7 +162,10 @@ def _fused_bwd_kernel(x_ref, y_ref, inv_tau_ref, rlse_ref, clse_ref,
     a = _tile(x_ref, y_ref, inv_tau)
     p_row = jnp.exp(a - rlse_ref[...][:, None])
     p_col = jnp.exp(a - clse_ref[...][None, :])
-    da = (p_row + p_col - 2.0 * _diag_mask(i, j, bm, bn)) / (2.0 * b)
+    da = p_row + p_col
+    if with_diag:
+        da = da - 2.0 * _diag_mask(i, j, bm, bn)
+    da = da / (2.0 * b_norm)
 
     dx_ref[...] += _contract(da, y_ref) * inv_tau
     dy_contrib = _contract(da.T, x_ref) * inv_tau
@@ -180,15 +183,23 @@ def _fused_bwd_kernel(x_ref, y_ref, inv_tau_ref, rlse_ref, clse_ref,
 
 
 def bwd_fused(x, y, inv_tau, row_lse, col_lse, *, bm=128, bn=128,
-              interpret=False):
-    """Single grid sweep -> (dX, dY, dlog_tau), gradients in fp32."""
+              interpret=False, b_norm=None, with_diag=True):
+    """Single grid sweep -> (dX, dY, dlog_tau), gradients in fp32.
+
+    ``b_norm`` overrides the 1/(2B) normalization batch (the GLOBAL batch
+    when this kernel computes one remote-negative chunk of a cross-shard
+    loss — core/distributed_loss.py); ``with_diag=False`` drops the
+    -2·δ_ij positive-pair term, which only lives in the shard-diagonal
+    chunk of the global matrix (DESIGN.md §7.2)."""
     b, d = x.shape
     assert b % bm == 0 and b % bn == 0, (b, bm, bn)
     ni, nj = b // bm, b // bn
     inv_tau = jnp.asarray([inv_tau], jnp.float32)
 
     dx, dy, dtau = pl.pallas_call(
-        functools.partial(_fused_bwd_kernel, bm=bm, bn=bn, b=b),
+        functools.partial(_fused_bwd_kernel, bm=bm, bn=bn,
+                          b_norm=b if b_norm is None else b_norm,
+                          with_diag=with_diag),
         grid=(ni, nj),
         in_specs=[
             pl.BlockSpec((bm, d), lambda i, j: (i, 0)),
@@ -241,7 +252,7 @@ def _col_lse_kernel(y_ref, x_ref, inv_tau_ref, m_ref, s_ref, *, ni):
 
 
 def _dx_kernel(x_ref, y_ref, inv_tau_ref, rlse_ref, clse_ref,
-               dx_ref, dtau_ref, *, bm, bn, b):
+               dx_ref, dtau_ref, *, bm, bn, b_norm, with_diag):
     i, j = pl.program_id(0), pl.program_id(1)
 
     @pl.when(j == 0)
@@ -255,13 +266,16 @@ def _dx_kernel(x_ref, y_ref, inv_tau_ref, rlse_ref, clse_ref,
     a = _tile(x_ref, y_ref, inv_tau_ref[0])
     p_row = jnp.exp(a - rlse_ref[...][:, None])
     p_col = jnp.exp(a - clse_ref[...][None, :])
-    da = (p_row + p_col - 2.0 * _diag_mask(i, j, bm, bn)) / (2.0 * b)
+    da = p_row + p_col
+    if with_diag:
+        da = da - 2.0 * _diag_mask(i, j, bm, bn)
+    da = da / (2.0 * b_norm)
     dx_ref[...] += _contract(da, y_ref) * inv_tau_ref[0]
     dtau_ref[...] += -jnp.sum(da * a)
 
 
 def _dy_kernel(y_ref, x_ref, inv_tau_ref, rlse_ref, clse_ref, dy_ref,
-               *, bm, bn, b):
+               *, bm, bn, b_norm, with_diag):
     j, i = pl.program_id(0), pl.program_id(1)
 
     @pl.when(i == 0)
@@ -271,7 +285,10 @@ def _dy_kernel(y_ref, x_ref, inv_tau_ref, rlse_ref, clse_ref, dy_ref,
     a_t = _tile(y_ref, x_ref, inv_tau_ref[0])          # (bn, bm): A_ij^T
     p_row = jnp.exp(a_t - rlse_ref[...][None, :])      # softmax over rows of A
     p_col = jnp.exp(a_t - clse_ref[...][:, None])
-    da_t = (p_row + p_col - 2.0 * _diag_mask(j, i, bn, bm)) / (2.0 * b)
+    da_t = p_row + p_col
+    if with_diag:
+        da_t = da_t - 2.0 * _diag_mask(j, i, bn, bm)
+    da_t = da_t / (2.0 * b_norm)
     dy_ref[...] += _contract(da_t, x_ref) * inv_tau_ref[0]
 
 
@@ -318,13 +335,17 @@ def row_col_lse(x, y, inv_tau, *, bm=128, bn=128, interpret=False):
 
 
 def grads(x, y, inv_tau, row_lse, col_lse, *, bm=128, bn=128,
-          interpret=False):
+          interpret=False, b_norm=None, with_diag=True):
+    """Two grid sweeps -> (dX, dY, dlog_tau), gradients in fp32 (legacy
+    backward; ``b_norm``/``with_diag`` as in :func:`bwd_fused`)."""
     b, d = x.shape
     ni, nj = b // bm, b // bn
     inv_tau = jnp.asarray([inv_tau], jnp.float32)
+    b_norm = b if b_norm is None else b_norm
 
     dx, dtau = pl.pallas_call(
-        functools.partial(_dx_kernel, bm=bm, bn=bn, b=b),
+        functools.partial(_dx_kernel, bm=bm, bn=bn, b_norm=b_norm,
+                          with_diag=with_diag),
         grid=(ni, nj),
         in_specs=[
             pl.BlockSpec((bm, d), lambda i, j: (i, 0)),
@@ -343,7 +364,8 @@ def grads(x, y, inv_tau, row_lse, col_lse, *, bm=128, bn=128,
     )(x, y, inv_tau, row_lse, col_lse)
 
     dy = pl.pallas_call(
-        functools.partial(_dy_kernel, bm=bm, bn=bn, b=b),
+        functools.partial(_dy_kernel, bm=bm, bn=bn, b_norm=b_norm,
+                          with_diag=with_diag),
         grid=(nj, ni),
         in_specs=[
             pl.BlockSpec((bn, d), lambda j, i: (j, 0)),

@@ -146,6 +146,13 @@ def autotune_blocks(b: int, d: int, dtype=jnp.float32, *, timed: bool = False,
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
 def fused_contrastive_loss(x, y, log_tau, interpret=False, bm=None, bn=None):
+    """Paper Eq. 3 contrastive loss via the single-pass fused kernels.
+
+    x, y: (B, D) fp32/bf16 unit-norm embeddings (B % 8 == 0); log_tau:
+    scalar fp32. Returns the scalar fp32 loss; differentiable via a
+    custom VJP whose backward is one more Pallas sweep (dX/dY in the
+    input dtype, dlog_tau fp32). interpret/bm/bn are static overrides
+    (see module docstring)."""
     loss, _ = _fwd(x, y, log_tau, interpret, bm, bn)
     return loss
 
@@ -182,9 +189,52 @@ fused_contrastive_loss.defvjp(_fwd, _bwd)
 
 
 def fused_loss_and_lse(x, y, log_tau, interpret=False, bm=None, bn=None):
-    """Non-VJP entry returning (loss, row_lse, col_lse) for diagnostics."""
+    """Non-VJP entry returning (loss, row_lse, col_lse) for diagnostics.
+
+    x, y: (B, D) fp32/bf16 unit-norm embeddings; log_tau: scalar fp32.
+    Returns (scalar fp32 loss, (B,) fp32 row LSE, (B,) fp32 col LSE)."""
     loss, (_, _, _, row_lse, col_lse) = _fwd(x, y, log_tau, interpret, bm, bn)
     return loss, row_lse, col_lse
+
+
+def chunk_row_col_lse(x, y_chunk, inv_tau, interpret=False, bm=None, bn=None):
+    """Blockwise row/col LSE of one square similarity chunk X·Y_chunkᵀ/τ.
+
+    The streaming unit of the cross-shard chunked-negatives loss
+    (core/distributed_loss.py, DESIGN.md §7.2): ``x`` is the shard's local
+    (B_local, D) block, ``y_chunk`` one remote shard's (B_local, D) block.
+    Returns ((B_local,) fp32 partial row LSE over this chunk's columns,
+    (B_local,) fp32 partial col LSE over this chunk's rows); the caller
+    logaddexp-combines row partials across chunks and psum-combines col
+    partials across shards. One Pallas launch, no (B, B) materialization."""
+    b, d = x.shape
+    bm, bn = pick_blocks(b, d, x.dtype.itemsize, bm=bm, bn=bn)
+    return kernel.fwd_fused(x, y_chunk, inv_tau, bm=bm, bn=bn,
+                            interpret=interpret)
+
+
+def chunk_grads(x, y_chunk, inv_tau, row_lse, col_lse_chunk, *, b_norm,
+                with_diag=False, interpret=False, bm=None, bn=None):
+    """dX/dY/dτ contribution of one square chunk of the cross-shard loss.
+
+    x, y_chunk: (B_local, D); row_lse: (B_local,) GLOBAL row LSE of the
+    local rows; col_lse_chunk: (B_local,) GLOBAL col LSE of this chunk's
+    columns; b_norm: the GLOBAL batch size (1/(2·B_global) normalization).
+    ``with_diag`` is True only for the shard-diagonal chunk, where the
+    positive pairs live. Returns ((B_local, D) fp32 dX partial,
+    (B_local, D) fp32 dY partial for this chunk's columns, scalar fp32
+    dlog_tau partial). Uses the single-pass fused backward when its VMEM
+    residency fits, else the legacy two-sweep kernels (same fallback rule
+    as the square loss, DESIGN.md §2.3)."""
+    b, d = x.shape
+    bm, bn = pick_blocks(b, d, x.dtype.itemsize, bm=bm, bn=bn)
+    if interpret or bwd_fits_fused(b, d, bm, bn, x.dtype.itemsize):
+        return kernel.bwd_fused(x, y_chunk, inv_tau, row_lse, col_lse_chunk,
+                                bm=bm, bn=bn, interpret=interpret,
+                                b_norm=b_norm, with_diag=with_diag)
+    return kernel.grads(x, y_chunk, inv_tau, row_lse, col_lse_chunk,
+                        bm=bm, bn=bn, interpret=interpret,
+                        b_norm=b_norm, with_diag=with_diag)
 
 
 def fused_loss_and_lse_4pass(x, y, log_tau, interpret=False, bm=None,

@@ -10,6 +10,14 @@ Usage:
   python -m repro.launch.dryrun --arch llama3.2-1b --shape train_4k \
       --mesh pod --sharding basic_ws [--remat basic] [--out DIR]
   python -m repro.launch.dryrun --all --mesh pod      # every combo
+
+``--arch``/``--shape`` are required unless ``--all``; dual-encoder archs
+(basic-{s,m,l}) compile the paper's contrastive GradAccum step instead of
+an LM step. Model/compile knobs — ``--attn {naive,chunked}``,
+``--dispatch {dense,capacity}``, ``--moe-group N``, ``--param-dtype
+{bf16,f32}``, ``--batch-over {data,all}``, ``--ssm-chunk N``,
+``--unroll N`` — tag the output JSON filename; results land one file per
+combo under ``--out`` (default experiments/dryrun, cached by filename).
 """
 import argparse      # noqa: E402
 import json          # noqa: E402
@@ -164,27 +172,45 @@ def run_one(arch: str, shape_name: str, *, multi_pod=False,
 
 
 def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch")
-    ap.add_argument("--shape")
+    ap = argparse.ArgumentParser(
+        description="lower + compile (arch × input-shape × mesh) combos on "
+                    "512 simulated devices; writes one JSON per combo")
+    ap.add_argument("--arch", help="arch name from repro.configs "
+                                   "(required unless --all)")
+    ap.add_argument("--shape", help="input-shape name from "
+                                    "configs.INPUT_SHAPES "
+                                    "(required unless --all)")
     ap.add_argument("--mesh", choices=["pod", "multipod", "both"],
-                    default="pod")
+                    default="pod",
+                    help="16x16 pod, 2x16x16 multipod, or both")
     ap.add_argument("--sharding", default="basic_ws",
-                    choices=["basic_ws", "tp", "replicated"])
-    ap.add_argument("--remat", default="basic")
+                    choices=["basic_ws", "tp", "replicated"],
+                    help="weight-sharding mode (core.sharding)")
+    ap.add_argument("--remat", default="basic",
+                    help="jax.checkpoint policy (core.remat registry)")
     ap.add_argument("--all", action="store_true",
                     help="run every applicable (arch × shape)")
-    ap.add_argument("--out", default="experiments/dryrun")
-    ap.add_argument("--attn", default="naive", choices=["naive", "chunked"])
+    ap.add_argument("--out", default="experiments/dryrun",
+                    help="output dir; existing result files are skipped")
+    ap.add_argument("--attn", default="naive", choices=["naive", "chunked"],
+                    help="attention implementation override")
     ap.add_argument("--dispatch", default=None,
-                    choices=[None, "dense", "capacity"])
-    ap.add_argument("--param-dtype", default=None, choices=[None, "bf16", "f32"])
-    ap.add_argument("--batch-over", default="data", choices=["data", "all"])
-    ap.add_argument("--ssm-chunk", type=int, default=None)
-    ap.add_argument("--moe-group", type=int, default=4096)
+                    choices=[None, "dense", "capacity"],
+                    help="MoE dispatch override")
+    ap.add_argument("--param-dtype", default=None,
+                    choices=[None, "bf16", "f32"],
+                    help="cast floating params before compile")
+    ap.add_argument("--batch-over", default="data", choices=["data", "all"],
+                    help="input batch over the data axes only, or over ALL "
+                         "cores incl. model (paper §5.1)")
+    ap.add_argument("--ssm-chunk", type=int, default=None,
+                    help="SSM scan chunk override")
+    ap.add_argument("--moe-group", type=int, default=4096,
+                    help="MoE dispatch group size")
     ap.add_argument("--unroll", type=int, default=None,
-                    help="layer-scan unroll (default: full for accurate "
-                         "cost analysis; 1 = cheap compile-check)")
+                    help="layer-scan unroll (default: compile at unroll=1 "
+                         "and 2, then extrapolate the homogeneous loop "
+                         "body for accurate cost analysis)")
     args = ap.parse_args()
 
     combos = []

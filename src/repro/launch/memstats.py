@@ -1,0 +1,227 @@
+"""Per-step memory + FLOPs accounting for the contrastive training step.
+
+The paper's two scaling limits — accelerator memory and the global
+contrastive batch — meet in one table: for each remat policy (and loss
+implementation) this module AOT-compiles the full train step and reports
+XLA's compiled-memory analysis (argument/output/temp bytes per device,
+peak GB) next to the HLO FLOPs estimate and the analytic VMEM working
+set of the fused loss kernels (XLA's CPU/host compile cannot see TPU
+VMEM, so the kernel-side numbers come from the same footprint model that
+picks the block sizes — kernels.contrastive_loss.ops). The measured
+remat policy table in DESIGN.md §7.4 is generated this way.
+
+CLI (the device count is simulated; run BEFORE any other jax init):
+
+  PYTHONPATH=src python -m repro.launch.memstats --arch basic-s --smoke \\
+      --devices 8 --model-parallel 2 --batch 64 --num-micro 2 \\
+      --remat basic,none,full,dots --loss chunked
+
+Library: ``step_stats(jitted_fn, example_inputs)`` for one compiled
+report row (also surfaced as ``train_distributed --memstats``);
+``contrastive_report(...)`` for the policy sweep; ``format_rows`` to
+render. All rows are plain dicts, JSON-ready (``--json PATH``).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+
+def _mem_dict(mem) -> dict:
+    """memory_analysis() object -> plain per-device byte counts."""
+    arg = int(getattr(mem, "argument_size_in_bytes", 0))
+    out = int(getattr(mem, "output_size_in_bytes", 0))
+    tmp = int(getattr(mem, "temp_size_in_bytes", 0))
+    alias = int(getattr(mem, "alias_size_in_bytes", 0))
+    return {
+        "argument_bytes_per_device": arg,
+        "output_bytes_per_device": out,
+        "temp_bytes_per_device": tmp,
+        "alias_bytes_per_device": alias,
+        "peak_gb_per_device": round((arg + tmp) / 2**30, 4),
+    }
+
+
+def compiled_stats(compiled, *, label: str = "") -> dict:
+    """Accounting row for an already-AOT-compiled executable (the result
+    of ``jax.jit(fn).lower(...).compile()``): compiled per-device memory
+    (HBM), HLO FLOPs/bytes-accessed estimates, and cross-device
+    collective traffic. No execution happens."""
+    cost = compiled.cost_analysis() or {}
+    if isinstance(cost, (list, tuple)):      # older jax: one dict per program
+        cost = cost[0] if cost else {}
+    row = {"label": label, "memory": _mem_dict(compiled.memory_analysis()),
+           "flops_per_device": float(cost.get("flops", 0.0)),
+           "bytes_accessed_per_device": float(cost.get("bytes accessed",
+                                                       0.0))}
+    try:
+        from repro.launch import roofline as rf
+        row["collectives"] = rf.collective_bytes(compiled.as_text())
+    except Exception:  # noqa: BLE001 — HLO text dump is best-effort
+        row["collectives"] = {}
+    return row
+
+
+def step_stats(jitted_fn, example_inputs, *, label: str = "") -> dict:
+    """Compile ``jitted_fn`` on ``example_inputs`` (a tuple of concrete or
+    abstract positional args) and return its ``compiled_stats`` row. The
+    compiled executable is discarded — callers that will also RUN the step
+    should lower/compile themselves and pass the result to
+    ``compiled_stats`` (AOT compilation does not populate jit's dispatch
+    cache; see train_distributed --memstats)."""
+    import jax
+
+    if not hasattr(jitted_fn, "lower"):
+        jitted_fn = jax.jit(jitted_fn)
+    compiled = jitted_fn.lower(*example_inputs).compile()
+    return compiled_stats(compiled, label=label)
+
+
+def loss_kernel_vmem(b_local: int, d: int, itemsize: int = 4) -> dict:
+    """Analytic VMEM working set of the fused contrastive-loss kernels at
+    per-shard batch ``b_local`` and embed dim ``d`` (bytes): the picked
+    (bm, bn) block pair, the per-grid-step block bytes, and whether the
+    single-pass backward's resident dY carrier fits compiled VMEM (else
+    the legacy two-sweep backward runs — DESIGN.md §2.3/§2.4)."""
+    from repro.kernels.contrastive_loss import ops
+    bm, bn = ops.pick_blocks(b_local, d, itemsize)
+    return {
+        "bm": bm, "bn": bn,
+        "block_bytes": ops.block_bytes(bm, bn, d, itemsize),
+        "bwd_dy_carrier_bytes": b_local * d * 4,
+        "bwd_single_pass_fits": ops.bwd_fits_fused(b_local, d, bm, bn,
+                                                   itemsize),
+    }
+
+
+def contrastive_report(arch: str, *, smoke: bool, mesh, sharding: str,
+                       batch: int, num_micro: int, seq: int,
+                       remats, loss: str = "chunked",
+                       dtype=None) -> list[dict]:
+    """One accounting row per remat policy for the full contrastive train
+    step (GradAccum × data-parallel × tensor-parallel × global-batch
+    loss) compiled on ``mesh``. remats: iterable of core.remat registry
+    names. Abstract inputs only — nothing is allocated or run."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import get_arch, smoke_dual_variant
+    from repro.core import sharding as shd
+    from repro.launch import steps as st
+    from repro.models import dual_encoder as de
+
+    cfg = get_arch(arch)
+    if smoke:
+        cfg = smoke_dual_variant(cfg)
+
+    params_abs = jax.eval_shape(lambda k: de.init_params(cfg, k),
+                                jax.random.key(0))
+    pspecs = shd.to_named(shd.params_specs(params_abs, mesh, sharding), mesh)
+    SDS = jax.ShapeDtypeStruct
+    it = cfg.image_tower
+    batch_abs = {
+        "images": {"patch_embeddings":
+                   SDS((batch, it.frontend_len, it.d_model), jnp.float32)},
+        "texts": {"tokens": SDS((batch, seq), jnp.int32)},
+    }
+    bspecs = shd.to_named(shd.batch_specs(batch_abs, mesh), mesh)
+
+    data_size = 1
+    for a in shd.data_axes(mesh):
+        if a in mesh.shape:
+            data_size *= mesh.shape[a]
+
+    rows = []
+    for remat in remats:
+        step, opt = st.make_contrastive_step(cfg, num_micro=num_micro,
+                                             remat=remat, mesh=mesh,
+                                             loss=loss)
+        opt_abs = jax.eval_shape(opt.init, params_abs)
+        ospecs = shd.to_named(shd.params_specs(opt_abs, mesh, sharding),
+                              mesh)
+        with mesh:
+            row = step_stats(
+                jax.jit(step, in_shardings=(pspecs, ospecs, bspecs)),
+                (params_abs, opt_abs, batch_abs),
+                label=f"{arch} B={batch} micro={num_micro} loss={loss} "
+                      f"remat={remat}")
+        row["remat"] = remat
+        # chunked streams (B_local, B_local) chunks; allgather/local/fused
+        # run the kernel on the FULL gathered batch on every shard.
+        # Embeddings are fp32 regardless of tower dtype (the dual encoder
+        # casts at the projection), hence itemsize 4.
+        kernel_b = (max(8, batch // data_size) if loss == "chunked"
+                    else batch)
+        row["loss_kernel_vmem"] = loss_kernel_vmem(kernel_b, cfg.embed_dim)
+        rows.append(row)
+    return rows
+
+
+def format_rows(rows) -> str:
+    """Render accounting rows as an aligned text table."""
+    head = (f"{'label':<56} {'peak GB/dev':>11} {'temp MB':>9} "
+            f"{'args MB':>9} {'GFLOPs/dev':>11} {'coll MB':>9}")
+    lines = [head, "-" * len(head)]
+    for r in rows:
+        m = r["memory"]
+        coll = r.get("collectives", {}).get("total", 0) / 2**20
+        lines.append(
+            f"{r['label']:<56} {m['peak_gb_per_device']:>11.4f} "
+            f"{m['temp_bytes_per_device']/2**20:>9.1f} "
+            f"{m['argument_bytes_per_device']/2**20:>9.1f} "
+            f"{r['flops_per_device']/1e9:>11.3f} {coll:>9.1f}")
+        kv = r.get("loss_kernel_vmem")
+        if kv:
+            lines.append(
+                f"    loss kernel VMEM: blocks=({kv['bm']},{kv['bn']}) "
+                f"block={kv['block_bytes']/2**10:.0f}KiB "
+                f"dY-carrier={kv['bwd_dy_carrier_bytes']/2**10:.0f}KiB "
+                f"single-pass-bwd={'yes' if kv['bwd_single_pass_fits'] else 'no (legacy fallback)'}")
+    return "\n".join(lines)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="compiled per-step memory/FLOPs accounting for the "
+                    "contrastive global-batch train step")
+    ap.add_argument("--arch", default="basic-s")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--devices", type=int, default=None,
+                    help="simulate N host-platform devices (must be the "
+                         "first jax init in the process)")
+    ap.add_argument("--model-parallel", type=int, default=1)
+    ap.add_argument("--sharding", default="basic_ws",
+                    choices=["basic_ws", "tp", "replicated"])
+    ap.add_argument("--batch", type=int, default=64)
+    ap.add_argument("--num-micro", type=int, default=2)
+    ap.add_argument("--seq", type=int, default=16)
+    ap.add_argument("--loss", default="chunked",
+                    choices=["local", "fused", "allgather", "chunked"])
+    ap.add_argument("--remat", default="basic,none,full,dots",
+                    help="comma-separated core.remat policy names")
+    ap.add_argument("--json", default=None, help="also write rows to PATH")
+    args = ap.parse_args(argv)
+
+    if args.devices:
+        os.environ["XLA_FLAGS"] = (
+            os.environ.get("XLA_FLAGS", "")
+            + f" --xla_force_host_platform_device_count={args.devices}")
+    from repro.launch.mesh import make_local_mesh
+    mesh = make_local_mesh(model=args.model_parallel)
+    rows = contrastive_report(
+        args.arch, smoke=args.smoke, mesh=mesh, sharding=args.sharding,
+        batch=args.batch, num_micro=args.num_micro, seq=args.seq,
+        remats=[r.strip() for r in args.remat.split(",") if r.strip()],
+        loss=args.loss)
+    print(format_rows(rows))
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(rows, f, indent=1)
+        print(f"wrote {args.json}", file=sys.stderr)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -97,28 +97,66 @@ def make_serve_step(cfg: ArchConfig, *, moe_args: Optional[dict] = None,
 
 
 def make_contrastive_step(dual_cfg, *, num_micro: int = 8,
-                          remat: str = "basic", lr: float = 2.5e-4,
-                          dtype=jnp.bfloat16, unroll: int = 1):
+                          remat: str = "basic", remat_image: str = None,
+                          remat_text: str = None, lr: float = 2.5e-4,
+                          dtype=jnp.bfloat16, unroll: int = 1,
+                          mesh=None, loss: str = "local",
+                          loss_opts: Optional[dict] = None):
     """The paper's own training step: Algorithm-1 GradAccum over num_micro
-    microbatches (B=65536, M=B/num_micro=8192 matches App. E) + AdaFactorW."""
+    microbatches (B=65536, M=B/num_micro=8192 matches App. E) + AdaFactorW.
+
+    remat selects the jax.checkpoint policy for both towers;
+    remat_image/remat_text override it per tower (core.remat registry).
+    ``loss`` selects the embedding-level loss:
+      'local'     — materializing reference (core.contrastive, B×B in HBM)
+      'fused'     — single-pass fused Pallas kernel, single-device global
+      'allgather' / 'chunked' — cross-shard GLOBAL-batch loss over the
+        data axes of ``mesh`` (required), via core.distributed_loss; the
+        embeddings are pinned batch-sharded so GradAccum × data-parallel ×
+        tensor-parallel compose under one jit (DESIGN.md §7).
+    ``loss_opts`` forwards kernel overrides (interpret/bm/bn).
+    Returns (train_step, opt); train_step(params, opt_state, batch) ->
+    (params, opt_state, loss, metrics)."""
+    from repro.core import distributed_loss as dist
+    from repro.core.contrastive import contrastive_loss, fused_kernel_loss
     from repro.core.gradaccum import contrastive_step as ga_step
     from repro.models import dual_encoder as de
     opt = make_optimizer()
-    policy = remat_lib.get_policy(remat)
+    policy_i = remat_lib.get_policy(remat if remat_image is None
+                                    else remat_image)
+    policy_t = remat_lib.get_policy(remat if remat_text is None
+                                    else remat_text)
+
+    emb_shd = None
+    if loss == "local":
+        loss_fn, lopts = contrastive_loss, (loss_opts or {})
+    elif loss == "fused":
+        loss_fn, lopts = fused_kernel_loss, (loss_opts or {})
+    elif loss in dist.METHODS:
+        if mesh is None:
+            raise ValueError(f"loss={loss!r} needs a mesh")
+        loss_fn = dist.make_global_loss_fn(mesh, loss, **(loss_opts or {}))
+        lopts = {}
+        emb_shd = dist.emb_sharding(mesh)
+    else:
+        raise ValueError(f"unknown loss {loss!r}")
 
     def enc_i(p, images):
         return de.encode_image(dual_cfg, p, images, dtype=dtype,
-                               remat_policy=policy)
+                               remat_policy=policy_i)
 
     def enc_t(p, texts):
         return de.encode_text(dual_cfg, p, texts, dtype=dtype,
-                              remat_policy=policy)
+                              remat_policy=policy_t)
 
     def train_step(params, opt_state, batch):
-        loss, metrics, grads = ga_step(enc_i, enc_t, params, batch, num_micro)
+        loss_val, metrics, grads = ga_step(enc_i, enc_t, params, batch,
+                                           num_micro, loss_fn=loss_fn,
+                                           loss_opts=lopts,
+                                           emb_sharding=emb_shd)
         updates, opt_state = opt.update(grads, opt_state, params, lr)
         params = apply_updates(params, updates)
-        return params, opt_state, loss
+        return params, opt_state, loss_val, metrics
 
     return train_step, opt
 

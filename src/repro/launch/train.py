@@ -19,7 +19,6 @@ Examples:
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import time
 
 import jax
@@ -39,12 +38,8 @@ from repro.optim import AdaFactorW, apply_updates, warmup_cosine
 
 
 def _smoke_dual(cfg):
-    return dataclasses.replace(
-        cfg,
-        image_tower=smoke_variant(cfg.image_tower),
-        text_tower=smoke_variant(cfg.text_tower),
-        embed_dim=64,
-    )
+    from repro.configs import smoke_dual_variant
+    return smoke_dual_variant(cfg, embed_dim=64)
 
 
 # ---------------------------------------------------------------------------

@@ -1,12 +1,30 @@
-"""Distributed LM trainer: the pjit production loop at any mesh size.
+"""Distributed trainer: the pjit production loop at any mesh size.
 
 The same code path drives a 1-device dev box and the 16×16 pod: params are
 initialized DIRECTLY into their shardings (no host-side full copy), the step
 is jitted with donated buffers, data comes from the shard-aware prefetching
 pipeline, and checkpoints round-trip with resume.
 
-  python -m repro.launch.train_distributed --arch llama3.2-1b --smoke \
+Two objectives share the loop (``--objective`` defaults to ``auto``: picked
+by arch family):
+
+  lm           — next-token loss on a single transformer (LM archs)
+  contrastive  — the paper's dual-encoder objective: Algorithm-1 GradAccum
+                 (``--num-micro``) over the GLOBAL batch, with the
+                 cross-shard global-batch loss (``--loss allgather`` or
+                 ``--loss chunked``, core/distributed_loss.py) so the
+                 contrastive batch does NOT shrink with the data-parallel
+                 degree; per-tower remat via ``--remat-image`` /
+                 ``--remat-text`` (DESIGN.md §7)
+
+  python -m repro.launch.train_distributed --arch llama3.2-1b --smoke \\
       --steps 50 --batch 8 --seq 128 --model-parallel 1 --ckpt-dir /tmp/ck
+
+  python -m repro.launch.train_distributed --arch basic-s --smoke \\
+      --steps 20 --batch 32 --num-micro 2 --loss chunked
+
+``--memstats`` prints the compiled per-step memory/FLOPs report
+(launch/memstats.py) before training starts.
 """
 from __future__ import annotations
 
@@ -20,20 +38,21 @@ import numpy as np
 from repro import checkpoint as ckpt
 from repro.configs import get_arch, smoke_variant
 from repro.core import sharding as shd
-from repro.core.remat import get_policy
+from repro.core.remat import get_policy, list_policies
 from repro.data.pipeline import Prefetcher, host_rng
 from repro.launch.mesh import make_local_mesh
 from repro.models import frontends, transformer as tf
 from repro.optim import AdaFactorW, apply_updates, warmup_cosine
 
 
-def build_state(cfg, mesh, mode, opt, seed):
-    """Init params/opt-state directly into their shardings."""
-    params_abs = jax.eval_shape(lambda k: tf.init_params(cfg, k),
-                                jax.random.key(seed))
+def build_state(init_fn, mesh, mode, opt, seed):
+    """Init params/opt-state directly into their shardings.
+
+    init_fn(key) -> params pytree (LM or dual-encoder). Returns
+    (params, opt_state, param shardings, opt-state shardings)."""
+    params_abs = jax.eval_shape(init_fn, jax.random.key(seed))
     pspecs = shd.to_named(shd.params_specs(params_abs, mesh, mode), mesh)
-    params = jax.jit(lambda k: tf.init_params(cfg, k),
-                     out_shardings=pspecs)(jax.random.key(seed))
+    params = jax.jit(init_fn, out_shardings=pspecs)(jax.random.key(seed))
     opt_abs = jax.eval_shape(opt.init, params_abs)
     ospecs = shd.to_named(shd.params_specs(opt_abs, mesh, mode), mesh)
     opt_state = jax.jit(opt.init, out_shardings=ospecs)(params)
@@ -41,6 +60,7 @@ def build_state(cfg, mesh, mode, opt, seed):
 
 
 def make_step(cfg, opt, lr_fn, *, remat="basic", moe_args=None):
+    """LM train step: next-token loss + AdaFactorW update, jit-ready."""
     policy = get_policy(remat)
 
     def train_step(params, opt_state, batch, step):
@@ -61,7 +81,49 @@ def make_step(cfg, opt, lr_fn, *, remat="basic", moe_args=None):
     return train_step
 
 
-def train(args):
+def _run_loop(args, step_fn, params, opt_state, make_batch, start, *,
+              step_takes_index):
+    """Shared prefetch/step/log/checkpoint loop; returns per-step losses."""
+    stop = getattr(args, "stop_after", None) or args.steps
+    stream = Prefetcher(make_batch, depth=2, start=start)
+    t0, losses = time.time(), []
+    for i in range(start, min(args.steps, stop)):
+        batch = next(stream)
+        if step_takes_index:
+            params, opt_state, loss, metrics = step_fn(
+                params, opt_state, batch, jnp.asarray(i))
+        else:
+            params, opt_state, loss, metrics = step_fn(
+                params, opt_state, batch)
+        losses.append(float(loss))
+        if i % args.log_every == 0 or i == args.steps - 1:
+            gnorm = metrics.get("grad_norm")
+            gtxt = f"gnorm {float(gnorm):.2f} " if gnorm is not None else ""
+            print(f"step {i:5d} loss {float(loss):.4f} {gtxt}"
+                  f"{(time.time()-t0)/max(1, i-start+1):.2f}s/step")
+        if args.ckpt_dir and args.ckpt_every and \
+                (i + 1) % args.ckpt_every == 0:
+            ckpt.save(args.ckpt_dir, i + 1, (params, opt_state))
+    stream.close()
+    if args.ckpt_dir:
+        ckpt.save(args.ckpt_dir, min(args.steps, stop),
+                  (params, opt_state))
+    return losses
+
+
+def _restore(args, params, opt_state, pspecs, ospecs):
+    start = 0
+    if args.ckpt_dir and (latest := ckpt.latest_step(args.ckpt_dir)):
+        like = jax.eval_shape(lambda: (params, opt_state))
+        params, opt_state = ckpt.restore(args.ckpt_dir, latest, like,
+                                         shardings=(pspecs, ospecs))
+        start = latest
+        print(f"resumed from step {start}")
+    return params, opt_state, start
+
+
+def train_lm(args):
+    """LM objective at any mesh size; returns the per-step loss list."""
     cfg = get_arch(args.arch)
     if args.smoke:
         cfg = smoke_variant(cfg)
@@ -73,16 +135,10 @@ def train(args):
 
     with mesh:
         params, opt_state, pspecs, ospecs = build_state(
-            cfg, mesh, args.sharding, opt, args.seed)
-
-        start = 0
-        if args.ckpt_dir and (latest := ckpt.latest_step(args.ckpt_dir)):
-            like = jax.eval_shape(lambda: (params, opt_state))
-            params, opt_state = ckpt.restore(args.ckpt_dir, latest, like,
-                                             shardings=(pspecs, ospecs))
-            start = latest
-            print(f"resumed from step {start}")
-
+            lambda k: tf.init_params(cfg, k), mesh, args.sharding, opt,
+            args.seed)
+        params, opt_state, start = _restore(args, params, opt_state,
+                                            pspecs, ospecs)
         step_fn = jax.jit(make_step(cfg, opt, lr_fn, remat=args.remat,
                                     moe_args=moe_args),
                           donate_argnums=(0, 1))
@@ -92,41 +148,147 @@ def train(args):
             b = frontends.synthetic_inputs(cfg, args.batch, args.seq, rng)
             return jax.tree.map(jnp.asarray, b)
 
-        stop = getattr(args, "stop_after", None) or args.steps
-        stream = Prefetcher(make_batch, depth=2, start=start)
-        t0, losses = time.time(), []
-        for i in range(start, min(args.steps, stop)):
-            batch = next(stream)
-            params, opt_state, loss, metrics = step_fn(
-                params, opt_state, batch, jnp.asarray(i))
-            losses.append(float(loss))
-            if i % args.log_every == 0 or i == args.steps - 1:
-                print(f"step {i:5d} loss {float(loss):.4f} "
-                      f"gnorm {float(metrics['grad_norm']):.2f} "
-                      f"{(time.time()-t0)/max(1, i-start+1):.2f}s/step")
-            if args.ckpt_dir and args.ckpt_every and \
-                    (i + 1) % args.ckpt_every == 0:
-                ckpt.save(args.ckpt_dir, i + 1, (params, opt_state))
-        stream.close()
-        if args.ckpt_dir:
-            ckpt.save(args.ckpt_dir, min(args.steps, stop),
-                      (params, opt_state))
-        return losses
+        return _run_loop(args, step_fn, params, opt_state, make_batch, start,
+                         step_takes_index=True)
+
+
+def train_contrastive(args):
+    """Paper objective: GradAccum × data-parallel × tensor-parallel with the
+    cross-shard global-batch contrastive loss, one jit. Returns the
+    per-step loss list."""
+    from repro.configs import smoke_dual_variant
+    from repro.data import Tokenizer, caption_corpus, contrastive_batch, \
+        make_world
+    from repro.launch import steps as st
+    from repro.models import dual_encoder as de
+
+    cfg = get_arch(args.arch)
+    if args.smoke:
+        cfg = smoke_dual_variant(cfg)
+    mesh = make_local_mesh(model=args.model_parallel)
+    num_micro = getattr(args, "num_micro", 2)
+    loss = getattr(args, "loss", "chunked")
+
+    data_size = int(np.prod([mesh.shape[a] for a in shd.data_axes(mesh)
+                             if a in mesh.shape]))
+    if args.batch % num_micro:
+        raise SystemExit(f"--batch {args.batch} must be divisible by "
+                         f"--num-micro {num_micro}")
+    if loss in ("allgather", "chunked"):
+        if args.batch % data_size:
+            raise SystemExit(
+                f"--loss {loss}: --batch {args.batch} must be divisible by "
+                f"the data extent {data_size} (one equal block per shard)")
+        if (args.batch // data_size) % 8:
+            raise SystemExit(
+                f"--loss {loss}: per-shard batch {args.batch}/{data_size} "
+                f"must be a multiple of 8 (fused-kernel tiling; see "
+                f"kernels.contrastive_loss.ops.pick_blocks)")
+
+    step_core, opt = st.make_contrastive_step(
+        cfg, num_micro=num_micro, remat=args.remat,
+        remat_image=getattr(args, "remat_image", None),
+        remat_text=getattr(args, "remat_text", None),
+        lr=args.lr, mesh=mesh, loss=loss)
+
+    with mesh:
+        params, opt_state, pspecs, ospecs = build_state(
+            lambda k: de.init_params(cfg, k), mesh, args.sharding, opt,
+            args.seed)
+        params, opt_state, start = _restore(args, params, opt_state,
+                                            pspecs, ospecs)
+        # pin the state's output shardings to its input shardings: the
+        # donated loop then reuses ONE executable (and the --memstats AOT
+        # compile below is the same one the loop runs)
+        step_fn = jax.jit(step_core, donate_argnums=(0, 1),
+                          out_shardings=(pspecs, ospecs, None, None))
+
+        world_rng = np.random.default_rng(args.seed)
+        world = make_world(world_rng, n_classes=16,
+                           n_patches=cfg.image_tower.frontend_len,
+                           patch_dim=cfg.image_tower.d_model, noise=0.2)
+        tok = Tokenizer.train(caption_corpus(world, world_rng, 400),
+                              vocab_size=400)
+
+        def make_batch(step):
+            rng = host_rng(args.seed, 0, step)
+            batch, _ = contrastive_batch(world, tok, args.batch, rng,
+                                         text_len=args.seq)
+            return jax.tree.map(jnp.asarray, batch)
+
+        if getattr(args, "memstats", False):
+            from repro.launch import memstats
+            # AOT-compile once, report, and run the loop on the SAME
+            # executable (jit's dispatch cache ignores lower().compile(),
+            # so calling step_fn afterwards would compile a second time)
+            compiled = step_fn.lower(params, opt_state,
+                                     make_batch(start)).compile()
+            print(memstats.format_rows([memstats.compiled_stats(
+                compiled,
+                label=f"{args.arch} B={args.batch} micro={num_micro} "
+                      f"loss={loss} remat={args.remat}")]))
+            step_fn = compiled
+
+        return _run_loop(args, step_fn, params, opt_state, make_batch, start,
+                         step_takes_index=False)
+
+
+def train(args):
+    """Dispatch on objective (``auto``: contrastive for dual-encoder archs,
+    i.e. configs without a ``family`` attribute; lm otherwise)."""
+    objective = getattr(args, "objective", "auto")
+    if objective == "auto":
+        objective = ("lm" if hasattr(get_arch(args.arch), "family")
+                     else "contrastive")
+    if objective == "lm":
+        return train_lm(args)
+    return train_contrastive(args)
 
 
 def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
-    ap.add_argument("--smoke", action="store_true")
+    ap = argparse.ArgumentParser(
+        description=__doc__.split("\n\n")[0],
+        formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("--arch", required=True,
+                    help="arch name from repro.configs (LM archs train the "
+                         "lm objective; basic-{s,m,l} train contrastive)")
+    ap.add_argument("--objective", default="auto",
+                    choices=["auto", "lm", "contrastive"])
+    ap.add_argument("--smoke", action="store_true",
+                    help="CPU-sized variant of the arch")
     ap.add_argument("--steps", type=int, default=100)
-    ap.add_argument("--batch", type=int, default=8)
-    ap.add_argument("--seq", type=int, default=128)
-    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--batch", type=int, default=8,
+                    help="GLOBAL batch (split over the data axes)")
+    ap.add_argument("--seq", type=int, default=128,
+                    help="sequence length (lm) / caption length "
+                         "(contrastive)")
+    ap.add_argument("--lr", type=float, default=1e-3,
+                    help="peak LR (lm: warmup-cosine schedule; "
+                         "contrastive: constant)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--sharding", default="basic_ws",
                     choices=["basic_ws", "tp", "replicated"])
-    ap.add_argument("--remat", default="basic")
+    remat_names = list_policies() + ["off"]   # 'off': no checkpoint wrapping
+    ap.add_argument("--remat", default="basic", choices=remat_names,
+                    help="jax.checkpoint policy (core.remat registry; "
+                         "'off' applies no checkpoint wrapping at all)")
+    ap.add_argument("--remat-image", default=None, choices=remat_names,
+                    help="override --remat for the image tower "
+                         "(contrastive only)")
+    ap.add_argument("--remat-text", default=None, choices=remat_names,
+                    help="override --remat for the text tower "
+                         "(contrastive only)")
     ap.add_argument("--model-parallel", type=int, default=1)
+    ap.add_argument("--num-micro", type=int, default=2,
+                    help="GradAccum microbatches (contrastive only)")
+    ap.add_argument("--loss", default="chunked",
+                    choices=["local", "fused", "allgather", "chunked"],
+                    help="contrastive loss impl (core.distributed_loss; "
+                         "'local'/'fused' compute on the logical global "
+                         "batch without explicit cross-shard collectives)")
+    ap.add_argument("--memstats", action="store_true",
+                    help="print the compiled per-step memory/FLOPs report "
+                         "before training (launch/memstats.py)")
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=0)

@@ -45,6 +45,8 @@ def params_fingerprint(params) -> str:
 
 @dataclasses.dataclass(frozen=True)
 class ClassMatrix:
+    """A registry artifact: one prompt-ensembled class-embedding matrix
+    plus its provenance (how ``ClassEmbeddingRegistry.get`` obtained it)."""
     key: str            # full registry key (sha256 hex)
     version: int        # artifact version under this key
     matrix: np.ndarray  # (n_classes, D) unit-norm fp32

@@ -34,16 +34,24 @@ from repro.serving.embed.registry import (ClassEmbeddingRegistry,
 
 @dataclasses.dataclass(frozen=True)
 class ClassifyResult:
+    """Top-k classification output of ``ZeroShotService.classify``."""
     values: np.ndarray        # (b, k) fp32 similarity/temperature logits
     indices: np.ndarray       # (b, k) int32 class ids, ties to lower id
     class_names: tuple        # the label space, for decoding
     version: int              # registry artifact version that classified
 
     def top_names(self, row: int):
+        """Class-name strings of row ``row``'s top-k, best first."""
         return [self.class_names[i] for i in self.indices[row]]
 
 
 class ZeroShotService:
+    """Zero-shot inference front door (DESIGN.md §6): micro-batched
+    embedding (MicroBatcher) + memoized class matrices
+    (ClassEmbeddingRegistry) + the fused Pallas similarity→top-k kernel,
+    behind ``classify`` / ``embed_images`` / ``embed_texts`` /
+    ``retrieve``. Context-manager friendly (stops the batcher on exit)."""
+
     def __init__(self, cfg: DualEncoderConfig, params, tok, *,
                  templates: Sequence[str] = DEFAULT_TEMPLATES,
                  text_len: int = 16,

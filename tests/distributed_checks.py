@@ -1,0 +1,148 @@
+"""Standalone multi-device checks for core/distributed_loss.py.
+
+Run by tests/test_distributed_loss.py in a SUBPROCESS with
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (the tier-1 pytest
+process pins the single real CPU device — see tests/conftest.py — and jax
+locks the device count at first init, so multi-shard meshes need their own
+process). Each check asserts the cross-shard GLOBAL-batch loss and its
+dX/dY/dτ gradients are bit-close to the single-device fused loss at the
+same global batch.
+
+Usage:  python tests/distributed_checks.py {loss|gradaccum}
+"""
+import os
+
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+if "--xla_force_host_platform_device_count" not in \
+        os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                               + " --xla_force_host_platform_device_count=8")
+
+import sys                                                       # noqa: E402
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax                                                       # noqa: E402
+import jax.numpy as jnp                                          # noqa: E402
+import numpy as np                                               # noqa: E402
+
+from repro.core import distributed_loss as dl                    # noqa: E402
+from repro.core.contrastive import fused_kernel_loss             # noqa: E402
+
+
+def _unit_rows(key, shape):
+    z = jax.random.normal(key, shape, jnp.float32)
+    return z / jnp.linalg.norm(z, axis=-1, keepdims=True)
+
+
+def check_loss_equivalence():
+    """Acceptance: data-axis size >= 2 mesh, both methods, loss and grads
+    match the single-device fused loss at the same global batch (fp32)."""
+    b, d = 256, 64
+    kx, ky = jax.random.split(jax.random.key(7))
+    x, y = _unit_rows(kx, (b, d)), _unit_rows(ky, (b, d))
+    tau = jnp.asarray(0.31)
+
+    def ref(x, y, tau):
+        return fused_kernel_loss(x, y, tau, interpret=True)[0]
+
+    ref_loss, ref_g = jax.value_and_grad(ref, argnums=(0, 1, 2))(x, y, tau)
+
+    meshes = [
+        jax.make_mesh((8,), ("data",)),                  # pure data parallel
+        jax.make_mesh((4, 2), ("data", "model")),        # data x tensor
+        jax.make_mesh((2, 2, 2), ("pod", "data", "model")),  # multi-pod
+    ]
+    for mesh in meshes:
+        for method in dl.METHODS:
+            loss_fn = dl.make_global_loss_fn(mesh, method)
+
+            def f(x, y, tau):
+                return loss_fn(x, y, tau)[0]
+
+            with mesh:
+                loss, g = jax.jit(jax.value_and_grad(
+                    f, argnums=(0, 1, 2)))(x, y, tau)
+            tag = f"{dict(mesh.shape)}/{method}"
+            np.testing.assert_allclose(loss, ref_loss, rtol=2e-6, atol=2e-6,
+                                       err_msg=f"{tag} loss")
+            for got, want, name in zip(g, ref_g, ("dX", "dY", "dtau")):
+                np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6,
+                                           err_msg=f"{tag} {name}")
+            print(f"ok {tag}")
+
+    # bf16 embeddings (fp32 accumulation inside the kernels): compare the
+    # two distributed methods against the single-device fused loss on the
+    # SAME bf16 inputs — rounding of the inputs is shared, paths must agree
+    xb, yb = x.astype(jnp.bfloat16), y.astype(jnp.bfloat16)
+    ref_loss16, ref_g16 = jax.value_and_grad(ref, argnums=(0, 1, 2))(
+        xb, yb, tau)
+    mesh = jax.make_mesh((4, 2), ("data", "model"))
+    for method in dl.METHODS:
+        loss_fn = dl.make_global_loss_fn(mesh, method)
+        with mesh:
+            loss, g = jax.jit(jax.value_and_grad(
+                lambda x, y, t: loss_fn(x, y, t)[0],
+                argnums=(0, 1, 2)))(xb, yb, tau)
+        np.testing.assert_allclose(loss, ref_loss16, rtol=1e-3, atol=1e-4,
+                                   err_msg=f"bf16 {method} loss")
+        np.testing.assert_allclose(
+            g[0].astype(jnp.float32), ref_g16[0].astype(jnp.float32),
+            rtol=2e-2, atol=1e-4, err_msg=f"bf16 {method} dX")
+        print(f"ok bf16 {method}")
+
+
+def check_gradaccum_composition():
+    """The full Algorithm-1 step with the cross-shard loss (GradAccum x
+    data-parallel x tensor-parallel under one jit) produces the same
+    weight gradients as the single-device step at the same global batch."""
+    from repro.configs import get_arch, smoke_dual_variant
+    from repro.core.gradaccum import contrastive_step
+    from repro.data import Tokenizer, caption_corpus, contrastive_batch, \
+        make_world
+    from repro.models import dual_encoder as de
+
+    cfg = smoke_dual_variant(get_arch("basic-s"))
+    rng = np.random.default_rng(0)
+    world = make_world(rng, n_classes=8,
+                       n_patches=cfg.image_tower.frontend_len,
+                       patch_dim=cfg.image_tower.d_model, noise=0.2)
+    tok = Tokenizer.train(caption_corpus(world, rng, 200), vocab_size=300)
+    batch, _ = contrastive_batch(world, tok, 32, rng)
+    batch = jax.tree.map(jnp.asarray, batch)
+    params = de.init_params(cfg, jax.random.key(0))
+
+    def enc_i(p, im):
+        return de.encode_image(cfg, p, im)
+
+    def enc_t(p, tx):
+        return de.encode_text(cfg, p, tx)
+
+    l_ref, _, g_ref = jax.jit(lambda p, b: contrastive_step(
+        enc_i, enc_t, p, b, 2))(params, batch)
+
+    mesh = jax.make_mesh((4, 2), ("data", "model"))
+    for method in dl.METHODS:
+        loss_fn = dl.make_global_loss_fn(mesh, method)
+        with mesh:
+            l_dist, _, g_dist = jax.jit(lambda p, b: contrastive_step(
+                enc_i, enc_t, p, b, 2, loss_fn=loss_fn,
+                emb_sharding=dl.emb_sharding(mesh)))(params, batch)
+        np.testing.assert_allclose(l_dist, l_ref, rtol=2e-5, atol=2e-6,
+                                   err_msg=f"{method} loss")
+        flat_ref = jax.tree_util.tree_leaves_with_path(g_ref)
+        flat_dist = dict(jax.tree_util.tree_leaves_with_path(g_dist))
+        for path, want in flat_ref:
+            got = flat_dist[path]
+            np.testing.assert_allclose(
+                got, want, rtol=5e-4, atol=1e-5,
+                err_msg=f"{method} grad {jax.tree_util.keystr(path)}")
+        print(f"ok gradaccum {method}")
+
+
+if __name__ == "__main__":
+    mode = sys.argv[1] if len(sys.argv) > 1 else "loss"
+    assert jax.device_count() >= 8, jax.devices()
+    {"loss": check_loss_equivalence,
+     "gradaccum": check_gradaccum_composition}[mode]()
+    print(f"PASS {mode}")

@@ -107,3 +107,57 @@ def test_replicated_mode_is_all_empty_specs():
     for s in jax.tree_util.tree_leaves(
             specs, is_leaf=lambda s: isinstance(s, P)):
         assert s == P()
+
+
+def test_params_specs_largest_axis_not_divisible_falls_back():
+    """basic_ws must shard the largest DIVISIBLE dim: when the largest axis
+    of a leaf doesn't divide the model-axis size, the next-largest
+    divisible one is used, and a leaf with no divisible dim >= the axis
+    size stays replicated (never a crash, never an invalid spec)."""
+    SDS = jax.ShapeDtypeStruct
+    f32 = np.float32
+    tree = {
+        # largest dim 100 not divisible by 16; dim 64 is -> shard axis 1
+        "w_fallback": SDS((100, 64), f32),
+        # no dim divisible by 16 -> replicated
+        "w_odd": SDS((100, 30), f32),
+        # dim 16 == axis size exactly -> shardable
+        "w_exact": SDS((16, 10), f32),
+        # divisible but smaller than axis size never selected (48 % 16 == 0
+        # and 48 >= 16 -> sharded on axis 0, the largest divisible)
+        "w_mixed": SDS((48, 100), f32),
+    }
+    specs = shd.params_specs(tree, MESH, "basic_ws")
+    assert specs["w_fallback"] == P(None, "model")
+    assert specs["w_odd"] == P()
+    assert specs["w_exact"] == P("model", None)
+    assert specs["w_mixed"] == P("model", None)
+    _check_divisible(specs, tree, MESH, "fallback")
+
+
+def test_params_specs_stacked_blocks_never_shard_scan_axis():
+    """A 'blocks' leaf whose LARGEST axis is the leading scan axis must not
+    shard it, even when divisible — the scan axis is iteration order, not
+    a weight dim."""
+    SDS = jax.ShapeDtypeStruct
+    tree = {"blocks": {"w": SDS((32, 16, 10), np.float32)}}
+    specs = shd.params_specs(tree, MESH, "basic_ws")
+    # axis 0 (32, divisible) is skipped; axis 1 (16) is the fallback
+    assert specs["blocks"]["w"] == P(None, "model", None)
+
+
+def test_batch_specs_explicit_batch_axes_override():
+    """batch_axes overrides the default ('pod','data') distribution — the
+    paper's §5.1 'batch over ALL cores' layout adds the model axis."""
+    SDS = jax.ShapeDtypeStruct
+    batch = {"tokens": SDS((512, 128), np.int32),
+             "scalar": SDS((), np.float32)}
+    specs = shd.batch_specs(batch, MESH_MP,
+                            batch_axes=("pod", "data", "model"))
+    assert specs["tokens"] == P(("pod", "data", "model"), None)
+    assert specs["scalar"] == P()
+    # axes that don't divide are dropped left-to-right: batch 24 fits pod=2
+    # and nothing more on the 2x16x16 mesh
+    small = shd.batch_specs({"t": SDS((24, 4), np.int32)}, MESH_MP,
+                            batch_axes=("pod", "data", "model"))
+    assert small["t"] == P(("pod",), None)
