@@ -43,11 +43,10 @@ def tiny_dual_cfg(embed_dim=32):
 
 
 def world_and_tok(cfg, seed=0, n_classes=16, noise=0.25):
-    from repro.data import Tokenizer, caption_corpus, make_world
+    from repro.data import Tokenizer, caption_corpus, world_for_tower
     rng = np.random.default_rng(seed)
-    world = make_world(rng, n_classes=n_classes,
-                       n_patches=cfg.image_tower.frontend_len,
-                       patch_dim=cfg.image_tower.d_model, noise=noise)
+    world = world_for_tower(rng, cfg.image_tower, n_classes=n_classes,
+                            noise=noise)
     tok = Tokenizer.train(caption_corpus(world, rng, 400), vocab_size=500)
     return world, tok, rng
 

@@ -33,11 +33,14 @@ SUITES = {
     "distributed": ("benchmarks.distributed_bench",
                     "cross-shard global-batch loss, simulated mesh "
                     "(gated, DESIGN.md §7.5)"),
+    "tower": ("benchmarks.tower_bench",
+              "encode path per attention backend: naive vs chunked vs "
+              "pallas (gated, DESIGN.md §8)"),
 }
 TABLES = {name: mod for name, (mod, _) in SUITES.items()}
 
 # slow full-sweep benches only run when selected explicitly (or via --json)
-_OPT_IN = {"kernels", "serving", "distributed"}
+_OPT_IN = {"kernels", "serving", "distributed", "tower"}
 
 _ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
@@ -46,6 +49,7 @@ GATED = {
     "kernels": os.path.join(_ROOT, "BENCH_kernels.json"),
     "serving": os.path.join(_ROOT, "BENCH_serving.json"),
     "distributed": os.path.join(_ROOT, "BENCH_distributed.json"),
+    "tower": os.path.join(_ROOT, "BENCH_tower.json"),
 }
 
 

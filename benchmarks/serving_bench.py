@@ -69,16 +69,14 @@ def _e2e_entries(entries, interpret):
     import tempfile
 
     from benchmarks.common import tiny_dual_cfg
-    from repro.data import Tokenizer, caption_corpus, make_world
+    from repro.data import Tokenizer, caption_corpus, world_for_tower
     from repro.data.synthetic import render_images
     from repro.models import dual_encoder as de
     from repro.serving import ZeroShotService
 
     cfg = tiny_dual_cfg()
     rng = np.random.default_rng(0)
-    world = make_world(rng, n_classes=32,
-                       n_patches=cfg.image_tower.frontend_len,
-                       patch_dim=cfg.image_tower.d_model)
+    world = world_for_tower(rng, cfg.image_tower, n_classes=32)
     tok = Tokenizer.train(caption_corpus(world, rng, 300), vocab_size=400)
     params = de.init_params(cfg, jax.random.key(0))
     imgs = render_images(world, rng.integers(0, 32, E2E_BATCH), rng)

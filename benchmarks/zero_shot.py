@@ -53,8 +53,7 @@ def run():
         world.noise = old * noise_mult
         imgs = render_images(world, cls, rng)
         world.noise = old
-        iemb = np.asarray(enc_i(params, {"patch_embeddings":
-                                         jnp.asarray(imgs)}))
+        iemb = np.asarray(enc_i(params, {"image": jnp.asarray(imgs)}))
         pred = np.argmax(iemb @ temb.T, axis=1)
         return float(np.mean(pred == cls))
 

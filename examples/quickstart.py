@@ -12,7 +12,7 @@ import numpy as np
 from repro.configs import get_arch, smoke_variant
 from repro.core.gradaccum import contrastive_step
 from repro.data import (Tokenizer, caption_corpus, classification_prompts,
-                        contrastive_batch, make_world)
+                        contrastive_batch, world_for_tower)
 from repro.models import dual_encoder as de
 from repro.optim import AdaFactorW, apply_updates, warmup_cosine
 
@@ -27,10 +27,8 @@ cfg = dataclasses.replace(cfg,
 
 # 2. synthetic open-vocabulary image-text world + tokenizer (paper §7.1)
 rng = np.random.default_rng(0)
-from repro.data import make_world  # noqa: E402
-world = make_world(rng, n_classes=16,
-                   n_patches=cfg.image_tower.frontend_len,
-                   patch_dim=cfg.image_tower.d_model, noise=0.25)
+from repro.data import world_for_tower  # noqa: E402
+world = world_for_tower(rng, cfg.image_tower, n_classes=16, noise=0.25)
 tok = Tokenizer.train(caption_corpus(world, rng), vocab_size=500)
 
 # 3. dual encoder + AdaFactorW (paper App. B)

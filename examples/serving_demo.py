@@ -20,7 +20,8 @@ import numpy as np
 
 from repro.configs import get_arch, smoke_dual_variant
 from repro.core.gradaccum import contrastive_step
-from repro.data import Tokenizer, caption_corpus, contrastive_batch, make_world
+from repro.data import Tokenizer, caption_corpus, contrastive_batch, \
+    world_for_tower
 from repro.data.synthetic import render_images
 from repro.models import dual_encoder as de
 from repro.optim import AdaFactorW, apply_updates
@@ -38,9 +39,7 @@ steps = args.steps if args.steps is not None else (40 if args.smoke else 120)
 
 cfg = smoke_dual_variant(get_arch("basic-s"))
 rng = np.random.default_rng(0)
-world = make_world(rng, n_classes=16,
-                   n_patches=cfg.image_tower.frontend_len,
-                   patch_dim=cfg.image_tower.d_model, noise=0.2)
+world = world_for_tower(rng, cfg.image_tower, n_classes=16, noise=0.2)
 tok = Tokenizer.train(caption_corpus(world, rng, 400), vocab_size=400)
 
 print(f"training the dual encoder for {steps} steps ...")

@@ -13,7 +13,7 @@ import numpy as np
 from repro.configs import get_arch, smoke_variant
 from repro.core.gradaccum import contrastive_step
 from repro.data import (Tokenizer, caption_corpus, classification_prompts,
-                        contrastive_batch, make_world)
+                        contrastive_batch, world_for_tower)
 from repro.data.synthetic import render_images
 from repro.models import dual_encoder as de
 from repro.optim import AdaFactorW, apply_updates
@@ -24,9 +24,7 @@ cfg = dataclasses.replace(cfg,
                           text_tower=smoke_variant(cfg.text_tower),
                           embed_dim=64)
 rng = np.random.default_rng(1)
-world = make_world(rng, n_classes=24,
-                   n_patches=cfg.image_tower.frontend_len,
-                   patch_dim=cfg.image_tower.d_model, noise=0.25)
+world = world_for_tower(rng, cfg.image_tower, n_classes=24, noise=0.25)
 tok = Tokenizer.train(caption_corpus(world, rng), vocab_size=500)
 seen, unseen = np.arange(16), np.arange(16, 24)
 
@@ -58,7 +56,7 @@ def evaluate(pool, template, noise_mult=1.0, n=128):
     world.noise = old * noise_mult
     imgs = render_images(world, cls, rng)
     world.noise = old
-    iemb = np.asarray(enc_i(params, {"patch_embeddings": jnp.asarray(imgs)}))
+    iemb = np.asarray(enc_i(params, {"image": jnp.asarray(imgs)}))
     return float(np.mean(np.argmax(iemb @ temb.T, 1) == cls))
 
 

@@ -6,6 +6,7 @@ modules lacks a docstring:
   - every module under src/repro/core/
   - every kernels public-op module src/repro/kernels/*/ops.py
   - every module under src/repro/serving/embed/
+  - every module under src/repro/models/ (the tower runtime)
 
 "Public" = top-level ``def``/``class`` whose name has no leading
 underscore, plus the module itself (module docstring required). Purely
@@ -29,6 +30,7 @@ COVERED_GLOBS = (
     os.path.join("src", "repro", "core", "*.py"),
     os.path.join("src", "repro", "kernels", "*", "ops.py"),
     os.path.join("src", "repro", "serving", "embed", "*.py"),
+    os.path.join("src", "repro", "models", "*.py"),
 )
 
 
@@ -63,8 +65,8 @@ def missing_docstrings(path: str, root: str = _DEFAULT_ROOT) -> list[str]:
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(
-        description="fail when a public symbol in core/, kernels/*/ops.py "
-                    "or serving/embed/ lacks a docstring")
+        description="fail when a public symbol in core/, kernels/*/ops.py, "
+                    "serving/embed/ or models/ lacks a docstring")
     ap.add_argument("--root", default=_DEFAULT_ROOT,
                     help="repo root (default: this script's parent)")
     args = ap.parse_args(argv)

@@ -57,15 +57,20 @@ class ArchConfig:
     # hybrid: attention appears at layer indices where (i % attn_every == attn_every-1);
     # all other layers are mamba. attn_every=1 means pure attention.
     attn_every: int = 1
-    # attention implementation: 'naive' (materialized scores; baseline) or
-    # 'chunked' (flash-style online blocks — beyond-paper optimization; the
-    # XLA-lowerable stand-in for kernels/flash_attention on real TPUs).
+    # attention backend (models.attention registry): 'naive' (materialized
+    # scores; paper-era baseline), 'chunked' (flash-style online blocks in
+    # pure XLA), 'pallas' (kernels/flash_attention fwd+bwd kernels), or
+    # 'auto' (platform pick with graceful fallback).
     attn_impl: str = "naive"
     attn_block: int = 512
-    # modality frontend stub: 'audio' or 'vision' -> input_specs() provides
-    # precomputed frame/patch embeddings (the one allowed stub).
+    # modality frontend: 'vision' is REAL (raw images linear-patchified by
+    # models.frontends using the geometry below); 'audio' remains a stub
+    # (input_specs provides precomputed frame embeddings).
     frontend: Optional[str] = None
-    frontend_len: int = 0         # number of frontend embedding positions (vlm patches)
+    frontend_len: int = 0         # number of frontend positions (vision patches)
+    image_size: int = 0           # vision: square input side, pixels
+    patch_size: int = 0           # vision: patchify window/stride, pixels
+    channels: int = 3             # vision: input channels
     source: str = ""              # citation
 
     @property
@@ -250,6 +255,13 @@ def smoke_variant(cfg: ArchConfig) -> ArchConfig:
         vocab=min(cfg.vocab, 512),
         frontend_len=min(cfg.frontend_len, 16),
     )
+    if cfg.frontend == "vision":
+        # keep frontend_len == (image_size // patch_size)² after shrinking
+        side = int(changes["frontend_len"] ** 0.5)
+        assert side * side == changes["frontend_len"], changes["frontend_len"]
+        ps = min(cfg.patch_size or 4, 4)
+        changes["patch_size"] = ps
+        changes["image_size"] = side * ps
     if cfg.moe is not None:
         changes["moe"] = dataclasses.replace(
             cfg.moe, num_experts=min(cfg.moe.num_experts, 4))

@@ -3,7 +3,8 @@ from repro.configs.base import register
 from repro.configs.dual import DualEncoderConfig, _tower
 
 IMAGE = _tower("basic-l-image", L=48, d=2048, H=32, dff=8192, vocab=0,
-               frontend="vision", frontend_len=196)
+               frontend="vision", frontend_len=196,
+               image_size=224, patch_size=16)
 TEXT = _tower("basic-l-text", L=12, d=2048, H=16, dff=8192, vocab=32768,
               head_dim=128)
 

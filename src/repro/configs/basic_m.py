@@ -3,7 +3,8 @@ from repro.configs.base import register
 from repro.configs.dual import DualEncoderConfig, _tower
 
 IMAGE = _tower("basic-m-image", L=24, d=1024, H=16, dff=4096, vocab=0,
-               frontend="vision", frontend_len=196)
+               frontend="vision", frontend_len=196,
+               image_size=224, patch_size=16)
 TEXT = _tower("basic-m-text", L=12, d=1024, H=8, dff=4096, vocab=32768,
               head_dim=128)
 

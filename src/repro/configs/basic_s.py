@@ -1,14 +1,17 @@
 """BASIC-S (paper Table 5): CoAtNet-0 image tower (25M) + 6L/1024 text tower.
 
-The CoAtNet conv stages are a vision frontend STUB (DESIGN.md §4): the image
-tower here is the transformer backbone consuming precomputed patch embeddings.
-Text tower: 6 layers, hidden 1024, head dim 64 (Table 5).
+The image tower is a transformer backbone over a REAL linear-patchify
+frontend (models.frontends): raw 224×224×3 images, 16-pixel patches →
+196 patch embeddings (the CoAtNet conv *stages* are approximated by the
+single patchify conv; DESIGN.md §8). Text tower: 6 layers, hidden 1024,
+head dim 64 (Table 5).
 """
 from repro.configs.base import register
 from repro.configs.dual import DualEncoderConfig, _tower
 
 IMAGE = _tower("basic-s-image", L=8, d=768, H=12, dff=3072, vocab=0,
-               frontend="vision", frontend_len=196)
+               frontend="vision", frontend_len=196,
+               image_size=224, patch_size=16)
 TEXT = _tower("basic-s-text", L=6, d=1024, H=16, dff=4096, vocab=32768,
               head_dim=64)
 

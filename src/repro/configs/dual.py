@@ -22,11 +22,12 @@ class DualEncoderConfig:
 
 
 def _tower(name, L, d, H, dff, vocab, frontend=None, frontend_len=0,
-           head_dim=None) -> ArchConfig:
+           head_dim=None, image_size=0, patch_size=0) -> ArchConfig:
     return ArchConfig(
         name=name, family="encoder", n_layers=L, d_model=d, n_heads=H,
         n_kv_heads=H, d_ff=dff, vocab=vocab, causal=False, frontend=frontend,
         frontend_len=frontend_len, head_dim=head_dim, rope_theta=1e4,
+        image_size=image_size, patch_size=patch_size,
         source="arXiv:2111.10050",
     )
 

@@ -1,9 +1,9 @@
 """InternVL2-76B [arXiv:2404.16821] — InternViT-6B vision encoder + InternLM2 LLM.
 
 We implement the language backbone (80L d_model=8192 64H GQA kv=8 d_ff=28672
-vocab=128256). The InternViT encoder + MLP projector is a STUB: ``input_specs``
-provides precomputed patch embeddings (batch, n_patches, d_model) that are
-prepended to the token embeddings.
+vocab=128256). The InternViT encoder + MLP projector is approximated by the
+shared linear-patchify vision frontend (models.frontends): raw 256×256×3
+images → 256 patch embeddings prepended to the token embeddings.
 """
 from repro.configs.base import ArchConfig, register
 
@@ -17,7 +17,9 @@ CONFIG = ArchConfig(
     d_ff=28672,
     vocab=128256,
     frontend="vision",
-    frontend_len=256,   # patch embeddings per image
+    frontend_len=256,   # (256/16)² patches per image
+    image_size=256,
+    patch_size=16,
     source="arXiv:2404.16821",
 )
 register(CONFIG)

@@ -6,5 +6,6 @@ from repro.data.synthetic import (  # noqa: F401
     contrastive_batch,
     jft_batch,
     make_world,
+    world_for_tower,
 )
 from repro.data.tokenizer import Tokenizer  # noqa: F401

@@ -15,7 +15,15 @@ import numpy as np
 
 
 class Prefetcher:
-    """Wrap a batch-producing callable into a prefetching iterator."""
+    """Wrap a batch-producing callable into a prefetching iterator.
+
+    ``close()`` is idempotent and fully shuts the pipeline down: the worker
+    thread exits, already-prefetched batches remain consumable, and once
+    the queue drains ``__next__`` raises ``StopIteration``. ``__next__``
+    waits with a timed get so a consumer blocked on an empty queue wakes
+    up and terminates — after ``close()``, or when the worker died —
+    instead of hanging forever (the historical deadlock); a worker killed
+    by a ``make_batch`` exception re-raises it at the consumer."""
 
     def __init__(self, make_batch: Callable[[int], object], depth: int = 2,
                  start: int = 0):
@@ -23,26 +31,44 @@ class Prefetcher:
         self._q: "queue.Queue" = queue.Queue(maxsize=depth)
         self._start = start
         self._stop = threading.Event()
+        self._error: BaseException = None
         self._thread = threading.Thread(target=self._worker, daemon=True)
         self._thread.start()
 
     def _worker(self):
         step = self._start
-        while not self._stop.is_set():
-            try:
-                self._q.put(self._make(step), timeout=0.5)
-                step += 1
-            except queue.Full:
-                continue
+        try:
+            while not self._stop.is_set():
+                try:
+                    self._q.put(self._make(step), timeout=0.5)
+                    step += 1
+                except queue.Full:
+                    continue
+        except BaseException as e:  # noqa: BLE001 — surfaced in __next__
+            self._error = e
 
     def __iter__(self) -> Iterator:
         return self
 
     def __next__(self):
-        return self._q.get()
+        while True:
+            try:
+                return self._q.get(timeout=0.2)
+            except queue.Empty:
+                if self._thread.is_alive():
+                    continue
+                # producer gone for good: surface its crash, else end
+                if self._error is not None:
+                    raise self._error
+                raise StopIteration from None
 
     def close(self):
+        """Stop prefetching (idempotent). Already-queued batches stay
+        readable; after them, iteration ends with StopIteration."""
+        if self._stop.is_set():
+            return
         self._stop.set()
+        self._thread.join()
 
 
 def host_rng(seed: int, host_id: int, step: int) -> np.random.Generator:

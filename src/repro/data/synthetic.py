@@ -5,9 +5,11 @@ repro=2 gate: the real 6.6B-pair dataset is proprietary, so we build a
 
 - A latent concept space: ``n_classes`` concepts, each a unit vector in R^k
   plus attribute words drawn from a template grammar.
-- Images: concept vector + attribute perturbation + noise, pushed through a
-  fixed random "camera" feature map into patch embeddings (the stub frontend's
-  output space).
+- Images: RAW PIXELS (b, H, W, C). Per patch, concept vector + noise is
+  pushed through a fixed random "camera" map into ``patch_size²·C`` pixel
+  values and the patch grid is assembled into the image — the inverse of
+  the model's patchify frontend, so class evidence survives patchification
+  exactly.
 - Captions: templated natural-ish text ("a photo of a red tabby cat") using
   the concept's name words + sampled attributes — noisy, like alt-text.
 - JFT analog: (image, class-id) pairs over the same concepts with multi-label
@@ -38,19 +40,25 @@ TEMPLATES = ["a photo of a {} {}", "the {} {}", "{} {} in the wild",
 @dataclasses.dataclass
 class World:
     concept_vecs: np.ndarray      # (n_classes, k)
-    camera: np.ndarray            # (k, patch_dim) fixed random feature map
+    camera: np.ndarray            # (k, patch_size²·channels) latent -> pixels
     class_names: List[str]
-    n_patches: int
-    patch_dim: int
+    image_size: int
+    patch_size: int
+    channels: int = 3
     noise: float = 0.35
 
     @property
     def n_classes(self):
         return self.concept_vecs.shape[0]
 
+    @property
+    def n_patches(self):
+        return (self.image_size // self.patch_size) ** 2
+
 
 def make_world(rng: np.random.Generator, n_classes=64, latent=32,
-               n_patches=16, patch_dim=256, noise=0.35) -> World:
+               image_size=16, patch_size=4, channels=3,
+               noise=0.35) -> World:
     """Concepts are COMPOSITIONAL: class 'red cat' = v(red) + v(cat) in the
     latent space, so a model that learns the factors from seen classes can
     zero-shot transfer to unseen adjective-noun combinations — the toy analog
@@ -65,17 +73,34 @@ def make_world(rng: np.random.Generator, n_classes=64, latent=32,
         vecs.append(adj_vecs[ai] + noun_vecs[ni])
     v = np.stack(vecs)
     v /= np.linalg.norm(v, axis=1, keepdims=True)
-    cam = rng.standard_normal((latent, patch_dim)) / np.sqrt(latent)
-    return World(v, cam, names, n_patches, patch_dim, noise)
+    pix = patch_size * patch_size * channels
+    cam = rng.standard_normal((latent, pix)) / np.sqrt(latent)
+    return World(v, cam, names, image_size, patch_size, channels, noise)
+
+
+def world_for_tower(rng: np.random.Generator, tower, n_classes=64,
+                    latent=32, noise=0.35) -> World:
+    """A World whose image geometry matches a vision ArchConfig (the image
+    tower of a dual encoder): same image_size/patch_size/channels, so
+    rendered images feed the tower's patchify frontend directly."""
+    return make_world(rng, n_classes=n_classes, latent=latent,
+                      image_size=tower.image_size,
+                      patch_size=tower.patch_size,
+                      channels=tower.channels, noise=noise)
 
 
 def render_images(world: World, cls: np.ndarray, rng: np.random.Generator):
-    """cls: (b,) int -> patch embeddings (b, n_patches, patch_dim)."""
+    """cls: (b,) int -> RAW images (b, H, W, C) float32: per-patch noisy
+    concept latents through the camera map, assembled on the patch grid."""
     b = cls.shape[0]
+    g = world.image_size // world.patch_size
+    ps, c = world.patch_size, world.channels
     z = world.concept_vecs[cls]                                  # (b, k)
     z = z[:, None, :] + world.noise * rng.standard_normal(
         (b, world.n_patches, z.shape[-1]))
-    return (z @ world.camera).astype(np.float32)
+    pix = (z @ world.camera).astype(np.float32)   # (b, P, ps*ps*C)
+    pix = pix.reshape(b, g, g, ps, ps, c).transpose(0, 1, 3, 2, 4, 5)
+    return np.ascontiguousarray(pix.reshape(b, g * ps, g * ps, c))
 
 
 def render_captions(world: World, cls: np.ndarray, rng: np.random.Generator,
@@ -102,7 +127,7 @@ def contrastive_batch(world: World, tok, batch: int, rng: np.random.Generator,
     caps = render_captions(world, cls, rng)
     ids = [tok.encode(c, max_len=text_len) for c in caps]
     tokens, mask = tok.pad_batch(ids, max_len=text_len)
-    return ({"images": {"patch_embeddings": imgs},
+    return ({"images": {"image": imgs},
              "texts": {"tokens": tokens, "attn_mask": mask}}, cls)
 
 
@@ -117,8 +142,8 @@ def classification_prompts(world: World, tok, text_len=16,
 
 def jft_batch(world: World, batch: int, rng: np.random.Generator,
               classes: Optional[np.ndarray] = None):
-    """Labeled pretraining pairs (paper §8): (patch embeddings, class id)."""
+    """Labeled pretraining pairs (paper §8): (raw image, class id)."""
     pool = classes if classes is not None else np.arange(world.n_classes)
     cls = pool[rng.integers(0, len(pool), batch)]
-    return {"patch_embeddings": render_images(world, cls, rng),
+    return {"image": render_images(world, cls, rng),
             "labels": cls.astype(np.int32)}, cls

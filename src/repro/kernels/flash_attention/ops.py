@@ -1,25 +1,106 @@
-"""Jitted GQA wrapper for the flash attention kernel."""
+"""Differentiable, jitted GQA wrapper for the flash attention kernels.
+
+``flash_attention`` is a drop-in attention op for the tower runtime
+(models/attention.py ``impl="pallas"``): forward runs the online-softmax
+Pallas kernel, backward runs the blockwise dq / dkv Pallas kernels through a
+``jax.custom_vjp`` — the (s, t) attention matrix never materializes in HBM
+in either direction. bf16 inputs accumulate in fp32 inside every kernel
+(PR-1 conventions); causal, sliding-window, *bidirectional* and key-padding
+masks are supported.
+"""
 from __future__ import annotations
 
+import functools
+
+import jax
 import jax.numpy as jnp
 
-from repro.kernels.flash_attention.kernel import flash_attention_bh
+from repro.kernels.flash_attention.kernel import (NEG_INF, flash_bwd_bh,
+                                                  flash_fwd_bh)
 
 
-def flash_attention(q, k, v, *, causal=True, window=None, block_q=128,
-                    block_k=128, interpret=False):
-    """q: (b, h, s, d); k/v: (b, kv, t, d) with h % kv == 0.
+def default_interpret() -> bool:
+    """Pallas interpret-mode auto-detection: the compiled kernel on
+    accelerators, the interpreted body on CPU (where Mosaic cannot
+    compile) — same convention as the contrastive-loss kernels."""
+    return jax.default_backend() == "cpu"
+
+
+def pick_block(n: int, want: int) -> int:
+    """Largest block size <= ``want`` that divides ``n``, preferring
+    sublane-aligned (multiple-of-8) blocks so compiled Mosaic can tile
+    them; unaligned divisors are the interpret-mode fallback (callers
+    pass e.g. want=128)."""
+    for b in range(min(want, n), 0, -1):
+        if n % b == 0 and b % 8 == 0:
+            return b
+    for b in range(min(want, n), 0, -1):
+        if n % b == 0:
+            return b
+    return 1
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6, 7, 8))
+def _flash_bh(q, k, v, bias, causal, window, block_q, block_k, interpret):
+    out, _ = flash_fwd_bh(q, k, v, bias, causal=causal, window=window,
+                          block_q=block_q, block_k=block_k,
+                          interpret=interpret)
+    return out
+
+
+def _flash_bh_fwd(q, k, v, bias, causal, window, block_q, block_k,
+                  interpret):
+    out, lse = flash_fwd_bh(q, k, v, bias, causal=causal, window=window,
+                            block_q=block_q, block_k=block_k,
+                            interpret=interpret)
+    return out, (q, k, v, bias, out, lse)
+
+
+def _flash_bh_bwd(causal, window, block_q, block_k, interpret, res, dout):
+    q, k, v, bias, out, lse = res
+    dq, dk, dv = flash_bwd_bh(q, k, v, bias, out, lse, dout, causal=causal,
+                              window=window, block_q=block_q,
+                              block_k=block_k, interpret=interpret)
+    return dq, dk, dv, None
+
+
+_flash_bh.defvjp(_flash_bh_fwd, _flash_bh_bwd)
+
+
+def flash_attention(q, k, v, *, causal=True, window=None, key_mask=None,
+                    block_q=128, block_k=128, interpret=None):
+    """q: (b, h, s, d); k/v: (b, kv, t, d) with h % kv == 0. Differentiable
+    (custom-VJP into the blockwise backward kernels).
+
+    key_mask: optional (b, t) — bool (True = attend) or additive fp32 bias —
+    masking padded key positions per example; every query must keep >= 1
+    valid key. The mask/bias is a CONSTANT of the computation (its
+    custom-VJP cotangent is None — fine for padding masks, not for a
+    learned bias; use naive/chunked to differentiate a bias).
+    interpret=None auto-detects the backend (compiled on accelerators,
+    interpreted on CPU).
 
     kv heads are broadcast to q heads (the all-VMEM GQA strategy: k/v tiles
     are small and re-fetched per group member; a production variant would
-    reuse the tile across the group — noted in EXPERIMENTS.md §Perf)."""
+    reuse the tile across the group — noted in EXPERIMENTS.md §Perf). The
+    broadcast happens in XLA, so its VJP sums dk/dv over the group
+    automatically."""
+    if interpret is None:
+        interpret = default_interpret()
     b, h, s, d = q.shape
     kv, t = k.shape[1], k.shape[2]
     g = h // kv
     kb = jnp.repeat(k, g, axis=1).reshape(b * h, t, d)
     vb = jnp.repeat(v, g, axis=1).reshape(b * h, t, d)
     qb = q.reshape(b * h, s, d)
-    out = flash_attention_bh(qb, kb, vb, causal=causal, window=window,
-                             block_q=block_q, block_k=block_k,
-                             interpret=interpret)
+    bias = None
+    if key_mask is not None:
+        key_mask = jnp.asarray(key_mask)
+        if key_mask.dtype == jnp.bool_:
+            key_mask = jnp.where(key_mask, 0.0, NEG_INF).astype(jnp.float32)
+        bias = jnp.broadcast_to(key_mask.astype(jnp.float32)[:, None, :],
+                                (b, h, t)).reshape(b * h, t)
+    out = _flash_bh(qb, kb, vb, bias, causal, window,
+                    pick_block(s, block_q), pick_block(t, block_k),
+                    interpret)
     return out.reshape(b, h, s, d)

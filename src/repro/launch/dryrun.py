@@ -13,7 +13,7 @@ Usage:
 
 ``--arch``/``--shape`` are required unless ``--all``; dual-encoder archs
 (basic-{s,m,l}) compile the paper's contrastive GradAccum step instead of
-an LM step. Model/compile knobs — ``--attn {naive,chunked}``,
+an LM step. Model/compile knobs — ``--attn {naive,chunked,pallas,auto}``,
 ``--dispatch {dense,capacity}``, ``--moe-group N``, ``--param-dtype
 {bf16,f32}``, ``--batch-over {data,all}``, ``--ssm-chunk N``,
 ``--unroll N`` — tag the output JSON filename; results land one file per
@@ -192,8 +192,12 @@ def main():
                     help="run every applicable (arch × shape)")
     ap.add_argument("--out", default="experiments/dryrun",
                     help="output dir; existing result files are skipped")
-    ap.add_argument("--attn", default="naive", choices=["naive", "chunked"],
-                    help="attention implementation override")
+    ap.add_argument("--attn", default="naive",
+                    choices=["naive", "chunked", "pallas", "auto"],
+                    help="attention backend override (models.attention "
+                         "registry; 'pallas' lowers the flash kernels — "
+                         "host-platform dry-runs fall back per "
+                         "resolve_backend)")
     ap.add_argument("--dispatch", default=None,
                     choices=[None, "dense", "capacity"],
                     help="MoE dispatch override")

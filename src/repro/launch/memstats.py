@@ -99,11 +99,14 @@ def loss_kernel_vmem(b_local: int, d: int, itemsize: int = 4) -> dict:
 def contrastive_report(arch: str, *, smoke: bool, mesh, sharding: str,
                        batch: int, num_micro: int, seq: int,
                        remats, loss: str = "chunked",
-                       dtype=None) -> list[dict]:
+                       precision: str = "bf16",
+                       attn=None) -> list[dict]:
     """One accounting row per remat policy for the full contrastive train
     step (GradAccum × data-parallel × tensor-parallel × global-batch
     loss) compiled on ``mesh``. remats: iterable of core.remat registry
-    names. Abstract inputs only — nothing is allocated or run."""
+    names; ``precision``/``attn`` select the models.precision policy and
+    attention backend the step compiles with. Abstract inputs only —
+    nothing is allocated or run."""
     import jax
     import jax.numpy as jnp
 
@@ -122,8 +125,9 @@ def contrastive_report(arch: str, *, smoke: bool, mesh, sharding: str,
     SDS = jax.ShapeDtypeStruct
     it = cfg.image_tower
     batch_abs = {
-        "images": {"patch_embeddings":
-                   SDS((batch, it.frontend_len, it.d_model), jnp.float32)},
+        "images": {"image":
+                   SDS((batch, it.image_size, it.image_size, it.channels),
+                       jnp.float32)},
         "texts": {"tokens": SDS((batch, seq), jnp.int32)},
     }
     bspecs = shd.to_named(shd.batch_specs(batch_abs, mesh), mesh)
@@ -137,6 +141,7 @@ def contrastive_report(arch: str, *, smoke: bool, mesh, sharding: str,
     for remat in remats:
         step, opt = st.make_contrastive_step(cfg, num_micro=num_micro,
                                              remat=remat, mesh=mesh,
+                                             precision=precision, attn=attn,
                                              loss=loss)
         opt_abs = jax.eval_shape(opt.init, params_abs)
         ospecs = shd.to_named(shd.params_specs(opt_abs, mesh, sharding),
@@ -199,6 +204,12 @@ def main(argv=None) -> int:
     ap.add_argument("--seq", type=int, default=16)
     ap.add_argument("--loss", default="chunked",
                     choices=["local", "fused", "allgather", "chunked"])
+    ap.add_argument("--precision", default="bf16",
+                    choices=["f32", "bf16", "bf16_pure"],
+                    help="models.precision policy the step compiles with")
+    ap.add_argument("--attn", default=None,
+                    choices=[None, "naive", "chunked", "pallas", "auto"],
+                    help="attention backend override for both towers")
     ap.add_argument("--remat", default="basic,none,full,dots",
                     help="comma-separated core.remat policy names")
     ap.add_argument("--json", default=None, help="also write rows to PATH")
@@ -214,7 +225,7 @@ def main(argv=None) -> int:
         args.arch, smoke=args.smoke, mesh=mesh, sharding=args.sharding,
         batch=args.batch, num_micro=args.num_micro, seq=args.seq,
         remats=[r.strip() for r in args.remat.split(",") if r.strip()],
-        loss=args.loss)
+        loss=args.loss, precision=args.precision, attn=args.attn)
     print(format_rows(rows))
     if args.json:
         with open(args.json, "w") as f:

@@ -19,7 +19,7 @@ import jax
 import numpy as np
 
 from repro.configs import get_arch, smoke_variant
-from repro.data import Tokenizer, caption_corpus, make_world
+from repro.data import Tokenizer, caption_corpus, world_for_tower
 from repro.data.synthetic import render_images
 from repro.models import dual_encoder as de
 from repro.serving import ZeroShotService
@@ -46,9 +46,7 @@ def main():
             text_tower=smoke_variant(cfg.text_tower), embed_dim=64)
 
     rng = np.random.default_rng(args.seed)
-    world = make_world(rng, n_classes=args.classes,
-                       n_patches=cfg.image_tower.frontend_len,
-                       patch_dim=cfg.image_tower.d_model)
+    world = world_for_tower(rng, cfg.image_tower, n_classes=args.classes)
     tok = Tokenizer.train(caption_corpus(world, rng, 500), vocab_size=512)
     params = de.init_params(cfg, jax.random.key(args.seed))
 

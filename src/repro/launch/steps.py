@@ -43,14 +43,16 @@ def abstract_opt_state(cfg: ArchConfig, opt: AdaFactorW, params_abs):
 
 def make_train_step(cfg: ArchConfig, *, remat: str = "basic",
                     moe_args: Optional[dict] = None, lr: float = 1e-3,
-                    dtype=jnp.bfloat16, unroll: int = 1):
+                    precision="bf16", unroll: int = 1):
+    """LM train step factory; ``precision`` is a models.precision policy
+    name/object governing tower compute dtypes (default 'bf16')."""
     opt = make_optimizer()
     policy = remat_lib.get_policy(remat)
     margs = DEFAULT_MOE_ARGS if moe_args is None else moe_args
 
     def train_step(params, opt_state, batch):
         def loss_fn(p):
-            loss, metrics = tf.lm_loss(cfg, p, batch, dtype=dtype,
+            loss, metrics = tf.lm_loss(cfg, p, batch, precision=precision,
                                        remat_policy=policy, moe_args=margs,
                                        unroll=unroll)
             return loss, metrics
@@ -65,18 +67,20 @@ def make_train_step(cfg: ArchConfig, *, remat: str = "basic",
 
 
 def make_prefill_step(cfg: ArchConfig, *, moe_args: Optional[dict] = None,
-                      dtype=jnp.bfloat16, unroll: int = 1):
+                      precision="bf16", unroll: int = 1):
+    """Prefill step factory (last-position logits)."""
     margs = DEFAULT_MOE_ARGS if moe_args is None else moe_args
 
     def prefill_step(params, batch):
-        return tf.prefill(cfg, params, batch, dtype=dtype, moe_args=margs,
-                          unroll=unroll)
+        return tf.prefill(cfg, params, batch, precision=precision,
+                          moe_args=margs, unroll=unroll)
 
     return prefill_step
 
 
 def make_serve_step(cfg: ArchConfig, *, moe_args: Optional[dict] = None,
-                    dtype=jnp.bfloat16, unroll: int = 1):
+                    precision="bf16", unroll: int = 1):
+    """Single-token decode step factory."""
     if moe_args is None:
         # historical default: dense dispatch for single-token decode. This is
         # EXACT but computes every expert for every token — the arctic-480b
@@ -89,7 +93,7 @@ def make_serve_step(cfg: ArchConfig, *, moe_args: Optional[dict] = None,
 
     def serve_step(params, caches, token, pos):
         logits, caches = tf.decode_step(cfg, params, token, pos, caches,
-                                        dtype=dtype, moe_args=margs,
+                                        precision=precision, moe_args=margs,
                                         unroll=unroll)
         return logits, caches
 
@@ -99,11 +103,18 @@ def make_serve_step(cfg: ArchConfig, *, moe_args: Optional[dict] = None,
 def make_contrastive_step(dual_cfg, *, num_micro: int = 8,
                           remat: str = "basic", remat_image: str = None,
                           remat_text: str = None, lr: float = 2.5e-4,
-                          dtype=jnp.bfloat16, unroll: int = 1,
+                          precision="bf16", attn: Optional[str] = None,
+                          unroll: int = 1,
                           mesh=None, loss: str = "local",
                           loss_opts: Optional[dict] = None):
     """The paper's own training step: Algorithm-1 GradAccum over num_micro
     microbatches (B=65536, M=B/num_micro=8192 matches App. E) + AdaFactorW.
+
+    ``precision`` is a models.precision policy (name/object): towers run in
+    its compute dtype, embeddings + loss always land fp32. ``attn``
+    overrides both towers' attention backend (models.attention registry:
+    naive | chunked | pallas | auto); None keeps each tower's configured
+    ``attn_impl``.
 
     remat selects the jax.checkpoint policy for both towers;
     remat_image/remat_text override it per tower (core.remat registry).
@@ -117,10 +128,19 @@ def make_contrastive_step(dual_cfg, *, num_micro: int = 8,
     ``loss_opts`` forwards kernel overrides (interpret/bm/bn).
     Returns (train_step, opt); train_step(params, opt_state, batch) ->
     (params, opt_state, loss, metrics)."""
+    import dataclasses
+
     from repro.core import distributed_loss as dist
     from repro.core.contrastive import contrastive_loss, fused_kernel_loss
     from repro.core.gradaccum import contrastive_step as ga_step
     from repro.models import dual_encoder as de
+    if attn is not None:
+        dual_cfg = dataclasses.replace(
+            dual_cfg,
+            image_tower=dataclasses.replace(dual_cfg.image_tower,
+                                            attn_impl=attn),
+            text_tower=dataclasses.replace(dual_cfg.text_tower,
+                                           attn_impl=attn))
     opt = make_optimizer()
     policy_i = remat_lib.get_policy(remat if remat_image is None
                                     else remat_image)
@@ -142,11 +162,11 @@ def make_contrastive_step(dual_cfg, *, num_micro: int = 8,
         raise ValueError(f"unknown loss {loss!r}")
 
     def enc_i(p, images):
-        return de.encode_image(dual_cfg, p, images, dtype=dtype,
+        return de.encode_image(dual_cfg, p, images, precision=precision,
                                remat_policy=policy_i)
 
     def enc_t(p, texts):
-        return de.encode_text(dual_cfg, p, texts, dtype=dtype,
+        return de.encode_text(dual_cfg, p, texts, precision=precision,
                               remat_policy=policy_t)
 
     def train_step(params, opt_state, batch):
@@ -161,13 +181,16 @@ def make_contrastive_step(dual_cfg, *, num_micro: int = 8,
     return train_step, opt
 
 
-def contrastive_input_specs(dual_cfg, shape, *, dtype=jnp.bfloat16):
+def contrastive_input_specs(dual_cfg, shape, *, dtype=jnp.float32):
+    """Abstract contrastive batch: raw images for the patchify frontend +
+    caption tokens (shapes from the dual config and the InputShape)."""
     SDS = jax.ShapeDtypeStruct
     b = shape.global_batch
     it = dual_cfg.image_tower
     return {
-        "images": {"patch_embeddings":
-                   SDS((b, it.frontend_len, it.d_model), dtype)},
+        "images": {"image":
+                   SDS((b, it.image_size, it.image_size, it.channels),
+                       dtype)},
         "texts": {"tokens": SDS((b, shape.seq_len), jnp.int32)},
     }
 

@@ -30,7 +30,7 @@ from repro.configs import get_arch, smoke_variant
 from repro.core.contrastive import contrastive_loss
 from repro.core.gradaccum import contrastive_step
 from repro.data import Tokenizer, caption_corpus, contrastive_batch, \
-    jft_batch, make_world
+    jft_batch, world_for_tower
 from repro.models import dual_encoder as de
 from repro.models import frontends
 from repro.models import transformer as tf
@@ -92,9 +92,7 @@ def _build_world(args):
     cfg = get_arch(args.arch)
     if args.smoke:
         cfg = _smoke_dual(cfg)
-    world = make_world(rng, n_classes=args.classes,
-                       n_patches=cfg.image_tower.frontend_len,
-                       patch_dim=cfg.image_tower.d_model)
+    world = world_for_tower(rng, cfg.image_tower, n_classes=args.classes)
     tok = Tokenizer.train(caption_corpus(world, rng), vocab_size=512)
     # clamp token ids to the tower vocab
     assert tok.vocab_size <= cfg.text_tower.vocab or args.smoke
@@ -113,9 +111,9 @@ def run_pretrain(args):
     opt_state = opt.init(params)
 
     @jax.jit
-    def step_fn(params, opt_state, patches, labels):
+    def step_fn(params, opt_state, images, labels):
         def loss_fn(p):
-            h = tf.encode(icfg, p["tower"], {"patch_embeddings": patches})
+            h = tf.encode(icfg, p["tower"], {"image": images})
             logits = h @ p["head"]
             logp = jax.nn.log_softmax(logits)
             return -jnp.mean(jnp.take_along_axis(logp, labels[:, None], 1))
@@ -126,7 +124,7 @@ def run_pretrain(args):
     for i in range(args.steps):
         batch, _ = jft_batch(world, args.batch, rng)
         params, opt_state, loss = step_fn(
-            params, opt_state, jnp.asarray(batch["patch_embeddings"]),
+            params, opt_state, jnp.asarray(batch["image"]),
             jnp.asarray(batch["labels"]))
         if i % args.log_every == 0:
             print(f"pretrain step {i:5d} xent {float(loss):.4f}")

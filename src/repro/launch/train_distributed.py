@@ -15,7 +15,13 @@ by arch family):
                  ``--loss chunked``, core/distributed_loss.py) so the
                  contrastive batch does NOT shrink with the data-parallel
                  degree; per-tower remat via ``--remat-image`` /
-                 ``--remat-text`` (DESIGN.md §7)
+                 ``--remat-text`` (DESIGN.md §7). Images are RAW pixels
+                 through the patchify frontend (DESIGN.md §8).
+
+Both objectives take ``--precision {f32,bf16,bf16_pure}`` (models.precision
+policy; fp32 norms/projections/logits stay on under bf16) and ``--attn
+{naive,chunked,pallas,auto}`` (models.attention backend registry; 'pallas'
+runs the kernels/flash_attention fwd+bwd kernels).
 
   python -m repro.launch.train_distributed --arch llama3.2-1b --smoke \\
       --steps 50 --batch 8 --seq 128 --model-parallel 1 --ckpt-dir /tmp/ck
@@ -59,13 +65,16 @@ def build_state(init_fn, mesh, mode, opt, seed):
     return params, opt_state, pspecs, ospecs
 
 
-def make_step(cfg, opt, lr_fn, *, remat="basic", moe_args=None):
-    """LM train step: next-token loss + AdaFactorW update, jit-ready."""
+def make_step(cfg, opt, lr_fn, *, remat="basic", moe_args=None,
+              precision="f32"):
+    """LM train step: next-token loss + AdaFactorW update, jit-ready.
+    ``precision``: models.precision policy name (historical default f32)."""
     policy = get_policy(remat)
 
     def train_step(params, opt_state, batch, step):
         def loss_fn(p):
             loss, metrics = tf.lm_loss(cfg, p, batch, remat_policy=policy,
+                                       precision=precision,
                                        moe_args=moe_args)
             return loss, metrics
         (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
@@ -124,14 +133,18 @@ def _restore(args, params, opt_state, pspecs, ospecs):
 
 def train_lm(args):
     """LM objective at any mesh size; returns the per-step loss list."""
+    import dataclasses
     cfg = get_arch(args.arch)
     if args.smoke:
         cfg = smoke_variant(cfg)
+    if getattr(args, "attn", None):
+        cfg = dataclasses.replace(cfg, attn_impl=args.attn)
     mesh = make_local_mesh(model=args.model_parallel)
     opt = AdaFactorW(weight_decay=0.0025)
     lr_fn = warmup_cosine(args.lr, args.lr / 100,
                           max(1, args.steps // 10), args.steps)
     moe_args = {"dispatch": "dense"} if args.smoke else None
+    precision = getattr(args, "precision", None) or "f32"
 
     with mesh:
         params, opt_state, pspecs, ospecs = build_state(
@@ -140,7 +153,7 @@ def train_lm(args):
         params, opt_state, start = _restore(args, params, opt_state,
                                             pspecs, ospecs)
         step_fn = jax.jit(make_step(cfg, opt, lr_fn, remat=args.remat,
-                                    moe_args=moe_args),
+                                    moe_args=moe_args, precision=precision),
                           donate_argnums=(0, 1))
 
         def make_batch(step):
@@ -158,7 +171,7 @@ def train_contrastive(args):
     per-step loss list."""
     from repro.configs import smoke_dual_variant
     from repro.data import Tokenizer, caption_corpus, contrastive_batch, \
-        make_world
+        world_for_tower
     from repro.launch import steps as st
     from repro.models import dual_encoder as de
 
@@ -189,6 +202,8 @@ def train_contrastive(args):
         cfg, num_micro=num_micro, remat=args.remat,
         remat_image=getattr(args, "remat_image", None),
         remat_text=getattr(args, "remat_text", None),
+        precision=getattr(args, "precision", None) or "bf16",
+        attn=getattr(args, "attn", None),
         lr=args.lr, mesh=mesh, loss=loss)
 
     with mesh:
@@ -204,9 +219,8 @@ def train_contrastive(args):
                           out_shardings=(pspecs, ospecs, None, None))
 
         world_rng = np.random.default_rng(args.seed)
-        world = make_world(world_rng, n_classes=16,
-                           n_patches=cfg.image_tower.frontend_len,
-                           patch_dim=cfg.image_tower.d_model, noise=0.2)
+        world = world_for_tower(world_rng, cfg.image_tower, n_classes=16,
+                                noise=0.2)
         tok = Tokenizer.train(caption_corpus(world, world_rng, 400),
                               vocab_size=400)
 
@@ -278,6 +292,15 @@ def main():
     ap.add_argument("--remat-text", default=None, choices=remat_names,
                     help="override --remat for the text tower "
                          "(contrastive only)")
+    ap.add_argument("--precision", default=None,
+                    choices=["f32", "bf16", "bf16_pure"],
+                    help="mixed-precision policy (models.precision; "
+                         "default: f32 for lm, bf16 for contrastive — the "
+                         "historical dtypes)")
+    ap.add_argument("--attn", default=None,
+                    choices=["naive", "chunked", "pallas", "auto"],
+                    help="attention backend override for every tower "
+                         "(models.attention registry)")
     ap.add_argument("--model-parallel", type=int, default=1)
     ap.add_argument("--num-micro", type=int, default=2,
                     help="GradAccum microbatches (contrastive only)")

@@ -1,9 +1,16 @@
 """GQA attention: training/prefill (full-sequence) and single-token decode.
 
 Supports: grouped-query heads, qk-norm (Qwen3), causal / bidirectional /
-sliding-window masks, RoPE, and two KV-cache layouts:
+sliding-window / key-padding masks, RoPE, and two KV-cache layouts:
   - linear cache (full attention):  k/v (batch, kv_heads, S, head_dim) + pos
   - ring cache (sliding window):    same shape with S = window, written mod W
+
+The full-sequence path runs through the ATTENTION BACKEND REGISTRY
+(DESIGN.md §8): ``impl`` ∈ {'naive', 'chunked', 'pallas', 'auto'} resolved
+per ArchConfig (``cfg.attn_impl``), with auto-detection of the platform and
+graceful fallback when a backend cannot serve a shape. The 'pallas' backend
+wires ``kernels/flash_attention`` (fwd + custom-VJP bwd kernels,
+bf16-in/fp32-accum) into the encoder hot path.
 """
 from __future__ import annotations
 
@@ -30,11 +37,13 @@ class KVCache(NamedTuple):
 
 
 def is_ring(cfg: ArchConfig, cache: KVCache) -> bool:
+    """True when the cache is ring-addressed: the arch slides a window and cache_len equals it."""
     return (cfg.sliding_window is not None
             and cache.k.shape[2] == cfg.sliding_window)
 
 
 def init_attn_params(key, cfg: ArchConfig, extra=()):
+    """Attention projection (+ optional qk-norm) params for one block."""
     hd = cfg.resolved_head_dim
     kq, kk, kv, ko = jax.random.split(key, 4)
     p = {
@@ -74,20 +83,30 @@ def _mask(cfg: ArchConfig, q_pos, k_pos):
     return m
 
 
-def _sdpa(q, k, v, mask):
-    """q: (b,s,h,hd); k/v: (b,t,kv,hd); mask: (s,t) additive."""
+def _key_bias(key_mask):
+    """(b, t) bool / additive key-padding mask -> (b, 1, 1, 1, t) additive."""
+    if key_mask.dtype == jnp.bool_:
+        key_mask = jnp.where(key_mask, 0.0, NEG_INF)
+    return key_mask.astype(jnp.float32)[:, None, None, None, :]
+
+
+def _sdpa(q, k, v, mask, key_mask=None):
+    """q: (b,s,h,hd); k/v: (b,t,kv,hd); mask: (s,t) additive;
+    key_mask: optional (b,t) bool/additive padding mask."""
     b, s, h, hd = q.shape
     kv = k.shape[2]
     group = h // kv
     q = q.reshape(b, s, kv, group, hd)
     scores = jnp.einsum("bskgd,btkd->bkgst", q, k) * (hd ** -0.5)
     scores = scores.astype(jnp.float32) + mask
+    if key_mask is not None:
+        scores = scores + _key_bias(key_mask)
     w = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
     out = jnp.einsum("bkgst,btkd->bskgd", w, v)
     return out.reshape(b, s, h, hd)
 
 
-def _sdpa_chunked(q, k, v, mask, block: int):
+def _sdpa_chunked(q, k, v, mask, block: int, key_mask=None):
     """Flash-style chunked attention in pure XLA (lowerable on any backend —
     the dry-run stand-in for the Pallas kernel): scan over query blocks,
     scores live only per block, block fn checkpointed so the backward pass
@@ -98,6 +117,7 @@ def _sdpa_chunked(q, k, v, mask, block: int):
     nb = s // block
     qb = q.reshape(b, nb, block, h, hd).transpose(1, 0, 2, 3, 4)
     mb = mask.reshape(nb, block, mask.shape[-1])
+    kb = None if key_mask is None else _key_bias(key_mask)
 
     @jax.checkpoint
     def blk(args):
@@ -105,6 +125,8 @@ def _sdpa_chunked(q, k, v, mask, block: int):
         qg = qi.reshape(b, block, kv, group, hd)
         scores = jnp.einsum("bskgd,btkd->bkgst", qg, k) * (hd ** -0.5)
         scores = scores.astype(jnp.float32) + mi
+        if kb is not None:
+            scores = scores + kb
         w = jax.nn.softmax(scores, axis=-1).astype(qi.dtype)
         o = jnp.einsum("bkgst,btkd->bskgd", w, v)
         return o.reshape(b, block, h, hd)
@@ -113,19 +135,99 @@ def _sdpa_chunked(q, k, v, mask, block: int):
     return out.transpose(1, 0, 2, 3, 4).reshape(b, s, h, hd)
 
 
-def attention(p, cfg: ArchConfig, x, positions, return_kv: bool = False,
-              impl: str = "naive", block: int = 512):
-    """Full-sequence attention (train / prefill). x: (b, s, d).
+# ---------------------------------------------------------------------------
+# Backend registry (DESIGN.md §8)
+# ---------------------------------------------------------------------------
 
-    impl: 'naive' (materialize scores; paper-era baseline) or 'chunked'
-    (flash-style online blocks — beyond-paper memory optimization)."""
-    b, s, _ = x.shape
-    q, k, v = _project_qkv(p, cfg, x, positions)
+
+ATTN_BACKENDS = {}
+
+
+def register_backend(name: str):
+    """Decorator registering a full-sequence attention backend under
+    ``name``. Backends take (q (b,s,h,hd), k/v (b,s,kv,hd)) plus keyword
+    context and return (b,s,h,hd)."""
+    def deco(fn):
+        ATTN_BACKENDS[name] = fn
+        return fn
+    return deco
+
+
+@register_backend("naive")
+def _naive_backend(q, k, v, *, cfg, positions, key_mask, block):
+    """Materialized-scores baseline (the paper-era implementation)."""
     mask = _mask(cfg, positions[0], positions[0])
-    if impl == "chunked" and s % min(block, s) == 0:
-        out = _sdpa_chunked(q, k, v, mask, min(block, s))
-    else:
-        out = _sdpa(q, k, v, mask)
+    return _sdpa(q, k, v, mask, key_mask)
+
+
+@register_backend("chunked")
+def _chunked_backend(q, k, v, *, cfg, positions, key_mask, block):
+    """Flash-style online blocks in pure XLA (any backend; remat'd)."""
+    s = q.shape[1]
+    mask = _mask(cfg, positions[0], positions[0])
+    if s % min(block, s) != 0:          # ragged tail: fall back
+        return _sdpa(q, k, v, mask, key_mask)
+    return _sdpa_chunked(q, k, v, mask, min(block, s), key_mask)
+
+
+@register_backend("pallas")
+def _pallas_backend(q, k, v, *, cfg, positions, key_mask, block):
+    """kernels/flash_attention: Pallas online-softmax fwd + blockwise bwd
+    (custom VJP), bf16-in/fp32-accum; interpret mode auto-selected on CPU.
+    Assumes positions are the standard arange (true for every train /
+    encode / prefill call; decode uses its own path)."""
+    from repro.kernels.flash_attention import ops as fa_ops
+    out = fa_ops.flash_attention(
+        q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+        v.transpose(0, 2, 1, 3), causal=cfg.causal,
+        window=cfg.sliding_window, key_mask=key_mask,
+        block_q=block, block_k=block)
+    return out.transpose(0, 2, 1, 3)
+
+
+def available_backends() -> tuple:
+    """Registered full-sequence attention backend names."""
+    return tuple(sorted(ATTN_BACKENDS))
+
+
+def resolve_backend(impl: Optional[str], *, seq: int, head_dim: int,
+                    platform: Optional[str] = None) -> str:
+    """Resolve an ``attn_impl`` request to a registered backend name.
+
+    'auto' (or None) picks 'pallas' on accelerators and 'chunked' on CPU
+    hosts (where the Pallas kernel runs interpreted — correct but not the
+    fast path for production shapes). An explicit 'pallas' request falls
+    back to 'chunked' when the compiled kernel cannot serve the shape
+    (head_dim not lane-aligned / seq not sublane-aligned on a real
+    accelerator); interpret mode on CPU has no such constraint."""
+    platform = platform or jax.default_backend()
+    if impl in (None, "auto"):
+        impl = "pallas" if platform in ("tpu", "gpu") else "chunked"
+    if impl not in ATTN_BACKENDS:
+        raise KeyError(f"unknown attention impl {impl!r}; "
+                       f"have {available_backends()} + 'auto'")
+    if impl == "pallas" and platform in ("tpu", "gpu") and (
+            head_dim % 128 != 0 or seq % 8 != 0):
+        return "chunked"
+    return impl
+
+
+def attention(p, cfg: ArchConfig, x, positions, return_kv: bool = False,
+              impl: Optional[str] = None, block: Optional[int] = None,
+              key_mask=None):
+    """Full-sequence attention (train / prefill / encode). x: (b, s, d).
+
+    impl: backend registry name ('naive' | 'chunked' | 'pallas' | 'auto');
+    None defers to ``cfg.attn_impl``. key_mask: optional (b, s) bool mask
+    (True = real token) masking padded key positions — threaded from the
+    encoder towers' ``attn_mask``."""
+    b, s, _ = x.shape
+    impl = resolve_backend(impl if impl is not None else cfg.attn_impl,
+                           seq=s, head_dim=cfg.resolved_head_dim)
+    block = block if block is not None else cfg.attn_block
+    q, k, v = _project_qkv(p, cfg, x, positions)
+    out = ATTN_BACKENDS[impl](q, k, v, cfg=cfg, positions=positions,
+                              key_mask=key_mask, block=block)
     out = L.dense(out.reshape(b, s, -1), p["wo"])
     if return_kv:
         return out, (k, v)
@@ -167,6 +269,7 @@ def cache_from_prefill(cfg: ArchConfig, k, v, cache_len: int,
 
 def init_kv_cache(cfg: ArchConfig, batch: int, seq_len: int,
                   dtype=jnp.bfloat16) -> KVCache:
+    """Zeroed decode KV cache: ring-sized when the window fits, else seq_len."""
     hd = cfg.resolved_head_dim
     ring = cfg.sliding_window is not None and cfg.sliding_window <= seq_len
     clen = cfg.sliding_window if ring else seq_len

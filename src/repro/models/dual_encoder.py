@@ -3,6 +3,11 @@
 Paper §3: F(x), G(y) live on the D-dimensional unit sphere; similarity
 A = (X^T Y)/tau with learnable temperature tau (stored as log_tau).
 Text pooling is mean-over-positions (paper §7.2, unlike ALIGN's [CLS]).
+
+Both encoders take a ``precision`` policy (models.precision): the towers
+run in its compute dtype while the embedding projections and the unit-norm
+always land in fp32 under the default policies — the contrastive loss (and
+its Pallas kernels) see fp32 embeddings regardless of tower precision.
 """
 from __future__ import annotations
 
@@ -11,10 +16,13 @@ import jax.numpy as jnp
 
 from repro.configs.dual import DualEncoderConfig
 from repro.models import layers as L
+from repro.models import precision as prec_lib
 from repro.models import transformer as tf
 
 
 def init_params(cfg: DualEncoderConfig, rng):
+    """Parameter pytree: per-tower transformer params (incl. the image
+    tower's patchify frontend) + embedding projections + log_tau."""
     ki, kt, kpi, kpt = jax.random.split(rng, 4)
     return {
         "image": {
@@ -33,21 +41,28 @@ def _norm(z):
     return z / jnp.linalg.norm(z, axis=-1, keepdims=True).clip(1e-6)
 
 
-def encode_image(cfg: DualEncoderConfig, params, images, *, dtype=jnp.float32,
+def encode_image(cfg: DualEncoderConfig, params, images, *, precision=None,
                  remat_policy=None):
-    """images: dict with 'patch_embeddings' (b, P, d). Returns (b, D) on S^D."""
+    """images: dict with 'image' (b, H, W, C) raw pixels (the tower's
+    patchify frontend embeds them). Returns (b, D) on S^D, fp32."""
+    pol = prec_lib.resolve(precision)
     h = tf.encode(cfg.image_tower, params["image"]["tower"], images,
-                  dtype=dtype, remat_policy=remat_policy)
-    return _norm(L.dense(h, params["image"]["proj"]).astype(jnp.float32))
+                  precision=pol, remat_policy=remat_policy)
+    return _norm(L.dense(pol.project(h),
+                         params["image"]["proj"]).astype(jnp.float32))
 
 
-def encode_text(cfg: DualEncoderConfig, params, texts, *, dtype=jnp.float32,
+def encode_text(cfg: DualEncoderConfig, params, texts, *, precision=None,
                 remat_policy=None):
-    """texts: dict with 'tokens' (b, s) (+ optional 'attn_mask')."""
+    """texts: dict with 'tokens' (b, s) (+ optional 'attn_mask', which masks
+    padding inside attention and pooling)."""
+    pol = prec_lib.resolve(precision)
     h = tf.encode(cfg.text_tower, params["text"]["tower"], texts,
-                  dtype=dtype, remat_policy=remat_policy)
-    return _norm(L.dense(h, params["text"]["proj"]).astype(jnp.float32))
+                  precision=pol, remat_policy=remat_policy)
+    return _norm(L.dense(pol.project(h),
+                         params["text"]["proj"]).astype(jnp.float32))
 
 
 def temperature(params):
+    """tau = exp(log_tau) — the learnable similarity temperature (paper §3)."""
     return jnp.exp(params["log_tau"])

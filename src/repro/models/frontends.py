@@ -1,9 +1,19 @@
-"""Modality frontend STUBS + per-(arch, shape) input specs.
+"""Modality frontends + per-(arch, shape) input specs.
 
-Per the task carve-out, audio (conv feature extractor) and vision (ViT
-encoder + projector) frontends are not implemented; ``input_specs`` provides
-precomputed frame/patch embeddings of the right shape, and
-``synthetic_inputs`` materializes small concrete batches for smoke tests.
+Vision is a REAL frontend (DESIGN.md §8): raw ``(b, H, W, C)`` images are
+linear-patchified (non-overlapping ``patch_size`` windows — exactly a
+stride-``patch_size`` conv — projected to ``d_model``) into the image tower;
+``ArchConfig.image_size/patch_size/channels`` pin the geometry and
+``frontend_len == (image_size // patch_size) ** 2`` patches come out.
+Position information rides on the tower's RoPE over patch index.
+
+Audio (conv feature extractor) remains the one allowed STUB per the task
+carve-out: ``input_specs`` provides precomputed frame embeddings.
+
+``train_inputs_spec`` and ``synthetic_inputs`` are kept aligned BY
+CONSTRUCTION: both derive every shape from the config (the historical
+``P = min(frontend_len, seq // 4)`` drift is gone); a regression test pins
+them equal.
 """
 from __future__ import annotations
 
@@ -12,29 +22,70 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ArchConfig, InputShape
+from repro.models import layers as L
+
+
+def init_vision_frontend(key, cfg: ArchConfig) -> dict:
+    """Patchify-projection parameters for a vision-frontend arch:
+    {'patch_proj': (patch_size² · channels, d_model) fp32}."""
+    pd = cfg.patch_size * cfg.patch_size * cfg.channels
+    return {"patch_proj": L.dense_init(key, pd, cfg.d_model)}
+
+
+def patchify(images, patch_size: int):
+    """(b, H, W, C) -> (b, P, patch_size²·C) non-overlapping patches,
+    row-major over the patch grid."""
+    b, h, w, c = images.shape
+    gh, gw = h // patch_size, w // patch_size
+    x = images.reshape(b, gh, patch_size, gw, patch_size, c)
+    x = x.transpose(0, 1, 3, 2, 4, 5)
+    return x.reshape(b, gh * gw, patch_size * patch_size * c)
+
+
+def patch_embed(p: dict, cfg: ArchConfig, images, dtype):
+    """Linear patchify frontend: raw (b, H, W, C) images -> (b, frontend_len,
+    d_model) patch embeddings in ``dtype`` (the compute dtype; the fp32
+    params are cast at use like every other weight)."""
+    x = patchify(images, cfg.patch_size).astype(dtype)
+    assert x.shape[1] == cfg.frontend_len, \
+        (x.shape, cfg.frontend_len, cfg.image_size, cfg.patch_size)
+    return L.dense(x, p["patch_proj"])
 
 
 def train_inputs_spec(cfg: ArchConfig, shape: InputShape, dtype=jnp.bfloat16):
+    """ShapeDtypeStruct stand-ins for one train/prefill batch of ``shape``.
+    Vision archs consume raw images; vlm archs add text filling the rest of
+    the sequence (``seq_len - frontend_len`` tokens)."""
     b, s = shape.global_batch, shape.seq_len
     SDS = jax.ShapeDtypeStruct
+    if cfg.frontend == "vision":
+        img = SDS((b, cfg.image_size, cfg.image_size, cfg.channels), dtype)
+        if cfg.vocab > 0:            # vlm: patches + text filling the rest
+            return {"image": img,
+                    "tokens": SDS((b, s - cfg.frontend_len), jnp.int32)}
+        return {"image": img}
     if cfg.family == "encoder":  # hubert: frame embeddings + masked targets
         return {
             "embeddings": SDS((b, s, cfg.d_model), dtype),
             "targets": SDS((b, s), jnp.int32),
             "mask": SDS((b, s), jnp.bool_),
         }
-    if cfg.frontend == "vision":  # vlm: patches + text filling the rest
-        s_text = s - cfg.frontend_len
-        return {
-            "patch_embeddings": SDS((b, cfg.frontend_len, cfg.d_model), dtype),
-            "tokens": SDS((b, s_text), jnp.int32),
-        }
     return {"tokens": SDS((b, s), jnp.int32)}
 
 
-def synthetic_inputs(cfg: ArchConfig, batch: int, seq: int, rng: np.random.Generator,
-                     dtype=jnp.float32):
-    """Concrete small batch matching train_inputs_spec (smoke tests/examples)."""
+def synthetic_inputs(cfg: ArchConfig, batch: int, seq: int,
+                     rng: np.random.Generator, dtype=jnp.float32):
+    """Concrete small batch matching ``train_inputs_spec`` leaf-for-leaf
+    (smoke tests/examples): same keys, same shape arithmetic."""
+    if cfg.frontend == "vision":
+        img = jnp.asarray(rng.standard_normal(
+            (batch, cfg.image_size, cfg.image_size, cfg.channels)), dtype)
+        if cfg.vocab > 0:
+            assert seq > cfg.frontend_len, (seq, cfg.frontend_len)
+            return {"image": img, "tokens": jnp.asarray(
+                rng.integers(0, cfg.vocab, (batch, seq - cfg.frontend_len)),
+                jnp.int32)}
+        return {"image": img}
     if cfg.family == "encoder":
         return {
             "embeddings": jnp.asarray(
@@ -42,14 +93,6 @@ def synthetic_inputs(cfg: ArchConfig, batch: int, seq: int, rng: np.random.Gener
             "targets": jnp.asarray(
                 rng.integers(0, cfg.vocab, (batch, seq)), jnp.int32),
             "mask": jnp.asarray(rng.random((batch, seq)) < 0.3),
-        }
-    if cfg.frontend == "vision":
-        P = min(cfg.frontend_len, max(1, seq // 4))
-        return {
-            "patch_embeddings": jnp.asarray(
-                rng.standard_normal((batch, P, cfg.d_model)), dtype),
-            "tokens": jnp.asarray(
-                rng.integers(0, cfg.vocab, (batch, seq - P)), jnp.int32),
         }
     return {"tokens": jnp.asarray(
         rng.integers(0, cfg.vocab, (batch, seq)), jnp.int32)}

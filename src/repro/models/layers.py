@@ -23,6 +23,7 @@ def dense(x, w, name=SAVE):
 
 
 def rms_norm(x, scale, eps=1e-5):
+    """RMSNorm computed in fp32 regardless of input dtype; returns the input dtype."""
     dt = x.dtype
     x = x.astype(jnp.float32)
     y = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
@@ -30,6 +31,7 @@ def rms_norm(x, scale, eps=1e-5):
 
 
 def swiglu(x, wi, wg, wo):
+    """SwiGLU FFN: (x@wi) * silu(x@wg) @ wo."""
     h = dense(x, wi) * jax.nn.silu(dense(x, wg))
     return dense(h, wo)
 
@@ -40,6 +42,7 @@ def swiglu(x, wi, wg, wo):
 
 
 def rope_freqs(head_dim: int, theta: float):
+    """Rotary base frequencies for half the head dim."""
     return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
                             / head_dim))
 
@@ -62,9 +65,11 @@ def apply_rope(x, positions, theta: float):
 
 
 def trunc_normal(key, shape, stddev):
+    """Truncated-normal init at +-2 sigma, fp32."""
     return stddev * jax.random.truncated_normal(key, -2.0, 2.0, shape,
                                                 dtype=jnp.float32)
 
 
 def dense_init(key, d_in, d_out, extra=()):
+    """Dense weight init: trunc-normal, stddev d_in**-0.5, optional leading stack dims."""
     return trunc_normal(key, (*extra, d_in, d_out), stddev=d_in ** -0.5)

@@ -22,6 +22,7 @@ from repro.models import layers as L
 
 
 def init_moe_params(key, cfg: ArchConfig, extra=()):
+    """Router + per-expert SwiGLU (+ optional dense-residual FFN) params."""
     m = cfg.moe
     kr, ki, kg, ko, kd = jax.random.split(key, 5)
     E = m.num_experts

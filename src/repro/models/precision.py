@@ -1,0 +1,92 @@
+"""Mixed-precision policy for the tower runtime (DESIGN.md §8).
+
+The paper trains its 3B towers in bfloat16 with fp32 "islands" where range
+or accumulation matters. Instead of a single scattered ``dtype=`` argument,
+the model stack threads one ``Precision`` object end-to-end:
+
+  param_dtype    — dtype parameters are stored in (fp32 everywhere: the
+                   optimizer owns master weights; casting happens at use)
+  compute_dtype  — dtype of block matmuls/activations inside the towers
+  accum_dtype    — dtype of softmax/log-sum-exp/pooling accumulation
+                   (fp32 always; the Pallas kernels accumulate fp32
+                   internally regardless)
+  fp32_projections — run the lm head / dual-encoder embedding projections
+                   (and hence the logits and unit-sphere embeddings) in
+                   fp32 even when compute is bf16
+
+Norms always compute in fp32 (layers.rms_norm casts internally) and norm
+scales are stored fp32 — the policy object documents that invariant rather
+than toggling it.
+
+``resolve`` accepts a registry name ('f32' | 'bf16' | 'bf16_pure'), an
+existing Precision, or a bare dtype (legacy ``dtype=`` call sites map to a
+policy with that compute dtype and fp32 islands on).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Union
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class Precision:
+    """One mixed-precision policy threaded through the tower runtime."""
+    name: str
+    param_dtype: Any = jnp.float32
+    compute_dtype: Any = jnp.float32
+    accum_dtype: Any = jnp.float32
+    fp32_projections: bool = True
+
+    def compute(self, x):
+        """Cast an activation into the block compute dtype."""
+        return x.astype(self.compute_dtype)
+
+    def accum(self, x):
+        """Cast into the accumulation dtype (softmax/pooling/loss)."""
+        return x.astype(self.accum_dtype)
+
+    def project(self, x):
+        """Cast into the projection dtype: fp32 when the policy keeps
+        projections/logits in fp32, else the compute dtype."""
+        return x.astype(jnp.float32 if self.fp32_projections
+                        else self.compute_dtype)
+
+
+POLICIES = {
+    "f32": Precision("f32"),
+    "bf16": Precision("bf16", compute_dtype=jnp.bfloat16),
+    # ablation: projections/logits ride in bf16 too (norms stay fp32)
+    "bf16_pure": Precision("bf16_pure", compute_dtype=jnp.bfloat16,
+                           fp32_projections=False),
+}
+
+
+def list_policies() -> list:
+    """Registered precision policy names (sorted)."""
+    return sorted(POLICIES)
+
+
+def resolve(precision: Union[Precision, str, None],
+            dtype: Optional[Any] = None) -> Precision:
+    """Resolve a policy argument: a Precision passes through; a registry
+    name looks up POLICIES; None falls back to ``dtype`` (a legacy bare
+    compute dtype → ad-hoc policy with fp32 islands) or 'f32'."""
+    if isinstance(precision, Precision):
+        return precision
+    if isinstance(precision, str):
+        try:
+            return POLICIES[precision]
+        except KeyError:
+            raise KeyError(f"unknown precision policy {precision!r}; "
+                           f"have {list_policies()}") from None
+    if precision is not None:          # a bare dtype passed positionally
+        dtype = precision
+    if dtype is None:
+        return POLICIES["f32"]
+    dtype = jnp.dtype(dtype)
+    for p in POLICIES.values():
+        if jnp.dtype(p.compute_dtype) == dtype and p.fp32_projections:
+            return p
+    return Precision(f"compute_{dtype.name}", compute_dtype=dtype)

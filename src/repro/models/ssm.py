@@ -20,11 +20,13 @@ from repro.models import layers as L
 
 
 class SSMCache(NamedTuple):
+    """Decode-time SSM state: conv tail (b, d_in, conv_w-1) + SSD state (b, heads, P, N)."""
     ssm: jax.Array        # (b, heads, head_dim, N) f32
     conv: jax.Array       # (b, conv_width-1, d_conv) rolling window of xBC
 
 
 def dims(cfg: ArchConfig):
+    """Derived SSD dimensions (d_inner, n_heads) for the config."""
     s = cfg.ssm
     d_in = s.expand * cfg.d_model
     nheads = d_in // s.head_dim
@@ -33,6 +35,7 @@ def dims(cfg: ArchConfig):
 
 
 def init_ssm_params(key, cfg: ArchConfig, extra=()):
+    """Mamba2 block params: in/out projections, conv, per-head A/D/dt."""
     s = cfg.ssm
     d = cfg.d_model
     d_in, nheads, d_conv = dims(cfg)
@@ -166,6 +169,7 @@ def mamba_mixer(p, cfg: ArchConfig, x, cache: SSMCache = None):
 
 
 def init_ssm_cache(cfg: ArchConfig, batch: int, dtype=jnp.bfloat16) -> SSMCache:
+    """Zeroed decode cache for one SSM block stack."""
     s = cfg.ssm
     d_in, nheads, d_conv = dims(cfg)
     return SSMCache(

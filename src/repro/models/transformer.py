@@ -12,6 +12,12 @@ Entry points:
   prefill(cfg, params, batch)            -> (logits, caches)  [prefill_32k]
   decode_step(cfg, params, token, pos, caches) -> (logits, caches) [decode]
   encode(cfg, params, batch)             -> pooled (b, d)     [dual-encoder tower]
+
+Every entry point takes ``precision`` — a models.precision policy (object,
+registry name, or None) governing compute/accum/projection dtypes
+end-to-end; the legacy ``dtype=`` argument maps to a policy with that
+compute dtype (fp32 norms/projections stay on). Vision-frontend archs
+consume raw ``batch['image']`` through models.frontends.patch_embed.
 """
 from __future__ import annotations
 
@@ -23,12 +29,15 @@ import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
 from repro.models import attention as attn_lib
+from repro.models import frontends as fe
 from repro.models import layers as L
 from repro.models import moe as moe_lib
+from repro.models import precision as prec_lib
 from repro.models import ssm as ssm_lib
 
 
 def period_of(cfg: ArchConfig) -> int:
+    """Layer-stack period: lcm of attention and MoE interleaves (scan unit)."""
     p = cfg.attn_every if cfg.family == "hybrid" else 1
     if cfg.moe is not None:
         p = math.lcm(p, cfg.moe.every)
@@ -64,6 +73,7 @@ def _init_block(key, cfg: ArchConfig, kind: str, use_moe: bool, extra):
 
 
 def init_params(cfg: ArchConfig, rng):
+    """Full tower/LM params: scanned block stacks, final norm, frontend, embeddings/head."""
     period = period_of(cfg)
     n_periods = cfg.n_layers // period
     kinds = cfg.layer_kinds()[:period]
@@ -78,6 +88,8 @@ def init_params(cfg: ArchConfig, rng):
         "blocks": blocks,
         "final_norm": jnp.ones((cfg.d_model,), jnp.float32),
     }
+    if cfg.frontend == "vision":
+        params["frontend"] = fe.init_vision_frontend(keys[-3], cfg)
     if cfg.vocab > 0 and cfg.frontend != "audio":
         params["embed"] = L.trunc_normal(keys[-1], (cfg.vocab, cfg.d_model),
                                          cfg.d_model ** -0.5)
@@ -92,7 +104,7 @@ def init_params(cfg: ArchConfig, rng):
 
 
 def _apply_block(cfg, kind, use_moe, p, h, positions, cache, decode, moe_args,
-                 collect_cache_len=None):
+                 collect_cache_len=None, key_mask=None):
     aux = jnp.zeros((), jnp.float32)
     if kind == "attn":
         hn = L.rms_norm(h, p["ln1"], cfg.norm_eps)
@@ -101,12 +113,13 @@ def _apply_block(cfg, kind, use_moe, p, h, positions, cache, decode, moe_args,
                 p["attn"], cfg, hn, cache, positions)
         elif collect_cache_len is not None:
             mix, (k, v) = attn_lib.attention(p["attn"], cfg, hn, positions,
-                                             return_kv=True)
+                                             return_kv=True,
+                                             key_mask=key_mask)
             new_cache = attn_lib.cache_from_prefill(cfg, k, v,
                                                     collect_cache_len)
         else:
             mix = attn_lib.attention(p["attn"], cfg, hn, positions,
-                                     impl=cfg.attn_impl, block=cfg.attn_block)
+                                     key_mask=key_mask)
             new_cache = None
     else:
         hn = L.rms_norm(h, p["ln1"], cfg.norm_eps)
@@ -127,12 +140,13 @@ def _apply_block(cfg, kind, use_moe, p, h, positions, cache, decode, moe_args,
 
 def forward(cfg: ArchConfig, params, h, positions, caches=None, decode=False,
             remat_policy=None, moe_args=None, collect_cache_len=None,
-            unroll: int = 1):
+            unroll: int = 1, key_mask=None):
     """Run the full stack. h: (b, s, d). Returns (h, new_caches, aux_loss).
 
     caches: list (len=period) of stacked KV/SSM caches or None.
     remat_policy: optional jax.checkpoint policy applied per period-step.
     collect_cache_len: if set (prefill), build decode caches of this length.
+    key_mask: optional (b, s) bool padding mask threaded into attention.
     """
     period = period_of(cfg)
     kinds = cfg.layer_kinds()[:period]
@@ -146,7 +160,7 @@ def forward(cfg: ArchConfig, params, h, positions, caches=None, decode=False,
             c = None if caches_in is None else caches_in[i]
             h, nc, aux = _apply_block(cfg, kinds[i], moe_mask[i], blocks[i], h,
                                       positions, c, decode, moe_args,
-                                      collect_cache_len)
+                                      collect_cache_len, key_mask)
             new_caches.append(nc)
             aux_total = aux_total + aux
         return h, (new_caches, aux_total)
@@ -179,31 +193,47 @@ def forward(cfg: ArchConfig, params, h, positions, caches=None, decode=False,
 
 
 def embed_inputs(cfg: ArchConfig, params, batch, dtype):
-    """Returns (h (b, s, d), positions (b, s), text_mask (b, s) or None)."""
-    if cfg.frontend == "audio" or (cfg.frontend == "vision"
-                                   and "tokens" not in batch):
-        key = "embeddings" if cfg.frontend == "audio" else "patch_embeddings"
-        h = batch[key].astype(dtype)                    # (b, s, d) stub frontend
+    """Returns (h (b, s, d), positions (b, s), text_mask (b, s) or None).
+
+    Vision archs consume raw ``batch['image']`` (b, H, W, C) through the
+    linear-patchify frontend (models.frontends); vlm archs append token
+    embeddings after the patches (and accept token-only batches, e.g.
+    text-only decode). Audio archs consume precomputed frame
+    ``batch['embeddings']`` (the one remaining frontend stub)."""
+    if cfg.frontend == "audio":
+        h = batch["embeddings"].astype(dtype)           # (b, s, d) stub
         b, s, _ = h.shape
         pos = jnp.broadcast_to(jnp.arange(s), (b, s))
         return h, pos, None
+    if cfg.frontend == "vision" and "image" in batch:
+        patches = fe.patch_embed(params["frontend"], cfg, batch["image"],
+                                 dtype)                 # (b, P, d)
+        b = patches.shape[0]
+        if cfg.vocab > 0 and "tokens" in batch:         # vlm: patches + text
+            tok = batch["tokens"]
+            emb = jnp.take(params["embed"], tok, axis=0).astype(dtype)
+            h = jnp.concatenate([patches, emb], axis=1)
+            s = h.shape[1]
+            pos = jnp.broadcast_to(jnp.arange(s), (b, s))
+            text_mask = jnp.concatenate(
+                [jnp.zeros((b, patches.shape[1]), bool),
+                 jnp.ones((b, tok.shape[1]), bool)], axis=1)
+            return h, pos, text_mask
+        s = patches.shape[1]
+        pos = jnp.broadcast_to(jnp.arange(s), (b, s))
+        return patches, pos, None
     tok = batch["tokens"]
     emb = jnp.take(params["embed"], tok, axis=0).astype(dtype)
-    if cfg.frontend == "vision" and "patch_embeddings" in batch:
-        patches = batch["patch_embeddings"].astype(dtype)  # (b, P, d)
-        h = jnp.concatenate([patches, emb], axis=1)
-        b, s, _ = h.shape
-        pos = jnp.broadcast_to(jnp.arange(s), (b, s))
-        text_mask = jnp.concatenate(
-            [jnp.zeros((b, patches.shape[1]), bool),
-             jnp.ones((b, tok.shape[1]), bool)], axis=1)
-        return h, pos, text_mask
     b, s = tok.shape
     pos = jnp.broadcast_to(jnp.arange(s), (b, s))
     return emb, pos, None
 
 
-def logits_from_h(cfg: ArchConfig, params, h):
+def logits_from_h(cfg: ArchConfig, params, h, pol: prec_lib.Precision = None):
+    """Vocabulary logits from hidden states; the precision policy decides
+    whether the head matmul (and hence the logits) runs in fp32."""
+    if pol is not None:
+        h = pol.project(h)
     if cfg.tie_embeddings:
         w = params["embed"].astype(h.dtype)
         return jnp.einsum("bsd,vd->bsv", h, w)
@@ -216,30 +246,35 @@ def logits_from_h(cfg: ArchConfig, params, h):
 
 
 def lm_loss(cfg: ArchConfig, params, batch, *, dtype=jnp.float32,
-            remat_policy=None, moe_args=None, unroll: int = 1):
+            precision=None, remat_policy=None, moe_args=None,
+            unroll: int = 1):
     """Training loss.
 
     decoder families: next-token CE over `tokens` (+`labels` if given).
     encoder (hubert): masked-frame CE over `targets` where `mask` is set.
     vlm: next-token CE on the text segment only.
+
+    ``precision`` (policy object/name) governs compute/projection dtypes;
+    the legacy ``dtype=`` maps to a policy with that compute dtype. The CE
+    itself always accumulates fp32.
     """
-    h, pos, text_mask = embed_inputs(cfg, params, batch, dtype)
+    pol = prec_lib.resolve(precision, dtype)
+    h, pos, text_mask = embed_inputs(cfg, params, batch, pol.compute_dtype)
     h, _, aux = forward(cfg, params, h, pos, remat_policy=remat_policy,
                         moe_args=moe_args, unroll=unroll)
     h = L.rms_norm(h, params["final_norm"], cfg.norm_eps)
 
     if cfg.family == "encoder":
-        logits = logits_from_h(cfg, params, h).astype(jnp.float32)
+        logits = logits_from_h(cfg, params, h, pol).astype(jnp.float32)
         targets = batch["targets"]                       # (b, s)
         mask = batch["mask"].astype(jnp.float32)         # (b, s)
         logp = jax.nn.log_softmax(logits, axis=-1)
         nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
         loss = jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
     else:
-        logits = logits_from_h(cfg, params, h).astype(jnp.float32)
+        logits = logits_from_h(cfg, params, h, pol).astype(jnp.float32)
         if text_mask is not None:                        # vlm: text tail only
-            P = batch["patch_embeddings"].shape[1]
-            logits = logits[:, P:, :]
+            logits = logits[:, cfg.frontend_len:, :]
         tokens = batch["tokens"]
         logp = jax.nn.log_softmax(logits[:, :-1], axis=-1)
         tgt = tokens[:, 1:]
@@ -276,15 +311,17 @@ def init_caches(cfg: ArchConfig, batch: int, seq_len: int, dtype=jnp.bfloat16):
 
 
 def prefill(cfg: ArchConfig, params, batch, *, dtype=jnp.bfloat16,
-            moe_args=None, collect_cache_len=None, unroll: int = 1):
+            precision=None, moe_args=None, collect_cache_len=None,
+            unroll: int = 1):
     """Full forward emitting last-position logits; with ``collect_cache_len``
     also builds the decode caches (serving prefill). Returns logits or
     (logits, caches)."""
-    h, pos, _ = embed_inputs(cfg, params, batch, dtype)
+    pol = prec_lib.resolve(precision, dtype)
+    h, pos, _ = embed_inputs(cfg, params, batch, pol.compute_dtype)
     h, caches, _ = forward(cfg, params, h, pos, moe_args=moe_args,
                            collect_cache_len=collect_cache_len, unroll=unroll)
     h = L.rms_norm(h, params["final_norm"], cfg.norm_eps)
-    out = (logits_from_h(cfg, params, h[:, -1:, :]) if cfg.vocab > 0
+    out = (logits_from_h(cfg, params, h[:, -1:, :], pol) if cfg.vocab > 0
            else h[:, -1:, :])
     if collect_cache_len is not None:
         return out, caches
@@ -292,23 +329,35 @@ def prefill(cfg: ArchConfig, params, batch, *, dtype=jnp.bfloat16,
 
 
 def decode_step(cfg: ArchConfig, params, token, pos, caches, *,
-                dtype=jnp.bfloat16, moe_args=None, unroll: int = 1):
+                dtype=jnp.bfloat16, precision=None, moe_args=None,
+                unroll: int = 1):
     """One decode step. token: (b, 1) int32; pos: scalar int32."""
-    h = jnp.take(params["embed"], token, axis=0).astype(dtype)
+    pol = prec_lib.resolve(precision, dtype)
+    h = jnp.take(params["embed"], token, axis=0).astype(pol.compute_dtype)
     h, new_caches, _ = forward(cfg, params, h, pos, caches=caches, decode=True,
                                moe_args=moe_args, unroll=unroll)
     h = L.rms_norm(h, params["final_norm"], cfg.norm_eps)
-    return logits_from_h(cfg, params, h), new_caches
+    return logits_from_h(cfg, params, h, pol), new_caches
 
 
 def encode(cfg: ArchConfig, params, batch, *, dtype=jnp.float32,
-           remat_policy=None):
-    """Pooled representation for dual-encoder towers. Returns (b, d_model)."""
-    h, pos, _ = embed_inputs(cfg, params, batch, dtype)
-    h, _, _ = forward(cfg, params, h, pos, remat_policy=remat_policy)
-    h = L.rms_norm(h, params["final_norm"], cfg.norm_eps)
+           precision=None, remat_policy=None):
+    """Pooled representation for dual-encoder towers. Returns (b, d_model)
+    in the policy's projection dtype (fp32 under the default policies).
+
+    ``batch['attn_mask']`` (b, s) masks padded text positions BOTH inside
+    attention (threaded to the backend as a key-padding mask) and in the
+    mean pooling; pooling always accumulates in fp32."""
+    pol = prec_lib.resolve(precision, dtype)
+    h, pos, _ = embed_inputs(cfg, params, batch, pol.compute_dtype)
     mask = batch.get("attn_mask")
+    h, _, _ = forward(cfg, params, h, pos, remat_policy=remat_policy,
+                      key_mask=mask)
+    h = L.rms_norm(h, params["final_norm"], cfg.norm_eps)
+    h = pol.accum(h)
     if mask is not None:
         m = mask.astype(h.dtype)[..., None]
-        return jnp.sum(h * m, axis=1) / jnp.maximum(jnp.sum(m, axis=1), 1.0)
-    return jnp.mean(h, axis=1)
+        pooled = jnp.sum(h * m, axis=1) / jnp.maximum(jnp.sum(m, axis=1), 1.0)
+    else:
+        pooled = jnp.mean(h, axis=1)
+    return pol.project(pooled)

@@ -58,7 +58,7 @@ class ZeroShotService:
                  registry_dir: Optional[str] = None,
                  buckets: Sequence[int] = DEFAULT_BUCKETS,
                  max_delay_ms: float = 2.0,
-                 dtype=jnp.float32,
+                 precision="f32",
                  interpret: Optional[bool] = None,
                  autostart: bool = True):
         self.cfg = cfg
@@ -72,9 +72,9 @@ class ZeroShotService:
         self.inv_tau = float(jnp.exp(-params["log_tau"]))
 
         enc_i = jax.jit(lambda p, im: de.encode_image(cfg, p, im,
-                                                      dtype=dtype))
+                                                      precision=precision))
         enc_t = jax.jit(lambda p, tx: de.encode_text(cfg, p, tx,
-                                                     dtype=dtype))
+                                                     precision=precision))
         self.batcher = MicroBatcher(
             {"image": lambda im: enc_i(self.params, im),
              "text": lambda tx: enc_t(self.params, tx)},
@@ -84,10 +84,12 @@ class ZeroShotService:
 
     # -- embedding ---------------------------------------------------------
     def embed_images(self, images, *, wait: bool = True):
-        """images: (b, P, patch_dim) patch embeddings (or dict payload).
+        """images: raw (b, H, W, C) pixels matching the image tower's
+        geometry (or a dict payload, e.g. {'image': ...}) — the serving
+        image-preprocessing path feeds the tower's patchify frontend.
         Returns (b, D) unit-norm fp32 — or the future when wait=False."""
         payload = images if isinstance(images, dict) else \
-            {"patch_embeddings": np.asarray(images, np.float32)}
+            {"image": np.asarray(images, np.float32)}
         fut = self.batcher.submit_many("image", payload)
         return self._result(fut) if wait else fut
 

@@ -99,14 +99,12 @@ def check_gradaccum_composition():
     from repro.configs import get_arch, smoke_dual_variant
     from repro.core.gradaccum import contrastive_step
     from repro.data import Tokenizer, caption_corpus, contrastive_batch, \
-        make_world
+        world_for_tower
     from repro.models import dual_encoder as de
 
     cfg = smoke_dual_variant(get_arch("basic-s"))
     rng = np.random.default_rng(0)
-    world = make_world(rng, n_classes=8,
-                       n_patches=cfg.image_tower.frontend_len,
-                       patch_dim=cfg.image_tower.d_model, noise=0.2)
+    world = world_for_tower(rng, cfg.image_tower, n_classes=8, noise=0.2)
     tok = Tokenizer.train(caption_corpus(world, rng, 200), vocab_size=300)
     batch, _ = contrastive_batch(world, tok, 32, rng)
     batch = jax.tree.map(jnp.asarray, batch)

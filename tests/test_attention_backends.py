@@ -1,0 +1,185 @@
+"""Attention backend registry: cross-backend parity + precision policy.
+
+The tower runtime's three full-sequence backends (naive / chunked / pallas)
+must agree to fp32 tolerance — values AND gradients — on every mask shape
+the BASIC towers use: bidirectional (causal=False), causal, sliding-window,
+key-padding, bf16 inputs, and GQA head layouts (DESIGN.md §8).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_arch, smoke_variant
+from repro.configs.base import ArchConfig
+from repro.models import attention as attn_lib
+from repro.models import precision as prec_lib
+from repro.models import transformer as tf
+
+
+def _cfg(heads=4, kv=2, d=64, causal=False, window=None,
+         impl="naive") -> ArchConfig:
+    return ArchConfig(
+        name="t", family="encoder", n_layers=2, d_model=d, n_heads=heads,
+        n_kv_heads=kv, d_ff=4 * d, vocab=64, head_dim=d // heads,
+        causal=causal, sliding_window=window, attn_impl=impl, attn_block=32)
+
+
+def _qkv_params(cfg, seed=0):
+    return attn_lib.init_attn_params(jax.random.key(seed), cfg)
+
+
+def _run(cfg, p, x, impl, key_mask=None):
+    b, s, _ = x.shape
+    pos = jnp.broadcast_to(jnp.arange(s), (b, s))
+    return attn_lib.attention(p, cfg, x, pos, impl=impl, key_mask=key_mask)
+
+
+CASES = [
+    # (heads, kv, seq, causal, window, masked, dtype)
+    (4, 2, 48, False, None, False, jnp.float32),     # bidirectional GQA
+    (4, 4, 48, False, None, True, jnp.float32),      # padded MHA (towers)
+    (4, 2, 48, False, None, True, jnp.bfloat16),     # padded GQA bf16
+    (4, 1, 64, True, None, False, jnp.float32),      # causal max-group GQA
+    (4, 2, 64, True, 16, False, jnp.float32),        # sliding window
+]
+
+
+@pytest.mark.parametrize("heads,kv,seq,causal,window,masked,dtype", CASES)
+def test_backends_agree_values_and_grads(heads, kv, seq, causal, window,
+                                         masked, dtype):
+    cfg = _cfg(heads=heads, kv=kv, causal=causal, window=window)
+    p = _qkv_params(cfg)
+    rng = np.random.default_rng(seq + heads)
+    x = jnp.asarray(rng.standard_normal((2, seq, cfg.d_model)),
+                    jnp.float32).astype(dtype)
+    key_mask = None
+    if masked:
+        lens = np.array([seq - 3, seq // 2])
+        key_mask = jnp.asarray(np.arange(seq)[None, :] < lens[:, None])
+
+    outs, grads = {}, {}
+    for impl in ("naive", "chunked", "pallas"):
+        def f(p):
+            o = _run(cfg, p, x, impl, key_mask)
+            return jnp.sum(jnp.sin(o.astype(jnp.float32)))
+        outs[impl] = _run(cfg, p, x, impl, key_mask)
+        grads[impl] = jax.grad(f)(p)
+
+    tol = 2e-5 if dtype == jnp.float32 else 5e-2
+    gtol = 2e-4 if dtype == jnp.float32 else 1e-1
+    for impl in ("chunked", "pallas"):
+        np.testing.assert_allclose(
+            np.asarray(outs[impl], np.float32),
+            np.asarray(outs["naive"], np.float32), rtol=tol, atol=tol,
+            err_msg=impl)
+        for (path, a), (_, b) in zip(
+                jax.tree_util.tree_leaves_with_path(grads[impl]),
+                jax.tree_util.tree_leaves_with_path(grads["naive"])):
+            np.testing.assert_allclose(
+                np.asarray(a, np.float32), np.asarray(b, np.float32),
+                rtol=gtol, atol=gtol, err_msg=f"{impl} {path}")
+
+
+def test_padded_keys_do_not_leak_into_outputs():
+    """Changing a padded position's content must not change any valid
+    query's output, under every backend."""
+    cfg = _cfg(causal=False)
+    p = _qkv_params(cfg, seed=1)
+    rng = np.random.default_rng(3)
+    s, valid = 32, 20
+    x = jnp.asarray(rng.standard_normal((1, s, cfg.d_model)), jnp.float32)
+    key_mask = jnp.asarray(np.arange(s)[None, :] < valid)
+    x2 = x.at[0, valid:, :].set(jnp.asarray(
+        rng.standard_normal((s - valid, cfg.d_model)), jnp.float32))
+    for impl in ("naive", "chunked", "pallas"):
+        o1 = _run(cfg, p, x, impl, key_mask)
+        o2 = _run(cfg, p, x2, impl, key_mask)
+        np.testing.assert_allclose(np.asarray(o1[0, :valid]),
+                                   np.asarray(o2[0, :valid]),
+                                   atol=1e-5, err_msg=impl)
+
+
+def test_registry_resolution_and_fallback():
+    assert set(attn_lib.available_backends()) == {"naive", "chunked",
+                                                  "pallas"}
+    # auto: accelerator -> pallas, cpu host -> chunked
+    assert attn_lib.resolve_backend("auto", seq=128, head_dim=128,
+                                    platform="tpu") == "pallas"
+    assert attn_lib.resolve_backend(None, seq=128, head_dim=128,
+                                    platform="cpu") == "chunked"
+    # explicit pallas falls back on shapes Mosaic can't tile (compiled mode)
+    assert attn_lib.resolve_backend("pallas", seq=128, head_dim=64,
+                                    platform="tpu") == "chunked"
+    assert attn_lib.resolve_backend("pallas", seq=127, head_dim=128,
+                                    platform="tpu") == "chunked"
+    # ... but interpret mode on CPU has no tiling constraint
+    assert attn_lib.resolve_backend("pallas", seq=127, head_dim=40,
+                                    platform="cpu") == "pallas"
+    with pytest.raises(KeyError):
+        attn_lib.resolve_backend("nope", seq=8, head_dim=8)
+
+
+def test_encoder_tower_parity_through_encode():
+    """Whole-tower parity: tf.encode output identical across backends on a
+    real (smoke) text tower with a padding mask."""
+    base = smoke_variant(get_arch("basic-s").text_tower)
+    params = tf.init_params(base, jax.random.key(0))
+    rng = np.random.default_rng(0)
+    toks = jnp.asarray(rng.integers(1, base.vocab, (3, 24)), jnp.int32)
+    mask = jnp.asarray(np.arange(24)[None, :] < np.array([[24], [9], [16]]))
+    batch = {"tokens": toks, "attn_mask": mask}
+    outs = {impl: tf.encode(dataclasses.replace(base, attn_impl=impl),
+                            params, batch)
+            for impl in ("naive", "chunked", "pallas")}
+    for impl in ("chunked", "pallas"):
+        np.testing.assert_allclose(np.asarray(outs[impl]),
+                                   np.asarray(outs["naive"]),
+                                   rtol=2e-5, atol=2e-5, err_msg=impl)
+
+
+# ---------------------------------------------------------------------------
+# precision policy
+# ---------------------------------------------------------------------------
+
+
+def test_precision_registry_and_resolve():
+    assert set(prec_lib.list_policies()) == {"f32", "bf16", "bf16_pure"}
+    assert prec_lib.resolve("bf16").compute_dtype == jnp.bfloat16
+    assert prec_lib.resolve(None).name == "f32"
+    # legacy bare-dtype call sites map onto the named policies
+    assert prec_lib.resolve(None, jnp.bfloat16) is prec_lib.POLICIES["bf16"]
+    assert prec_lib.resolve(jnp.float32) is prec_lib.POLICIES["f32"]
+    assert prec_lib.resolve("bf16_pure").fp32_projections is False
+    with pytest.raises(KeyError):
+        prec_lib.resolve("fp8")
+
+
+def test_bf16_policy_keeps_fp32_islands():
+    """Under the bf16 policy the tower computes in bf16 but embeddings /
+    logits land in fp32 and stay close to the full-fp32 result."""
+    from repro.models import dual_encoder as de
+    from repro.configs import smoke_dual_variant
+    cfg = smoke_dual_variant(get_arch("basic-s"))
+    params = de.init_params(cfg, jax.random.key(0))
+    rng = np.random.default_rng(0)
+    it = cfg.image_tower
+    images = {"image": jnp.asarray(rng.standard_normal(
+        (4, it.image_size, it.image_size, it.channels)), jnp.float32)}
+    x32 = de.encode_image(cfg, params, images, precision="f32")
+    x16 = de.encode_image(cfg, params, images, precision="bf16")
+    assert x16.dtype == jnp.float32          # fp32 projection island
+    assert float(jnp.max(jnp.abs(x16 - x32))) < 0.05
+    np.testing.assert_allclose(np.asarray(jnp.linalg.norm(x16, axis=-1)),
+                               1.0, rtol=1e-3)
+    # lm path: bf16 compute, fp32 logits
+    lcfg = smoke_variant(get_arch("llama3.2-1b"))
+    lp = tf.init_params(lcfg, jax.random.key(1))
+    toks = jnp.asarray(rng.integers(0, lcfg.vocab, (2, 16)), jnp.int32)
+    out = tf.prefill(lcfg, lp, {"tokens": toks}, precision="bf16")
+    assert out.dtype == jnp.float32
+    l32, _ = tf.lm_loss(lcfg, lp, {"tokens": toks}, precision="f32")
+    l16, _ = tf.lm_loss(lcfg, lp, {"tokens": toks}, precision="bf16")
+    assert abs(float(l32) - float(l16)) < 0.1

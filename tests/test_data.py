@@ -16,7 +16,7 @@ _CACHE = {}
 def _tok():
     if "wt" not in _CACHE:
         rng = np.random.default_rng(0)
-        world = make_world(rng, n_classes=16, n_patches=4, patch_dim=32)
+        world = make_world(rng, n_classes=16)
         _CACHE["wt"] = (world, Tokenizer.train(
             caption_corpus(world, rng, 500), vocab_size=512))
     return _CACHE["wt"]
@@ -48,7 +48,10 @@ def test_world_determinism_and_separability():
     world, tok = _tok()
     rng = np.random.default_rng(1)
     batch, cls = contrastive_batch(world, tok, 64, rng)
-    imgs = batch["images"]["patch_embeddings"].mean(axis=1)  # (64, pd)
+    raw = batch["images"]["image"]                 # (64, H, W, C) raw pixels
+    assert raw.shape[1:] == (world.image_size, world.image_size,
+                             world.channels)
+    imgs = raw.reshape(raw.shape[0], -1)
     # class centroids
     cents = {c: imgs[cls == c].mean(0) for c in set(cls.tolist())
              if (cls == c).sum() > 1}
@@ -92,3 +95,55 @@ def test_prefetcher_yields_deterministic_batches():
     expect, _ = contrastive_batch(world, tok, 8, host_rng(3, 0, 0))
     np.testing.assert_array_equal(b0["texts"]["tokens"],
                                   expect["texts"]["tokens"])
+
+
+def test_prefetcher_close_ends_iteration_instead_of_hanging():
+    """Regression: ``__next__`` after ``close()`` used to block forever on
+    the drained queue; it must raise StopIteration promptly, and close()
+    must be idempotent."""
+    import threading
+    import time
+
+    pf = Prefetcher(lambda step: step, depth=2)
+    next(pf)
+    pf.close()
+    pf.close()                    # idempotent
+    # drain whatever was prefetched, then the stream must END
+    t0 = time.time()
+    tail = list(pf)
+    assert time.time() - t0 < 5.0
+    assert len(tail) <= 2         # at most `depth` buffered batches
+    with np.testing.assert_raises(StopIteration):
+        next(pf)
+
+    # a consumer already blocked in next() must wake up after close()
+    pf2 = Prefetcher(lambda step: step, depth=2)
+    for _ in range(3):
+        next(pf2)                 # queue momentarily drained
+    got = {}
+
+    def consume():
+        try:
+            while True:
+                next(pf2)
+        except StopIteration:
+            got["stopped"] = True
+
+    t = threading.Thread(target=consume)
+    t.start()
+    time.sleep(0.1)
+    pf2.close()
+    t.join(timeout=5.0)
+    assert got.get("stopped") and not t.is_alive()
+
+
+def test_prefetcher_surfaces_worker_crash():
+    """A make_batch exception must re-raise at the consumer (not hang the
+    training loop on an empty queue with a dead producer)."""
+    def bad(step):
+        raise ValueError(f"boom at {step}")
+
+    pf = Prefetcher(bad, depth=2)
+    with np.testing.assert_raises(ValueError):
+        next(pf)
+    pf.close()                    # still idempotent after a crash

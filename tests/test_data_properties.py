@@ -18,7 +18,7 @@ _CACHE = {}
 def _tok():
     if "tok" not in _CACHE:
         rng = np.random.default_rng(0)
-        world = make_world(rng, n_classes=16, n_patches=4, patch_dim=32)
+        world = make_world(rng, n_classes=16)
         _CACHE["tok"] = Tokenizer.train(
             caption_corpus(world, rng, 500), vocab_size=512)
     return _CACHE["tok"]

@@ -9,7 +9,7 @@ import numpy as np
 import pytest
 
 from repro.configs import get_arch, smoke_variant
-from repro.data import Tokenizer, caption_corpus, make_world
+from repro.data import Tokenizer, caption_corpus, world_for_tower
 from repro.data.synthetic import render_images
 from repro.models import dual_encoder as de
 from repro.serving import MicroBatcher, ZeroShotService
@@ -26,9 +26,8 @@ def _world():
             cfg, image_tower=smoke_variant(cfg.image_tower),
             text_tower=smoke_variant(cfg.text_tower), embed_dim=32)
         rng = np.random.default_rng(0)
-        world = make_world(rng, n_classes=10,
-                           n_patches=cfg.image_tower.frontend_len,
-                           patch_dim=cfg.image_tower.d_model, noise=0.2)
+        world = world_for_tower(rng, cfg.image_tower, n_classes=10,
+                                noise=0.2)
         tok = Tokenizer.train(caption_corpus(world, rng, 300), vocab_size=400)
         params = de.init_params(cfg, jax.random.key(0))
         _CACHE["w"] = (cfg, world, tok, params)
@@ -114,10 +113,10 @@ def test_batcher_matches_unbatched_encode():
     enc = jax.jit(lambda im: de.encode_image(cfg, params, im))
     mb = MicroBatcher({"image": enc}, buckets=(1, 2, 4, 8),
                       max_delay_ms=60_000.0, autostart=False)
-    fut = mb.submit_many("image", {"patch_embeddings": imgs})
+    fut = mb.submit_many("image", {"image": imgs})
     mb.flush_now()
     got = fut.result(timeout=10.0)
-    want = np.asarray(enc({"patch_embeddings": jnp.asarray(imgs)}))
+    want = np.asarray(enc({"image": jnp.asarray(imgs)}))
     np.testing.assert_allclose(got, want, atol=1e-5)
 
 
@@ -251,7 +250,7 @@ def test_service_classify_matches_offline_pipeline(tmp_path):
     cemb = class_embeddings(lambda tx: de.encode_text(cfg, params, tx),
                             tok, world.class_names)
     iemb = de.encode_image(cfg, params,
-                           {"patch_embeddings": jnp.asarray(imgs)})
+                           {"image": jnp.asarray(imgs)})
     logits = jnp.asarray(np.asarray(iemb @ cemb.T)) * inv_tau
     order = np.asarray(jnp.argsort(-logits, axis=1, stable=True))[:, :5]
     np.testing.assert_array_equal(res.indices, order)

@@ -6,7 +6,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_arch, smoke_variant
-from repro.data import Tokenizer, caption_corpus, make_world
+from repro.data import Tokenizer, caption_corpus, world_for_tower
 from repro.eval import (evaluate_benchmark, mean_per_class_recall,
                         retrieval_recall_at_k, topk_accuracy)
 
@@ -29,7 +29,6 @@ def test_class_embeddings_batched_matches_per_class_loop():
     original one-encode-per-class loop bit-for-bit in shape and closely in
     value (same math, different batch grouping)."""
     from repro.configs import get_arch, smoke_variant
-    from repro.data import make_world
     from repro.eval.zero_shot import DEFAULT_TEMPLATES, class_embeddings
     from repro.models import dual_encoder as de
 
@@ -38,9 +37,7 @@ def test_class_embeddings_batched_matches_per_class_loop():
         cfg, image_tower=smoke_variant(cfg.image_tower),
         text_tower=smoke_variant(cfg.text_tower), embed_dim=16)
     rng = np.random.default_rng(0)
-    world = make_world(rng, n_classes=7,
-                       n_patches=cfg.image_tower.frontend_len,
-                       patch_dim=cfg.image_tower.d_model)
+    world = world_for_tower(rng, cfg.image_tower, n_classes=7)
     from repro.data import Tokenizer, caption_corpus
     tok = Tokenizer.train(caption_corpus(world, rng, 200), vocab_size=300)
     params = de.init_params(cfg, jax.random.key(0))
@@ -89,9 +86,8 @@ def test_prompt_ensembling_end_to_end():
         cfg, image_tower=smoke_variant(cfg.image_tower),
         text_tower=smoke_variant(cfg.text_tower), embed_dim=32)
     rng = np.random.default_rng(0)
-    world = make_world(rng, n_classes=12,
-                       n_patches=cfg.image_tower.frontend_len,
-                       patch_dim=cfg.image_tower.d_model, noise=0.2)
+    world = world_for_tower(rng, cfg.image_tower, n_classes=12,
+                            noise=0.2)
     tok = Tokenizer.train(caption_corpus(world, rng, 300), vocab_size=400)
     params = de.init_params(cfg, jax.random.key(0))
     opt = AdaFactorW()

@@ -1,0 +1,124 @@
+"""Vision frontend: patchify geometry, spec/synthetic alignment, and the
+raw-image contrastive training path (DESIGN.md §8)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_arch, list_archs, smoke_variant
+from repro.configs.base import INPUT_SHAPES, InputShape
+from repro.models import frontends, transformer as tf
+
+VISION_ARCHS = [a for a in list_archs() if not a.startswith("basic-")
+                and get_arch(a).frontend == "vision"]
+
+
+def test_patchify_is_inverse_of_render_grid():
+    """The synthetic world assembles images patch-by-patch; the model's
+    patchify must recover exactly those patch pixel vectors."""
+    from repro.data.synthetic import make_world, render_images
+    rng = np.random.default_rng(0)
+    world = make_world(rng, n_classes=4, image_size=16, patch_size=4)
+    cls = rng.integers(0, 4, 5)
+    imgs = render_images(world, cls, rng)
+    assert imgs.shape == (5, 16, 16, 3)
+    patches = frontends.patchify(jnp.asarray(imgs), 4)
+    assert patches.shape == (5, 16, 48)
+    # re-render the expected patch pixels: latent -> camera, same stream
+    rng2 = np.random.default_rng(0)
+    world2 = make_world(rng2, n_classes=4, image_size=16, patch_size=4)
+    assert np.array_equal(rng2.integers(0, 4, 5), cls)   # replay cls draw
+    z = world2.concept_vecs[cls][:, None, :] + \
+        world2.noise * rng2.standard_normal((5, 16, 32))
+    np.testing.assert_allclose(np.asarray(patches),
+                               (z @ world2.camera).astype(np.float32),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_vision_configs_geometry_consistent():
+    """frontend_len must equal the patch-grid size for every vision arch
+    (incl. the basic towers) and survive smoke_variant shrinking."""
+    checked = 0
+    for name in list_archs():
+        cfg = get_arch(name)
+        towers = [cfg] if hasattr(cfg, "family") else \
+            [cfg.image_tower, cfg.text_tower]
+        for t in towers:
+            if t.frontend != "vision":
+                continue
+            assert (t.image_size // t.patch_size) ** 2 == t.frontend_len, t
+            sm = smoke_variant(t)
+            assert (sm.image_size // sm.patch_size) ** 2 == sm.frontend_len
+            checked += 1
+    assert checked >= 4          # internvl2 + 3 basic image towers
+
+
+@pytest.mark.parametrize("arch", VISION_ARCHS)
+def test_synthetic_inputs_match_train_spec(arch):
+    """Regression for the historical drift: synthetic_inputs must produce
+    exactly train_inputs_spec's keys/shapes/dtypes (the spec pins
+    frontend_len; the old synthetic path used min(frontend_len, seq//4))."""
+    cfg = smoke_variant(get_arch(arch))
+    shape = InputShape("t", seq_len=48, global_batch=2, kind="train")
+    spec = frontends.train_inputs_spec(cfg, shape, dtype=jnp.float32)
+    got = frontends.synthetic_inputs(cfg, 2, 48, np.random.default_rng(0))
+    assert set(spec) == set(got)
+    for k in spec:
+        assert tuple(spec[k].shape) == tuple(np.shape(got[k])), k
+        assert spec[k].dtype == got[k].dtype, k
+
+
+def test_train_spec_matches_synthetic_for_all_archs():
+    """Same alignment across every assigned arch at the smoke shape."""
+    for arch in [a for a in list_archs() if not a.startswith("basic-")]:
+        cfg = smoke_variant(get_arch(arch))
+        shape = InputShape("t", seq_len=32, global_batch=2, kind="train")
+        spec = frontends.train_inputs_spec(cfg, shape, dtype=jnp.float32)
+        got = frontends.synthetic_inputs(cfg, 2, 32, np.random.default_rng(1))
+        assert set(spec) == set(got), arch
+        for k in spec:
+            assert tuple(spec[k].shape) == tuple(np.shape(got[k])), (arch, k)
+
+
+def test_contrastive_smoke_step_consumes_raw_images():
+    """Acceptance: a contrastive train step runs end-to-end on raw synthetic
+    images through the patchify frontend (no precomputed patch embeddings
+    anywhere in the batch), and the frontend weights receive gradient."""
+    from repro.configs import smoke_dual_variant
+    from repro.data import (Tokenizer, caption_corpus, contrastive_batch,
+                            world_for_tower)
+    from repro.launch import steps as st
+
+    cfg = smoke_dual_variant(get_arch("basic-s"))
+    rng = np.random.default_rng(0)
+    world = world_for_tower(rng, cfg.image_tower, n_classes=8, noise=0.2)
+    tok = Tokenizer.train(caption_corpus(world, rng, 200), vocab_size=300)
+    batch, _ = contrastive_batch(world, tok, 8, rng)
+    assert set(batch["images"]) == {"image"}
+    assert batch["images"]["image"].ndim == 4
+    batch = jax.tree.map(jnp.asarray, batch)
+
+    from repro.models import dual_encoder as de
+    params = de.init_params(cfg, jax.random.key(0))
+    step, opt = st.make_contrastive_step(cfg, num_micro=2, attn="pallas")
+    opt_state = opt.init(params)
+    p0 = params["image"]["tower"]["frontend"]["patch_proj"]
+    params2, opt_state, loss, _ = jax.jit(step)(params, opt_state, batch)
+    assert np.isfinite(float(loss))
+    delta = float(jnp.max(jnp.abs(
+        params2["image"]["tower"]["frontend"]["patch_proj"] - p0)))
+    assert delta > 0.0           # the frontend actually trains
+
+
+def test_image_tower_rejects_patch_embedding_stub():
+    """The training path no longer accepts the retired stub key."""
+    cfg = smoke_variant(get_arch("basic-s").image_tower)
+    params = tf.init_params(cfg, jax.random.key(0))
+    rng = np.random.default_rng(0)
+    stub = {"patch_embeddings": jnp.asarray(
+        rng.standard_normal((2, cfg.frontend_len, cfg.d_model)),
+        jnp.float32)}
+    with pytest.raises(KeyError):
+        tf.encode(cfg, params, stub)

@@ -77,10 +77,11 @@ def test_gradaccum_with_dual_encoder_towers():
     params = de.init_params(cfg, jax.random.key(0))
     rng = np.random.default_rng(0)
     b = 8
+    it = cfg.image_tower
     batch = {
-        "images": {"patch_embeddings": jnp.asarray(
-            rng.standard_normal((b, 4, cfg.image_tower.d_model)),
-            jnp.float32)},
+        "images": {"image": jnp.asarray(
+            rng.standard_normal((b, it.image_size, it.image_size,
+                                 it.channels)), jnp.float32)},
         "texts": {"tokens": jnp.asarray(
             rng.integers(0, cfg.text_tower.vocab, (b, 12)), jnp.int32)},
     }

@@ -8,7 +8,7 @@ import numpy as np
 from repro.configs import get_arch, smoke_variant
 from repro.core.gradaccum import contrastive_step
 from repro.data import (Tokenizer, caption_corpus, classification_prompts,
-                        contrastive_batch, jft_batch, make_world)
+                        contrastive_batch, jft_batch, world_for_tower)
 from repro.models import dual_encoder as de
 from repro.models import frontends, transformer as tf
 from repro.optim import AdaFactorW, apply_updates
@@ -23,9 +23,8 @@ def _dual_cfg():
 
 def _world_and_tok(cfg, seed=0, n_classes=16):
     rng = np.random.default_rng(seed)
-    world = make_world(rng, n_classes=n_classes,
-                       n_patches=cfg.image_tower.frontend_len,
-                       patch_dim=cfg.image_tower.d_model, noise=0.25)
+    world = world_for_tower(rng, cfg.image_tower, n_classes=n_classes,
+                            noise=0.25)
     tok = Tokenizer.train(caption_corpus(world, rng, 400), vocab_size=500)
     return world, tok, rng
 
@@ -102,9 +101,9 @@ def test_basic_three_phase_recipe_runs():
     st = opt.init(pre)
 
     @jax.jit
-    def p1(pre, st, patches, labels):
+    def p1(pre, st, images, labels):
         def loss_fn(p):
-            h = tf.encode(icfg, p["tower"], {"patch_embeddings": patches})
+            h = tf.encode(icfg, p["tower"], {"image": images})
             logp = jax.nn.log_softmax(h @ p["head"])
             return -jnp.mean(jnp.take_along_axis(logp, labels[:, None], 1))
         loss, g = jax.value_and_grad(loss_fn)(pre)
@@ -113,7 +112,7 @@ def test_basic_three_phase_recipe_runs():
 
     for _ in range(10):
         b, _ = jft_batch(world, 16, rng)
-        pre, st, l1 = p1(pre, st, jnp.asarray(b["patch_embeddings"]),
+        pre, st, l1 = p1(pre, st, jnp.asarray(b["image"]),
                          jnp.asarray(b["labels"]))
 
     params = de.init_params(cfg, key)
