@@ -43,12 +43,13 @@ def tiny_dual_cfg(embed_dim=32):
 
 
 def world_and_tok(cfg, seed=0, n_classes=16, noise=0.25):
-    from repro.data import Tokenizer, caption_corpus, world_for_tower
+    """Bench world for a dual config + the committed v1 tokenizer artifact
+    (benches tokenize exactly like train/serve/eval — one vocab)."""
+    from repro.data import load_tokenizer, world_for_tower
     rng = np.random.default_rng(seed)
     world = world_for_tower(rng, cfg.image_tower, n_classes=n_classes,
                             noise=noise)
-    tok = Tokenizer.train(caption_corpus(world, rng, 400), vocab_size=500)
-    return world, tok, rng
+    return world, load_tokenizer(), rng
 
 
 def csv_line(name, us, derived):

@@ -1,0 +1,156 @@
+"""Host-side input-pipeline throughput bench (DESIGN.md §9.4).
+
+The input layer must hide its host-side cost behind the device step — at
+paper scale (6.6B pairs, 65536 global batch) an unprefetched loader stalls
+every step by the full generation latency. This bench measures, per batch:
+
+  gen_ref/clean            raw sharded-loader batch generation (images +
+                           captions + tokenization) — the ``*_ref``
+                           host-drift anchor (scripts/check_bench.py)
+  gen/augmented            generation + the default augmentation pipeline
+                           (crop jitter, flip, channel noise). UNGATED
+                           ride-along: its absolute time tracks the clean
+                           entry; the derived overhead ratio is the number
+                           DESIGN.md §9.4 quotes
+  pipeline_ref/unprefetched  produce → consume serially (consumer = a
+                           fixed simulated device step)
+  pipeline/prefetch_d2     the same consumer fed by data.pipeline's
+                           2-deep background Prefetcher — generation
+                           overlaps the step, so per-batch time must drop
+                           toward max(gen, step)
+  pipeline/prefetch_d4     depth sweep point (deeper buffering only pays
+                           off under jittery consumers; recorded for the
+                           trajectory)
+
+Committed invariant (BENCH_data.json, gated through benchmarks/run.py
+--json): ``pipeline/prefetch_d2`` carries ``must_beat:
+pipeline_ref/unprefetched`` — prefetching must beat the serial loop on
+every host. Absolute timings ride the normal 1.3x cross-run gate (they sit
+under the 50ms interpret floor, so in practice the must_beat carries it).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+from benchmarks.common import csv_line, write_json
+from repro.data import make_world
+from repro.data.pipeline import Prefetcher
+from repro.data.sharded import (ShardedLoader, default_augmentations,
+                                load_tokenizer)
+
+BATCH = 512
+TEXT_LEN = 16
+N_BATCHES = 12          # batches per timed run
+REPEATS = 3             # min-of-N runs (scheduler-noise robustness)
+STEP_S = 0.010          # simulated device-step latency the pipeline must
+                        # hide; sleep-based (GIL-free) so generation — which
+                        # is partly GIL-bound Python — can actually overlap
+
+
+def _loader(augment: bool) -> ShardedLoader:
+    world = make_world(np.random.default_rng(0), n_classes=32)
+    return ShardedLoader(world, load_tokenizer(), BATCH, seed=0,
+                         text_len=TEXT_LEN,
+                         augment=default_augmentations() if augment else ())
+
+
+def _consume(batch) -> float:
+    """The simulated device step: fixed latency + a touch of every leaf
+    (so laziness can't fake the overlap)."""
+    s = float(batch["images"]["image"][0, 0, 0, 0])
+    s += float(batch["texts"]["tokens"][0, 0])
+    time.sleep(STEP_S)
+    return s
+
+
+def _us_per_batch(run_once) -> float:
+    """Min-of-REPEATS wall time of ``run_once()`` (N_BATCHES batches),
+    in µs per batch."""
+    best = float("inf")
+    for _ in range(REPEATS):
+        t0 = time.perf_counter()
+        run_once()
+        best = min(best, time.perf_counter() - t0)
+    return best / N_BATCHES * 1e6
+
+
+def _time_generation(loader: ShardedLoader) -> float:
+    def once():
+        for step in range(N_BATCHES):
+            loader.local_batch_at(step)
+    return _us_per_batch(once)
+
+
+def _time_unprefetched(loader: ShardedLoader) -> float:
+    def once():
+        for step in range(N_BATCHES):
+            _consume(loader.local_batch_at(step))
+    return _us_per_batch(once)
+
+
+def _time_prefetched(loader: ShardedLoader, depth: int) -> float:
+    def once():
+        pf = Prefetcher(loader.local_batch_at, depth=depth)
+        try:
+            for _ in range(N_BATCHES):
+                _consume(next(pf))
+        finally:
+            pf.close()
+    return _us_per_batch(once)
+
+
+def run(json_path: str | None = None):
+    """Run the bench; optionally write the BENCH_data.json payload."""
+    clean, aug = _loader(augment=False), _loader(augment=True)
+    entries: dict = {}
+
+    us_clean = round(_time_generation(clean), 1)
+    us_aug = round(_time_generation(aug), 1)
+    entries["gen_ref/clean"] = {"us": us_clean}
+    entries["gen/augmented"] = {
+        "us": us_aug, "ungated": True,
+        "overhead_vs_clean": round(us_aug / us_clean, 2)}
+    csv_line("data/gen_ref/clean", us_clean, f"B={BATCH}")
+    csv_line("data/gen/augmented", us_aug,
+             f"{us_aug / us_clean:.2f}x_overhead")
+
+    us_serial = round(_time_unprefetched(aug), 1)
+    entries["pipeline_ref/unprefetched"] = {"us": us_serial}
+    csv_line("data/pipeline_ref/unprefetched", us_serial,
+             f"step={STEP_S*1e3:.0f}ms")
+    for depth in (2, 4):
+        us_p = round(_time_prefetched(aug, depth), 1)
+        entries[f"pipeline/prefetch_d{depth}"] = {
+            "us": us_p, "speedup_vs_serial": round(us_serial / us_p, 2)}
+        csv_line(f"data/pipeline/prefetch_d{depth}", us_p,
+                 f"{us_serial / us_p:.2f}x_vs_serial")
+    entries["pipeline/prefetch_d2"]["must_beat"] = "pipeline_ref/unprefetched"
+
+    result = {
+        "meta": {
+            "backend": "host",          # pure numpy — no accelerator at all
+            "interpret": True,          # keeps the 50ms jitter floor active
+            "shape": {"batch": BATCH, "text_len": TEXT_LEN,
+                      "n_batches": N_BATCHES, "step_ms": STEP_S * 1e3},
+        },
+        "entries": entries,
+    }
+    if json_path:
+        write_json(json_path, result)
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__.split("\n\n")[0])
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write BENCH_data.json-style output here")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    run(json_path=args.json)
+
+
+if __name__ == "__main__":
+    main()

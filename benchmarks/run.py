@@ -36,11 +36,14 @@ SUITES = {
     "tower": ("benchmarks.tower_bench",
               "encode path per attention backend: naive vs chunked vs "
               "pallas (gated, DESIGN.md §8)"),
+    "data": ("benchmarks.data_bench",
+             "host-side input pipeline: generation, augmentation "
+             "overhead, prefetch depth sweep (gated, DESIGN.md §9.4)"),
 }
 TABLES = {name: mod for name, (mod, _) in SUITES.items()}
 
 # slow full-sweep benches only run when selected explicitly (or via --json)
-_OPT_IN = {"kernels", "serving", "distributed", "tower"}
+_OPT_IN = {"kernels", "serving", "distributed", "tower", "data"}
 
 _ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
@@ -50,6 +53,7 @@ GATED = {
     "serving": os.path.join(_ROOT, "BENCH_serving.json"),
     "distributed": os.path.join(_ROOT, "BENCH_distributed.json"),
     "tower": os.path.join(_ROOT, "BENCH_tower.json"),
+    "data": os.path.join(_ROOT, "BENCH_data.json"),
 }
 
 

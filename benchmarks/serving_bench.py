@@ -69,7 +69,7 @@ def _e2e_entries(entries, interpret):
     import tempfile
 
     from benchmarks.common import tiny_dual_cfg
-    from repro.data import Tokenizer, caption_corpus, world_for_tower
+    from repro.data import load_tokenizer, world_for_tower
     from repro.data.synthetic import render_images
     from repro.models import dual_encoder as de
     from repro.serving import ZeroShotService
@@ -77,7 +77,7 @@ def _e2e_entries(entries, interpret):
     cfg = tiny_dual_cfg()
     rng = np.random.default_rng(0)
     world = world_for_tower(rng, cfg.image_tower, n_classes=32)
-    tok = Tokenizer.train(caption_corpus(world, rng, 300), vocab_size=400)
+    tok = load_tokenizer()
     params = de.init_params(cfg, jax.random.key(0))
     imgs = render_images(world, rng.integers(0, 32, E2E_BATCH), rng)
 

@@ -11,8 +11,8 @@ import numpy as np
 
 from repro.configs import get_arch, smoke_variant
 from repro.core.gradaccum import contrastive_step
-from repro.data import (Tokenizer, caption_corpus, classification_prompts,
-                        contrastive_batch, world_for_tower)
+from repro.data import (classification_prompts, contrastive_batch,
+                        load_tokenizer, world_for_tower)
 from repro.models import dual_encoder as de
 from repro.optim import AdaFactorW, apply_updates, warmup_cosine
 
@@ -29,7 +29,7 @@ cfg = dataclasses.replace(cfg,
 rng = np.random.default_rng(0)
 from repro.data import world_for_tower  # noqa: E402
 world = world_for_tower(rng, cfg.image_tower, n_classes=16, noise=0.25)
-tok = Tokenizer.train(caption_corpus(world, rng), vocab_size=500)
+tok = load_tokenizer()     # the committed versioned artifact (v1)
 
 # 3. dual encoder + AdaFactorW (paper App. B)
 params = de.init_params(cfg, jax.random.key(0))

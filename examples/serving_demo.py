@@ -20,7 +20,7 @@ import numpy as np
 
 from repro.configs import get_arch, smoke_dual_variant
 from repro.core.gradaccum import contrastive_step
-from repro.data import Tokenizer, caption_corpus, contrastive_batch, \
+from repro.data import contrastive_batch, load_tokenizer, \
     world_for_tower
 from repro.data.synthetic import render_images
 from repro.models import dual_encoder as de
@@ -40,7 +40,7 @@ steps = args.steps if args.steps is not None else (40 if args.smoke else 120)
 cfg = smoke_dual_variant(get_arch("basic-s"))
 rng = np.random.default_rng(0)
 world = world_for_tower(rng, cfg.image_tower, n_classes=16, noise=0.2)
-tok = Tokenizer.train(caption_corpus(world, rng, 400), vocab_size=400)
+tok = load_tokenizer()     # the committed versioned artifact (v1)
 
 print(f"training the dual encoder for {steps} steps ...")
 params = de.init_params(cfg, jax.random.key(0))

@@ -12,8 +12,8 @@ import numpy as np
 
 from repro.configs import get_arch, smoke_variant
 from repro.core.gradaccum import contrastive_step
-from repro.data import (Tokenizer, caption_corpus, classification_prompts,
-                        contrastive_batch, world_for_tower)
+from repro.data import (classification_prompts, contrastive_batch,
+                        load_tokenizer, world_for_tower)
 from repro.data.synthetic import render_images
 from repro.models import dual_encoder as de
 from repro.optim import AdaFactorW, apply_updates
@@ -25,7 +25,7 @@ cfg = dataclasses.replace(cfg,
                           embed_dim=64)
 rng = np.random.default_rng(1)
 world = world_for_tower(rng, cfg.image_tower, n_classes=24, noise=0.25)
-tok = Tokenizer.train(caption_corpus(world, rng), vocab_size=500)
+tok = load_tokenizer()     # the committed versioned artifact (v1)
 seen, unseen = np.arange(16), np.arange(16, 24)
 
 params = de.init_params(cfg, jax.random.key(1))

@@ -1,0 +1,59 @@
+"""(Re)build the committed tokenizer artifact (DESIGN.md §9).
+
+Trains the canonical tokenizer on the FULL caption grammar (every
+adjective × noun × template — deterministic, no sampling) and writes
+``artifacts/tokenizer_<version>.json``. Rebuilding from an unchanged
+grammar is byte-identical, so a dirty ``git diff`` after running this
+script means the caption grammar or the trainer changed — i.e. the vocab
+really is a new version and should be committed as one (bump --version
+and keep the old artifact for checkpoints trained under it).
+
+  python scripts/build_tokenizer.py [--version v1] [--check]
+
+``--check`` verifies the committed artifact matches a fresh rebuild
+(exit 1 on drift) without writing anything.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                                "..", "src"))
+
+from repro.data.sharded import artifact  # noqa: E402
+
+
+def main(argv=None) -> int:
+    """Build (or --check) the versioned tokenizer artifact; returns rc."""
+    ap = argparse.ArgumentParser(description=__doc__.split("\n\n")[0])
+    ap.add_argument("--version", default=artifact.DEFAULT_VERSION)
+    ap.add_argument("--out", default=None,
+                    help="output path (default: artifacts/tokenizer_<v>.json)")
+    ap.add_argument("--check", action="store_true",
+                    help="verify the committed artifact matches a fresh "
+                         "rebuild; write nothing")
+    args = ap.parse_args(argv)
+
+    tok = artifact.build_default_tokenizer(args.version)
+    path = args.out or artifact.artifact_path(args.version)
+    if args.check:
+        committed = artifact.load_tokenizer(args.version, path=path)
+        if committed.content_hash() != tok.content_hash():
+            print(f"build_tokenizer: DRIFT — {path} hashes "
+                  f"{committed.content_hash()[:16]}… but a fresh rebuild "
+                  f"hashes {tok.content_hash()[:16]}…; the grammar or "
+                  f"trainer changed, bump --version", file=sys.stderr)
+            return 1
+        print(f"build_tokenizer: OK ({path} matches rebuild, "
+              f"vocab {tok.vocab_size}, sha {tok.content_hash()[:16]}…)")
+        return 0
+    artifact.save_tokenizer(tok, path, version=args.version)
+    print(f"build_tokenizer: wrote {path} (vocab {tok.vocab_size}, "
+          f"sha {tok.content_hash()[:16]}…)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -7,6 +7,8 @@ modules lacks a docstring:
   - every kernels public-op module src/repro/kernels/*/ops.py
   - every module under src/repro/serving/embed/
   - every module under src/repro/models/ (the tower runtime)
+  - every module under src/repro/data/ incl. data/sharded/ (the input
+    subsystem, ISSUE-5)
 
 "Public" = top-level ``def``/``class`` whose name has no leading
 underscore, plus the module itself (module docstring required). Purely
@@ -31,6 +33,8 @@ COVERED_GLOBS = (
     os.path.join("src", "repro", "kernels", "*", "ops.py"),
     os.path.join("src", "repro", "serving", "embed", "*.py"),
     os.path.join("src", "repro", "models", "*.py"),
+    os.path.join("src", "repro", "data", "*.py"),
+    os.path.join("src", "repro", "data", "sharded", "*.py"),
 )
 
 

@@ -1,1 +1,6 @@
-from repro.checkpoint.io import latest_step, restore, save  # noqa: F401
+from repro.checkpoint.io import (  # noqa: F401
+    latest_step,
+    load_meta,
+    restore,
+    save,
+)

@@ -5,6 +5,11 @@ onto the provided shardings).
 Layout:  <dir>/step_<N>/
             index.json      — tree structure + leaf dtypes/shapes
             arr_<i>.npy     — one file per leaf
+            user_meta.json  — optional JSON sidecar (``save(..., meta=...)``)
+
+``meta`` rides inside the same atomic rename as the arrays, so a step dir
+either has its full user metadata (e.g. resumable loader input state,
+DESIGN.md §9) or doesn't exist — never a torn pair.
 """
 from __future__ import annotations
 
@@ -22,14 +27,17 @@ def _leaf_paths(tree):
     return leaves, treedef
 
 
-def save(directory: str, step: int, tree) -> str:
+def save(directory: str, step: int, tree, meta=None) -> str:
+    """Write ``tree`` as ``<directory>/step_<N>/`` atomically. ``meta``:
+    optional JSON-serializable dict stored as ``user_meta.json`` in the
+    same rename (read back with ``load_meta``)."""
     final = os.path.join(directory, f"step_{step:08d}")
     os.makedirs(directory, exist_ok=True)
     tmp = tempfile.mkdtemp(dir=directory, prefix=".tmp_ckpt_")
     try:
         leaves, treedef = _leaf_paths(tree)
-        meta = {"treedef": str(treedef), "n": len(leaves), "step": step,
-                "leaves": []}
+        index = {"treedef": str(treedef), "n": len(leaves), "step": step,
+                 "leaves": []}
         for i, leaf in enumerate(leaves):
             arr = np.asarray(jax.device_get(leaf))
             dtype_name = str(arr.dtype)
@@ -38,10 +46,13 @@ def save(directory: str, step: int, tree) -> str:
                         arr.view(np.uint16))
             else:
                 np.save(os.path.join(tmp, f"arr_{i}.npy"), arr)
-            meta["leaves"].append({"dtype": dtype_name,
-                                   "shape": list(arr.shape)})
+            index["leaves"].append({"dtype": dtype_name,
+                                    "shape": list(arr.shape)})
         with open(os.path.join(tmp, "index.json"), "w") as f:
-            json.dump(meta, f)
+            json.dump(index, f)
+        if meta is not None:
+            with open(os.path.join(tmp, "user_meta.json"), "w") as f:
+                json.dump(meta, f, indent=1)
         if os.path.exists(final):
             shutil.rmtree(final)
         os.rename(tmp, final)
@@ -49,6 +60,16 @@ def save(directory: str, step: int, tree) -> str:
         shutil.rmtree(tmp, ignore_errors=True)
         raise
     return final
+
+
+def load_meta(directory: str, step: int):
+    """The ``user_meta.json`` sidecar of a step dir, or None when the
+    checkpoint was saved without one (pre-meta checkpoints stay loadable)."""
+    path = os.path.join(directory, f"step_{step:08d}", "user_meta.json")
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        return json.load(f)
 
 
 def latest_step(directory: str):

@@ -1,9 +1,16 @@
 from repro.data.pipeline import Prefetcher, contrastive_stream, host_rng  # noqa: F401
+from repro.data.sharded import (  # noqa: F401
+    HostLayout,
+    ShardedLoader,
+    default_augmentations,
+    load_tokenizer,
+)
 from repro.data.synthetic import (  # noqa: F401
     World,
     caption_corpus,
     classification_prompts,
     contrastive_batch,
+    grammar_corpus,
     jft_batch,
     make_world,
     world_for_tower,

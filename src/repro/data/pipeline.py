@@ -79,6 +79,16 @@ def host_rng(seed: int, host_id: int, step: int) -> np.random.Generator:
 
 def contrastive_stream(world, tok, global_batch: int, *, seed=0, host_id=0,
                        n_hosts=1, text_len=16, classes=None, depth=2):
+    """Prefetching stream of host ``host_id``'s slice of the global batch
+    (the legacy single-knob entry; ``data.sharded.ShardedLoader`` adds
+    augmentation, resumable state, and device assembly on the same
+    layout)."""
+    if global_batch % n_hosts:
+        raise ValueError(
+            f"global batch {global_batch} must be divisible by n_hosts "
+            f"{n_hosts} — each host draws an equal slice; a remainder "
+            f"would silently shrink the global batch to "
+            f"{global_batch // n_hosts * n_hosts}")
     local = global_batch // n_hosts
     from repro.data.synthetic import contrastive_batch
 

@@ -1,0 +1,19 @@
+from repro.data.sharded.artifact import (  # noqa: F401
+    build_default_tokenizer,
+    load_tokenizer,
+    save_tokenizer,
+)
+from repro.data.sharded.augment import (  # noqa: F401
+    ChannelNoise,
+    HorizontalFlip,
+    RandomCrop,
+    apply_ops,
+    default_augmentations,
+)
+from repro.data.sharded.loader import (  # noqa: F401
+    HostLayout,
+    LoaderState,
+    ShardedLoader,
+    aug_rng,
+    device_put_global,
+)

@@ -1,0 +1,107 @@
+"""Versioned tokenizer artifact: train once, commit, load by version.
+
+The paper trains its 32K sentencepiece model ONCE and ships it with the
+model (§7.1); retraining the vocab changes every token id and silently
+invalidates any checkpoint or cached class-embedding matrix built under the
+old one. This module gives the repo's toy tokenizer the same lifecycle:
+
+  build_default_tokenizer()   — deterministic training on the full caption
+                                grammar (``synthetic.grammar_corpus``), so
+                                rebuilding yields a byte-identical artifact
+  save_tokenizer / load_tokenizer — JSON with the piece inventory + its
+                                sha256; load verifies the hash and refuses
+                                a tampered or hand-edited file
+  artifacts/tokenizer_v1.json — the committed v1 artifact every launcher,
+                                serving path, and eval harness loads
+
+The artifact hash (``Tokenizer.content_hash``) is folded into the
+class-embedding registry fingerprint (serving/embed/service.py) and into
+resumable loader state (``sharded.loader.LoaderState``), so a vocab change
+invalidates dependent artifacts BY CONSTRUCTION instead of by accident.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Optional
+
+from repro.data.synthetic import grammar_corpus
+from repro.data.tokenizer import Tokenizer
+
+FORMAT = "repro-tokenizer"
+DEFAULT_VERSION = "v1"
+DEFAULT_VOCAB = 512   # fits every smoke tower (vocab=min(cfg.vocab, 512))
+
+# committed artifacts live at <repo>/artifacts/; overridable for tests and
+# for deployments that ship artifacts separately from the source tree
+ARTIFACTS_DIR = os.environ.get(
+    "REPRO_ARTIFACTS_DIR",
+    os.path.normpath(os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                                  "..", "..", "..", "..", "artifacts")))
+
+
+def artifact_path(version: str = DEFAULT_VERSION,
+                  directory: Optional[str] = None) -> str:
+    """Path of the ``tokenizer_<version>.json`` artifact under
+    ``directory`` (default: the repo's committed ``artifacts/``)."""
+    return os.path.join(directory or ARTIFACTS_DIR,
+                        f"tokenizer_{version}.json")
+
+
+def build_default_tokenizer(version: str = DEFAULT_VERSION) -> Tokenizer:
+    """Train the canonical tokenizer: full grammar corpus, vocab 512.
+    Pure function of the grammar — rebuilding cannot drift."""
+    tok = Tokenizer.train(grammar_corpus(), vocab_size=DEFAULT_VOCAB)
+    tok.version = version
+    return tok
+
+
+def save_tokenizer(tok: Tokenizer, path: str, *,
+                   version: Optional[str] = None) -> str:
+    """Serialize ``tok`` (pieces + sha256 + version) to ``path``; returns
+    the path. The hash is stored so ``load_tokenizer`` can verify the file
+    byte-for-byte reproduces the tokenizer that wrote it."""
+    version = version or tok.version
+    payload = {
+        "format": FORMAT,
+        "version": version,
+        "vocab_size": tok.vocab_size,
+        "sha256": tok.content_hash(),
+        "pieces": tok.pieces,
+    }
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(payload, f, indent=1)
+        f.write("\n")
+    os.replace(tmp, path)
+    return path
+
+
+def load_tokenizer(version: str = DEFAULT_VERSION, *,
+                   directory: Optional[str] = None,
+                   path: Optional[str] = None) -> Tokenizer:
+    """Load a versioned artifact (default: the committed v1). Verifies the
+    stored sha256 against the reloaded piece inventory — a corrupted or
+    hand-edited artifact fails loudly rather than mis-tokenizing."""
+    path = path or artifact_path(version, directory)
+    try:
+        with open(path) as f:
+            payload = json.load(f)
+    except FileNotFoundError:
+        raise FileNotFoundError(
+            f"no tokenizer artifact at {path}; build it with "
+            f"`python scripts/build_tokenizer.py`") from None
+    if payload.get("format") != FORMAT:
+        raise ValueError(f"{path} is not a {FORMAT} artifact "
+                         f"(format={payload.get('format')!r})")
+    tok = Tokenizer(payload["pieces"], version=payload["version"])
+    if tok.content_hash() != payload["sha256"]:
+        raise ValueError(
+            f"{path} hash mismatch: artifact says {payload['sha256'][:16]}…"
+            f" but pieces hash to {tok.content_hash()[:16]}… — the file was"
+            f" edited or truncated; rebuild with scripts/build_tokenizer.py")
+    if tok.vocab_size != payload["vocab_size"]:
+        raise ValueError(f"{path} vocab_size {payload['vocab_size']} != "
+                         f"reloaded {tok.vocab_size}")
+    return tok

@@ -39,6 +39,9 @@ TEMPLATES = ["a photo of a {} {}", "the {} {}", "{} {} in the wild",
 
 @dataclasses.dataclass
 class World:
+    """The synthetic joint distribution: latent concept vectors, the fixed
+    camera map that renders them to pixels, class-name strings, and the
+    image geometry every render matches (see module docstring)."""
     concept_vecs: np.ndarray      # (n_classes, k)
     camera: np.ndarray            # (k, patch_size²·channels) latent -> pixels
     class_names: List[str]
@@ -105,6 +108,8 @@ def render_images(world: World, cls: np.ndarray, rng: np.random.Generator):
 
 def render_captions(world: World, cls: np.ndarray, rng: np.random.Generator,
                     class_names: Optional[List[str]] = None) -> List[str]:
+    """Noisy alt-text analog: one templated caption per class id in
+    ``cls``, templates sampled from the grammar."""
     names = class_names or world.class_names
     out = []
     for c in cls:
@@ -114,8 +119,20 @@ def render_captions(world: World, cls: np.ndarray, rng: np.random.Generator,
 
 
 def caption_corpus(world: World, rng: np.random.Generator, n=2000):
+    """n sampled captions over the world's classes (tokenizer training /
+    per-run corpora; the committed artifact trains on ``grammar_corpus``)."""
     cls = rng.integers(0, world.n_classes, n)
     return render_captions(world, cls, rng)
+
+
+def grammar_corpus() -> List[str]:
+    """EVERY caption the template grammar can produce: all adjective ×
+    noun × template combinations, in a fixed deterministic order. No rng,
+    no World — the closure of the caption language — so a tokenizer trained
+    on it covers any world's captions and retrains bit-identically
+    (the corpus behind ``artifacts/tokenizer_v1.json``)."""
+    return [t.format(a, n) for a in ADJECTIVES for n in NOUNS
+            for t in TEMPLATES]
 
 
 def contrastive_batch(world: World, tok, batch: int, rng: np.random.Generator,

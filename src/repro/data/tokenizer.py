@@ -4,10 +4,17 @@ The paper trains a 32K sentencepiece model on 200M sampled captions and
 filters sequences > 64 tokens (§7.1). We reproduce the *interface*: a
 trainable vocab built from caption word frequencies, greedy longest-match
 piece segmentation, and the 64-token length filter.
+
+Identity: ``content_hash()`` fingerprints the piece inventory (sha256), so
+two tokenizers that segment identically hash identically and a retrained
+vocab is detectable everywhere the hash travels — checkpoints, the
+class-embedding registry key, and resumable loader state. The committed
+versioned artifact machinery lives in ``repro.data.sharded.artifact``.
 """
 from __future__ import annotations
 
 import collections
+import hashlib
 import re
 from typing import Iterable, List
 
@@ -17,13 +24,30 @@ _WORD = re.compile(r"[a-z0-9]+|[^\sa-z0-9]")
 
 
 class Tokenizer:
-    def __init__(self, pieces: List[str]):
+    """Greedy longest-match word-piece tokenizer over a trained piece list.
+
+    ``version`` names the artifact the pieces came from ("v1" when loaded
+    via ``repro.data.sharded.artifact``, "unversioned" for per-run
+    training); it travels with the hash so provenance survives reload."""
+
+    def __init__(self, pieces: List[str], version: str = "unversioned"):
         self.pieces = list(SPECIALS) + [p for p in pieces if p not in SPECIALS]
         self.index = {p: i for i, p in enumerate(self.pieces)}
+        self.version = version
 
     @property
     def vocab_size(self) -> int:
+        """Number of pieces including the 4 specials."""
         return len(self.pieces)
+
+    def content_hash(self) -> str:
+        """sha256 hex over the ordered piece inventory — the tokenizer's
+        identity. Equal hash ⇒ identical segmentation of every input."""
+        h = hashlib.sha256()
+        for p in self.pieces:
+            h.update(p.encode())
+            h.update(b"\x00")
+        return h.hexdigest()
 
     @classmethod
     def train(cls, corpus: Iterable[str], vocab_size: int = 32768,
@@ -60,16 +84,24 @@ class Tokenizer:
         return out
 
     def encode(self, text: str, max_len: int = 64, add_special=True):
+        """Token ids for ``text`` (lowercased, greedy longest-match pieces),
+        truncated to ``max_len``. With ``add_special`` the sequence is
+        BOS-prefixed and ALWAYS EOS-terminated — truncation keeps the final
+        EOS (``ids[:max_len-1] + [EOS]``) instead of dropping it, so a
+        pooled text tower never sees an unterminated caption."""
         ids: List[int] = [BOS] if add_special else []
         for w in _WORD.findall(text.lower()):
             ids.extend(self._segment(w))
         if add_special:
             ids.append(EOS)
         if len(ids) > max_len:   # paper §7.1: filter/truncate > 64 tokens
-            ids = ids[:max_len]
+            ids = (ids[:max_len - 1] + [EOS]) if add_special \
+                else ids[:max_len]
         return ids
 
     def pad_batch(self, seqs: List[List[int]], max_len: int = 64):
+        """Right-pad id lists to ``(len(seqs), max_len)`` int32 plus the
+        matching bool validity mask (True = real token)."""
         import numpy as np
         out = np.full((len(seqs), max_len), PAD, np.int32)
         mask = np.zeros((len(seqs), max_len), np.bool_)

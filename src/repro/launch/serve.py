@@ -25,6 +25,17 @@ def main():
     ap.add_argument("--max-new", type=int, default=32)
     ap.add_argument("--cache-len", type=int, default=256)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--precision", default=None,
+                    choices=["f32", "bf16", "bf16_pure"],
+                    help="mixed-precision policy for prefill+decode "
+                         "(models.precision; default f32, the engine's "
+                         "historical dtype)")
+    ap.add_argument("--attn", default=None,
+                    choices=["naive", "chunked", "pallas", "auto"],
+                    help="attention backend: prefill resolves it through "
+                         "the models.attention registry, decode through "
+                         "resolve_decode_backend ('pallas' = the "
+                         "kernels/decode_attention cache sweep)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -33,7 +44,8 @@ def main():
         cfg = smoke_variant(cfg)
     params = tf.init_params(cfg, jax.random.key(args.seed))
     moe_args = {"dispatch": "dense"} if args.smoke else None
-    eng = Engine(cfg, params, cache_len=args.cache_len, moe_args=moe_args)
+    eng = Engine(cfg, params, cache_len=args.cache_len, moe_args=moe_args,
+                 precision=args.precision, attn=args.attn)
 
     rng = np.random.default_rng(args.seed)
     prompts = rng.integers(4, cfg.vocab, (args.batch, args.prompt_len),

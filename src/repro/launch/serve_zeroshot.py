@@ -19,7 +19,7 @@ import jax
 import numpy as np
 
 from repro.configs import get_arch, smoke_variant
-from repro.data import Tokenizer, caption_corpus, world_for_tower
+from repro.data import load_tokenizer, world_for_tower
 from repro.data.synthetic import render_images
 from repro.models import dual_encoder as de
 from repro.serving import ZeroShotService
@@ -35,6 +35,9 @@ def main():
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--k", type=int, default=5)
     ap.add_argument("--registry-dir", default=None)
+    ap.add_argument("--tokenizer", default="v1",
+                    help="tokenizer artifact version "
+                         "(artifacts/tokenizer_<v>.json)")
     ap.add_argument("--max-delay-ms", type=float, default=2.0)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
@@ -47,7 +50,9 @@ def main():
 
     rng = np.random.default_rng(args.seed)
     world = world_for_tower(rng, cfg.image_tower, n_classes=args.classes)
-    tok = Tokenizer.train(caption_corpus(world, rng, 500), vocab_size=512)
+    # the committed artifact: its hash rides in the registry fingerprint,
+    # so serving and eval key their cached class matrices to THIS vocab
+    tok = load_tokenizer(args.tokenizer)
     params = de.init_params(cfg, jax.random.key(args.seed))
 
     with ZeroShotService(cfg, params, tok,

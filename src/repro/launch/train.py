@@ -29,8 +29,8 @@ from repro import checkpoint as ckpt
 from repro.configs import get_arch, smoke_variant
 from repro.core.contrastive import contrastive_loss
 from repro.core.gradaccum import contrastive_step
-from repro.data import Tokenizer, caption_corpus, contrastive_batch, \
-    jft_batch, world_for_tower
+from repro.data import contrastive_batch, jft_batch, load_tokenizer, \
+    world_for_tower
 from repro.models import dual_encoder as de
 from repro.models import frontends
 from repro.models import transformer as tf
@@ -93,7 +93,9 @@ def _build_world(args):
     if args.smoke:
         cfg = _smoke_dual(cfg)
     world = world_for_tower(rng, cfg.image_tower, n_classes=args.classes)
-    tok = Tokenizer.train(caption_corpus(world, rng), vocab_size=512)
+    # the versioned committed artifact — NOT retrained per run, so the text
+    # tower's token ids (and hence its checkpoints) are portable
+    tok = load_tokenizer(getattr(args, "tokenizer", None) or "v1")
     # clamp token ids to the tower vocab
     assert tok.vocab_size <= cfg.text_tower.vocab or args.smoke
     return cfg, world, tok, rng
@@ -194,6 +196,9 @@ def main():
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--tokenizer", default="v1",
+                    help="tokenizer artifact version "
+                         "(artifacts/tokenizer_<v>.json)")
     args = ap.parse_args()
 
     if args.mode == "lm":

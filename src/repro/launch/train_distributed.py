@@ -23,6 +23,13 @@ policy; fp32 norms/projections/logits stay on under bf16) and ``--attn
 {naive,chunked,pallas,auto}`` (models.attention backend registry; 'pallas'
 runs the kernels/flash_attention fwd+bwd kernels).
 
+The contrastive input side runs on the multi-host sharded data subsystem
+(DESIGN.md §9): versioned tokenizer artifact (``--tokenizer v1``),
+per-data-shard block layout assembled with
+``jax.make_array_from_process_local_data``, optional ``--augment on``, and
+loader state checkpointed alongside params so resume replays the exact
+batch sequence.
+
   python -m repro.launch.train_distributed --arch llama3.2-1b --smoke \\
       --steps 50 --batch 8 --seq 128 --model-parallel 1 --ckpt-dir /tmp/ck
 
@@ -91,11 +98,18 @@ def make_step(cfg, opt, lr_fn, *, remat="basic", moe_args=None,
 
 
 def _run_loop(args, step_fn, params, opt_state, make_batch, start, *,
-              step_takes_index):
-    """Shared prefetch/step/log/checkpoint loop; returns per-step losses."""
+              step_takes_index, ckpt_meta_fn=None):
+    """Shared prefetch/step/log/checkpoint loop; returns per-step losses.
+    ``ckpt_meta_fn(next_step) -> dict``: optional user-meta (e.g. resumable
+    loader input state) written into every checkpoint step dir."""
     stop = getattr(args, "stop_after", None) or args.steps
     stream = Prefetcher(make_batch, depth=2, start=start)
     t0, losses = time.time(), []
+
+    def save(step):
+        meta = ckpt_meta_fn(step) if ckpt_meta_fn else None
+        ckpt.save(args.ckpt_dir, step, (params, opt_state), meta=meta)
+
     for i in range(start, min(args.steps, stop)):
         batch = next(stream)
         if step_takes_index:
@@ -112,11 +126,10 @@ def _run_loop(args, step_fn, params, opt_state, make_batch, start, *,
                   f"{(time.time()-t0)/max(1, i-start+1):.2f}s/step")
         if args.ckpt_dir and args.ckpt_every and \
                 (i + 1) % args.ckpt_every == 0:
-            ckpt.save(args.ckpt_dir, i + 1, (params, opt_state))
+            save(i + 1)
     stream.close()
     if args.ckpt_dir:
-        ckpt.save(args.ckpt_dir, min(args.steps, stop),
-                  (params, opt_state))
+        save(min(args.steps, stop))
     return losses
 
 
@@ -168,10 +181,22 @@ def train_lm(args):
 def train_contrastive(args):
     """Paper objective: GradAccum × data-parallel × tensor-parallel with the
     cross-shard global-batch contrastive loss, one jit. Returns the
-    per-step loss list."""
+    per-step loss list.
+
+    Input side (DESIGN.md §9): the versioned tokenizer artifact
+    (``artifacts/tokenizer_v1.json`` — NOT retrained per run, so text-tower
+    checkpoints stay portable), a ``data.sharded.ShardedLoader`` laid out
+    with one host block per data shard (global batches assemble to
+    globally-sharded jax.Arrays via ``make_array_from_process_local_data``),
+    optional ``--augment`` train-time augmentation, and resumable loader
+    state persisted as checkpoint user-meta — a resumed run validates the
+    tokenizer hash/layout and replays the exact batch sequence."""
     from repro.configs import smoke_dual_variant
-    from repro.data import Tokenizer, caption_corpus, contrastive_batch, \
-        world_for_tower
+    from repro.data import world_for_tower
+    from repro.data.sharded import (HostLayout, ShardedLoader,
+                                    default_augmentations, device_put_global,
+                                    load_tokenizer)
+    from repro.data.sharded.loader import LoaderState
     from repro.launch import steps as st
     from repro.models import dual_encoder as de
 
@@ -221,14 +246,38 @@ def train_contrastive(args):
         world_rng = np.random.default_rng(args.seed)
         world = world_for_tower(world_rng, cfg.image_tower, n_classes=16,
                                 noise=0.2)
-        tok = Tokenizer.train(caption_corpus(world, world_rng, 400),
-                              vocab_size=400)
+        tok = load_tokenizer(getattr(args, "tokenizer", None) or "v1")
+        augment = default_augmentations() \
+            if getattr(args, "augment", "off") == "on" else ()
+        if jax.process_count() > 1:
+            # the loader's per-host blocks (HostLayout, local_batch_at) are
+            # multi-process-ready, but this trainer still materializes the
+            # FULL global batch per process — fail loudly rather than feed
+            # make_array_from_process_local_data global-shaped data
+            # (ROADMAP: "True multi-process input")
+            raise NotImplementedError(
+                "train_contrastive simulates multi-host input inside one "
+                "process; wiring jax.process_index() into HostLayout is a "
+                "ROADMAP item")
+        # one host block per data shard: block h of the global batch lands
+        # on data shard h, the §5.1 "distributed equally to all cores" layout
+        loader = ShardedLoader(world, tok, args.batch,
+                               layout=HostLayout(n_hosts=data_size),
+                               seed=args.seed, text_len=args.seq,
+                               augment=augment)
+        if start and args.ckpt_dir and \
+                (meta := ckpt.load_meta(args.ckpt_dir, start)) \
+                and "loader" in meta:
+            # validates seed/layout/tokenizer-hash/augment against the
+            # checkpointed input state — a retrained tokenizer or changed
+            # augmentation policy fails here instead of silently diverging
+            loader.restore(LoaderState.from_json(meta["loader"]))
 
         def make_batch(step):
-            rng = host_rng(args.seed, 0, step)
-            batch, _ = contrastive_batch(world, tok, args.batch, rng,
-                                         text_len=args.seq)
-            return jax.tree.map(jnp.asarray, batch)
+            return device_put_global(loader.global_batch_at(step), mesh)
+
+        def ckpt_meta_fn(next_step):
+            return {"loader": loader.state(step=next_step).to_json()}
 
         if getattr(args, "memstats", False):
             from repro.launch import memstats
@@ -244,7 +293,7 @@ def train_contrastive(args):
             step_fn = compiled
 
         return _run_loop(args, step_fn, params, opt_state, make_batch, start,
-                         step_takes_index=False)
+                         step_takes_index=False, ckpt_meta_fn=ckpt_meta_fn)
 
 
 def train(args):
@@ -312,6 +361,13 @@ def main():
     ap.add_argument("--memstats", action="store_true",
                     help="print the compiled per-step memory/FLOPs report "
                          "before training (launch/memstats.py)")
+    ap.add_argument("--augment", default="off", choices=["on", "off"],
+                    help="train-time image augmentation (crop jitter + "
+                         "flip + channel noise; data.sharded.augment, "
+                         "contrastive only)")
+    ap.add_argument("--tokenizer", default="v1",
+                    help="tokenizer artifact version to load "
+                         "(artifacts/tokenizer_<v>.json; contrastive only)")
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=0)

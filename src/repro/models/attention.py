@@ -277,10 +277,45 @@ def init_kv_cache(cfg: ArchConfig, batch: int, seq_len: int,
     return KVCache(k=jnp.zeros(shape, dtype), v=jnp.zeros(shape, dtype))
 
 
-def decode_attention(p, cfg: ArchConfig, x, cache: KVCache, pos):
+def resolve_decode_backend(impl: Optional[str], *, cache_len: int,
+                           head_dim: int,
+                           platform: Optional[str] = None) -> str:
+    """Resolve an ``attn_impl`` request to a DECODE backend ('einsum' |
+    'pallas') — the single-token counterpart of ``resolve_backend``.
+
+    'pallas' routes the cache sweep through ``kernels/decode_attention``
+    (the GQA-grouped bandwidth kernel; interpret mode on CPU). 'auto'
+    (or None) picks it on accelerators and keeps the fused-einsum path on
+    CPU hosts, where the interpreted kernel is correct but not fast.
+    'naive'/'chunked' are full-sequence notions — decode maps both to
+    'einsum'. An explicit 'pallas' request falls back to 'einsum' when the
+    kernel can't tile the cache (cache_len not divisible by a block, or
+    head_dim not lane-aligned on a real accelerator)."""
+    platform = platform or jax.default_backend()
+    if impl in (None, "auto"):
+        impl = "pallas" if platform in ("tpu", "gpu") else "einsum"
+    if impl in ("naive", "chunked", "einsum"):
+        return "einsum"
+    if impl != "pallas":
+        raise KeyError(f"unknown decode attention impl {impl!r}; "
+                       f"have ('einsum', 'pallas') + 'auto'")
+    block = min(256, cache_len)
+    if cache_len % block != 0:
+        return "einsum"
+    if platform in ("tpu", "gpu") and (head_dim % 128 != 0
+                                       or block % 8 != 0):
+        return "einsum"
+    return impl
+
+
+def decode_attention(p, cfg: ArchConfig, x, cache: KVCache, pos,
+                     impl: Optional[str] = None):
     """One-token decode. x: (b, 1, d); pos: scalar int32 (current position).
 
-    Returns (out (b,1,d), new_cache).
+    Returns (out (b,1,d), new_cache). ``impl``: decode backend override
+    ('einsum' | 'pallas' | 'auto'); None defers to ``cfg.attn_impl`` via
+    ``resolve_decode_backend`` — an Engine built with attn='pallas' runs
+    the kernels/decode_attention cache sweep here.
     """
     b = x.shape[0]
     hd = cfg.resolved_head_dim
@@ -300,9 +335,20 @@ def decode_attention(p, cfg: ArchConfig, x, cache: KVCache, pos):
     if ring:
         # once pos >= clen the ring is full and every slot is in-window
         valid = jnp.where(pos >= clen, jnp.ones_like(valid), valid)
-    mask = jnp.where(valid, 0.0, NEG_INF)[None, :]    # (1, clen)
 
+    impl = resolve_decode_backend(impl if impl is not None else cfg.attn_impl,
+                                  cache_len=clen, head_dim=hd)
     kv = cfg.n_kv_heads
+    if impl == "pallas":
+        from repro.kernels.decode_attention import ops as dec_ops
+        out = dec_ops.decode_attention(
+            q.reshape(b, cfg.n_heads, hd), k, v, valid,
+            block_k=min(256, clen),
+            interpret=jax.default_backend() == "cpu")
+        out = out.astype(q.dtype).reshape(b, 1, cfg.n_heads * hd)
+        return L.dense(out, p["wo"]), KVCache(k=k, v=v)
+
+    mask = jnp.where(valid, 0.0, NEG_INF)[None, :]    # (1, clen)
     group = cfg.n_heads // kv
     qh = q.reshape(b, kv, group, hd)
     scores = jnp.einsum("bkgd,bktd->bkgt", qh, k.astype(qh.dtype)) * (hd ** -0.5)

@@ -43,6 +43,20 @@ def params_fingerprint(params) -> str:
     return h.hexdigest()
 
 
+def checkpoint_fingerprint(params, tok=None) -> str:
+    """The registry's checkpoint tag: params fingerprint plus the tokenizer
+    artifact hash (``Tokenizer.content_hash``, DESIGN.md §9). Class
+    matrices are computed from TOKENIZED prompts, so a retrained vocab
+    changes them even under identical weights — folding the artifact hash
+    into the tag invalidates cached matrices by construction instead of
+    silently serving ones built under the old segmentation."""
+    tag = params_fingerprint(params)
+    if tok is not None and hasattr(tok, "content_hash"):
+        tag += f":tok-{getattr(tok, 'version', 'unversioned')}" \
+               f"-{tok.content_hash()}"
+    return tag
+
+
 @dataclasses.dataclass(frozen=True)
 class ClassMatrix:
     """A registry artifact: one prompt-ensembled class-embedding matrix

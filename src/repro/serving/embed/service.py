@@ -29,7 +29,7 @@ from repro.kernels.similarity_topk import ops as topk_ops
 from repro.models import dual_encoder as de
 from repro.serving.embed.batcher import DEFAULT_BUCKETS, MicroBatcher
 from repro.serving.embed.registry import (ClassEmbeddingRegistry,
-                                          params_fingerprint)
+                                          checkpoint_fingerprint)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -67,7 +67,9 @@ class ZeroShotService:
         self.templates = tuple(templates)
         self.text_len = int(text_len)
         self.interpret = interpret
-        self.checkpoint_tag = params_fingerprint(params)
+        # params fingerprint + tokenizer artifact hash: new weights OR a
+        # retrained vocab both invalidate cached class matrices (§9)
+        self.checkpoint_tag = checkpoint_fingerprint(params, tok)
         # 1/tau from the learned log-temperature (paper §3: A = X·Yᵀ/tau)
         self.inv_tau = float(jnp.exp(-params["log_tau"]))
 

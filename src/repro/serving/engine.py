@@ -5,13 +5,20 @@ The engine compiles two programs per (batch, cache_len):
     per-layer KV/SSM caches,
   - ``decode``: one token for every slot, cache updated in place (donated).
 
+Both run under one ``models.precision`` policy (``precision='bf16'`` etc.;
+the legacy ``dtype=`` maps onto a policy) — compute in the policy's dtype,
+norms/logits in fp32 islands — and one attention backend: ``attn`` selects
+the full-sequence backend for prefill (``models.attention`` registry) AND
+the decode backend (``resolve_decode_backend``; 'pallas' sweeps the KV
+cache with the kernels/decode_attention GQA kernel).
+
 Sampling: greedy or temperature. Per-slot EOS stops are tracked host-side;
 finished slots keep decoding pad tokens (masked out of the result) — the
 fixed-shape analog of continuous batching.
 """
 from __future__ import annotations
 
-from functools import partial
+import dataclasses
 from typing import Optional
 
 import jax
@@ -19,17 +26,30 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ArchConfig
+from repro.models import precision as prec_lib
 from repro.models import transformer as tf
 
 
 class Engine:
     def __init__(self, cfg: ArchConfig, params, *, cache_len: int,
-                 dtype=jnp.float32, moe_args: Optional[dict] = None,
+                 dtype=None, precision=None,
+                 attn: Optional[str] = None,
+                 moe_args: Optional[dict] = None,
                  eos_id: int = 3):
         assert cfg.causal, f"{cfg.name} is encoder-only; no decode step"
+        if attn is not None:
+            from repro.models import attention as attn_lib
+            if attn != "auto" and attn not in attn_lib.ATTN_BACKENDS:
+                raise KeyError(
+                    f"unknown attention impl {attn!r}; have "
+                    f"{attn_lib.available_backends()} + 'auto'")
+            cfg = dataclasses.replace(cfg, attn_impl=attn)
         self.cfg, self.params = cfg, params
         self.cache_len = cache_len
-        self.dtype = dtype
+        # policy resolution order matches the tower runtime: an explicit
+        # policy wins, a legacy bare dtype maps onto one, default f32 (the
+        # engine's historical dtype)
+        self.precision = prec_lib.resolve(precision, dtype or jnp.float32)
         self.moe_args = moe_args or {}
         self.eos_id = eos_id
 
@@ -39,14 +59,15 @@ class Engine:
     # -- compiled bodies ---------------------------------------------------
     def _prefill_impl(self, params, tokens):
         batch = {"tokens": tokens}
-        logits, caches = tf.prefill(self.cfg, params, batch, dtype=self.dtype,
+        logits, caches = tf.prefill(self.cfg, params, batch,
+                                    precision=self.precision,
                                     moe_args=self.moe_args,
                                     collect_cache_len=self.cache_len)
         return logits[:, 0, :], caches
 
     def _decode_impl(self, params, caches, token, pos):
         logits, caches = tf.decode_step(self.cfg, params, token, pos, caches,
-                                        dtype=self.dtype,
+                                        precision=self.precision,
                                         moe_args=self.moe_args)
         return logits[:, 0, :], caches
 

@@ -1,14 +1,18 @@
-"""Standalone multi-device checks for core/distributed_loss.py.
+"""Standalone multi-device checks for core/distributed_loss.py and the
+sharded data subsystem (data/sharded/, DESIGN.md §9).
 
-Run by tests/test_distributed_loss.py in a SUBPROCESS with
-``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (the tier-1 pytest
-process pins the single real CPU device — see tests/conftest.py — and jax
-locks the device count at first init, so multi-shard meshes need their own
-process). Each check asserts the cross-shard GLOBAL-batch loss and its
-dX/dY/dτ gradients are bit-close to the single-device fused loss at the
-same global batch.
+Run by tests/test_distributed_loss.py / tests/test_sharded_loader.py in a
+SUBPROCESS with ``XLA_FLAGS=--xla_force_host_platform_device_count=8``
+(the tier-1 pytest process pins the single real CPU device — see
+tests/conftest.py — and jax locks the device count at first init, so
+multi-shard meshes need their own process). ``loss``/``gradaccum`` assert
+the cross-shard GLOBAL-batch loss and its dX/dY/dτ gradients are bit-close
+to the single-device fused loss at the same global batch; ``sharded_data``
+asserts the two-host loader reassembles bit-exactly, device assembly
+places the right rows on the right shards, and a checkpoint-resumed
+loader replays the identical batch sequence.
 
-Usage:  python tests/distributed_checks.py {loss|gradaccum}
+Usage:  python tests/distributed_checks.py {loss|gradaccum|sharded_data}
 """
 import os
 
@@ -138,9 +142,81 @@ def check_gradaccum_composition():
         print(f"ok gradaccum {method}")
 
 
+def check_sharded_data():
+    """Acceptance (ISSUE-5): (1) the two simulated hosts' local shards
+    concatenate BIT-EXACTLY to the single-host global batch, augmentation
+    included; (2) ``device_put_global`` lays block h onto data shard h of
+    an 8-way mesh with global content equal to the host-side batch; (3) a
+    contrastive trainer run that checkpoints, stops, and resumes (loader
+    state restored from checkpoint user-meta) reproduces the uninterrupted
+    run's per-step losses exactly."""
+    import tempfile
+    import types
+
+    from repro.data import make_world
+    from repro.data.sharded import (HostLayout, ShardedLoader,
+                                    default_augmentations, device_put_global,
+                                    load_tokenizer)
+
+    world = make_world(np.random.default_rng(3), n_classes=16)
+    tok = load_tokenizer()
+    aug = default_augmentations()
+
+    # (1) two-host reassembly, clean and augmented
+    for augment in ((), aug):
+        hosts = [ShardedLoader(world, tok, 32, layout=HostLayout(2, h),
+                               seed=11, augment=augment) for h in (0, 1)]
+        oracle = ShardedLoader(world, tok, 32, layout=HostLayout(2, 0),
+                               seed=11, augment=augment)
+        for step in (0, 1, 5):
+            want = oracle.global_batch_at(step)
+            got = jax.tree.map(
+                lambda *xs: np.concatenate(xs, axis=0),
+                *[h.local_batch_at(step) for h in hosts])
+            for path, a in jax.tree_util.tree_leaves_with_path(want):
+                b = dict(jax.tree_util.tree_leaves_with_path(got))[path]
+                np.testing.assert_array_equal(a, b)
+    print("ok two-host reassembly (clean + augmented)")
+
+    # (2) device assembly on an 8-way data mesh: block h -> shard h
+    mesh = jax.make_mesh((8,), ("data",))
+    loader = ShardedLoader(world, tok, 32, layout=HostLayout(8, 0),
+                           seed=11, augment=aug)
+    host_batch = loader.global_batch_at(0)
+    arrs = device_put_global(host_batch, mesh)
+    img = arrs["images"]["image"]
+    assert img.sharding.is_fully_addressable
+    np.testing.assert_array_equal(np.asarray(img),
+                                  host_batch["images"]["image"])
+    shards = sorted(img.addressable_shards, key=lambda s: s.index[0].start)
+    assert len(shards) == 8
+    for h, s in enumerate(shards):
+        block = ShardedLoader(world, tok, 32, layout=HostLayout(8, h),
+                              seed=11, augment=aug).local_batch_at(0)
+        np.testing.assert_array_equal(np.asarray(s.data),
+                                      block["images"]["image"])
+    print("ok device assembly block->shard")
+
+    # (3) trainer-level resume: full run == stop@2 + resume, exact losses
+    from repro.launch.train_distributed import train
+    base = dict(arch="basic-s", smoke=True, objective="contrastive",
+                steps=4, batch=64, seq=16, lr=1e-3, seed=0,
+                sharding="basic_ws", remat="basic", model_parallel=1,
+                num_micro=2, loss="chunked", augment="on", tokenizer="v1",
+                log_every=100, ckpt_dir=None, ckpt_every=0, stop_after=None)
+    full = train(types.SimpleNamespace(**base))
+    with tempfile.TemporaryDirectory() as d:
+        ck = dict(base, ckpt_dir=d)
+        train(types.SimpleNamespace(**dict(ck, stop_after=2)))
+        resumed = train(types.SimpleNamespace(**ck))
+    np.testing.assert_allclose(resumed, full[2:], rtol=1e-5)
+    print("ok trainer resume replays the batch sequence")
+
+
 if __name__ == "__main__":
     mode = sys.argv[1] if len(sys.argv) > 1 else "loss"
     assert jax.device_count() >= 8, jax.devices()
     {"loss": check_loss_equivalence,
-     "gradaccum": check_gradaccum_composition}[mode]()
+     "gradaccum": check_gradaccum_composition,
+     "sharded_data": check_sharded_data}[mode]()
     print(f"PASS {mode}")

@@ -31,6 +31,39 @@ def test_tokenizer_vocab_and_determinism():
     assert all(0 <= i < tok.vocab_size for i in a)
 
 
+def test_encode_truncation_preserves_eos():
+    """Regression: truncating a long caption at max_len used to drop the
+    EOS; it must stay the final token (ids[:max_len-1] + [EOS])."""
+    from repro.data.tokenizer import BOS, EOS
+    _, tok = _tok()
+    long_caption = " ".join(["red cat blue dog green bird"] * 10)
+    full = tok.encode(long_caption, max_len=512)
+    assert len(full) < 512 and full[-1] == EOS      # untruncated keeps EOS
+    for max_len in (8, 16, 31):
+        ids = tok.encode(long_caption, max_len=max_len)
+        assert len(ids) == max_len
+        assert ids[0] == BOS and ids[-1] == EOS, (max_len, ids[-4:])
+        # the truncated body is a prefix of the untruncated encoding
+        assert ids[:-1] == full[:max_len - 1]
+    # no specials: plain prefix truncation, no EOS to preserve
+    raw = tok.encode(long_caption, max_len=8, add_special=False)
+    assert len(raw) == 8 and raw[-1] != EOS
+
+
+def test_contrastive_stream_rejects_indivisible_global_batch():
+    """Regression: global_batch % n_hosts != 0 used to silently shrink the
+    global batch (local = B // n_hosts); it must raise instead."""
+    from repro.data.pipeline import contrastive_stream
+    world, tok = _tok()
+    with np.testing.assert_raises_regex(ValueError, "divisible"):
+        contrastive_stream(world, tok, 10, n_hosts=3)
+    # the divisible case still streams
+    pf = contrastive_stream(world, tok, 8, n_hosts=2, host_id=1)
+    batch = next(pf)
+    pf.close()
+    assert batch["images"]["image"].shape[0] == 4
+
+
 def test_pad_batch_shapes():
     _, tok = _tok()
     toks, mask = tok.pad_batch([[2, 5, 6], [2, 5]], max_len=8)

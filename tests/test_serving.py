@@ -56,6 +56,58 @@ def test_engine_with_state_space_archs(arch):
     assert np.all(out >= 0) and np.all(out < cfg.vocab)
 
 
+def test_engine_precision_policy_and_pallas_decode():
+    """ISSUE-5 satellite: the engine takes a models.precision policy (not a
+    bare dtype) and attn='pallas' routes decode through the
+    kernels/decode_attention cache sweep — greedy outputs must match the
+    einsum path token for token, and the legacy dtype= argument must keep
+    resolving onto a policy."""
+    cfg, params, eng = _engine()
+    rng = np.random.default_rng(3)
+    prompts = rng.integers(4, cfg.vocab, (2, 8)).astype(np.int32)
+    ref = eng.generate(prompts, 5, temperature=0.0)
+
+    pal = Engine(cfg, params, cache_len=64, attn="pallas",
+                 moe_args={"dispatch": "dense"})
+    np.testing.assert_array_equal(pal.generate(prompts, 5, temperature=0.0),
+                                  ref)
+    assert pal.cfg.attn_impl == "pallas"
+
+    legacy = Engine(cfg, params, cache_len=64, dtype=jnp.float32,
+                    moe_args={"dispatch": "dense"})
+    assert legacy.precision.name == "f32"
+    np.testing.assert_array_equal(
+        legacy.generate(prompts, 5, temperature=0.0), ref)
+
+    bf = Engine(cfg, params, cache_len=64, precision="bf16",
+                moe_args={"dispatch": "dense"})
+    assert bf.precision.compute_dtype == jnp.bfloat16
+    assert bf.precision.fp32_projections
+    out = bf.generate(prompts, 5, temperature=0.0)
+    assert out.shape == ref.shape
+
+    # typos fail at construction, not at the first compiled generate()
+    with pytest.raises(KeyError, match="palas"):
+        Engine(cfg, params, cache_len=64, attn="palas")
+
+
+def test_decode_backend_resolution():
+    """resolve_decode_backend: 'auto' is platform-aware, full-sequence
+    names map to einsum, pallas falls back on untileable caches."""
+    from repro.models.attention import resolve_decode_backend as r
+    assert r("auto", cache_len=256, head_dim=64, platform="cpu") == "einsum"
+    assert r("auto", cache_len=512, head_dim=128, platform="tpu") == "pallas"
+    assert r("pallas", cache_len=256, head_dim=64, platform="cpu") == "pallas"
+    assert r("naive", cache_len=256, head_dim=64) == "einsum"
+    assert r("chunked", cache_len=256, head_dim=64) == "einsum"
+    # 300 % min(256, 300) != 0: kernel can't tile, fall back
+    assert r("pallas", cache_len=300, head_dim=64) == "einsum"
+    # lane-alignment on a real accelerator
+    assert r("pallas", cache_len=256, head_dim=64, platform="tpu") == "einsum"
+    with pytest.raises(KeyError):
+        r("bogus", cache_len=256, head_dim=64)
+
+
 def test_engine_rejects_encoder_only():
     cfg = smoke_variant(get_arch("hubert-xlarge"))
     params = tf.init_params(cfg, jax.random.key(0))

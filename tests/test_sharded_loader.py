@@ -1,0 +1,282 @@
+"""Sharded data subsystem (data/sharded/, DESIGN.md §9): loader layout,
+augmentation determinism, resumable state, tokenizer artifact versioning.
+
+The multi-device assertions (shard reassembly on an 8-way mesh, trainer
+resume) run in a subprocess via tests/distributed_checks.py sharded_data;
+everything here holds on the single tier-1 CPU device.
+"""
+import dataclasses
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.data import Tokenizer, make_world
+from repro.data.sharded import (ChannelNoise, HorizontalFlip, HostLayout,
+                                RandomCrop, ShardedLoader, apply_ops,
+                                build_default_tokenizer,
+                                default_augmentations, load_tokenizer,
+                                save_tokenizer)
+from repro.data.sharded.augment import from_names
+from repro.data.sharded.loader import LoaderState, aug_rng
+
+_CACHE = {}
+
+
+def _world_tok():
+    if "wt" not in _CACHE:
+        _CACHE["wt"] = (make_world(np.random.default_rng(0), n_classes=12),
+                        load_tokenizer())
+    return _CACHE["wt"]
+
+
+# ---------------------------------------------------------------------------
+# loader layout + determinism
+# ---------------------------------------------------------------------------
+
+
+def test_local_shards_concatenate_to_global_batch():
+    """Shard-exactness on the host side: per-host blocks of a 4-host layout
+    reassemble bit-exactly to the single-process global materialization."""
+    world, tok = _world_tok()
+    aug = default_augmentations()
+    oracle = ShardedLoader(world, tok, 16, layout=HostLayout(4, 0), seed=9,
+                           augment=aug)
+    for step in (0, 3):
+        want = oracle.global_batch_at(step)
+        blocks = [ShardedLoader(world, tok, 16, layout=HostLayout(4, h),
+                                seed=9, augment=aug).local_batch_at(step)
+                  for h in range(4)]
+        np.testing.assert_array_equal(
+            np.concatenate([b["images"]["image"] for b in blocks]),
+            want["images"]["image"])
+        np.testing.assert_array_equal(
+            np.concatenate([b["texts"]["tokens"] for b in blocks]),
+            want["texts"]["tokens"])
+
+
+def test_loader_rejects_indivisible_batch():
+    world, tok = _world_tok()
+    with pytest.raises(ValueError, match="divisible"):
+        ShardedLoader(world, tok, 10, layout=HostLayout(4, 0))
+    with pytest.raises(ValueError, match="host"):
+        HostLayout(2, 2)
+
+
+def test_augmentation_deterministic_and_effective():
+    """Same (seed, host, step) -> bit-identical augmented batch; a clean
+    loader at the same key yields the same tokens but different pixels."""
+    world, tok = _world_tok()
+    aug = default_augmentations()
+    a = ShardedLoader(world, tok, 8, seed=4, augment=aug).local_batch_at(2)
+    b = ShardedLoader(world, tok, 8, seed=4, augment=aug).local_batch_at(2)
+    np.testing.assert_array_equal(a["images"]["image"], b["images"]["image"])
+    clean = ShardedLoader(world, tok, 8, seed=4).local_batch_at(2)
+    np.testing.assert_array_equal(a["texts"]["tokens"],
+                                  clean["texts"]["tokens"])
+    assert not np.array_equal(a["images"]["image"], clean["images"]["image"])
+    assert a["images"]["image"].shape == clean["images"]["image"].shape
+
+
+def test_augment_ops_semantics():
+    rng = np.random.default_rng(0)
+    imgs = rng.standard_normal((4, 8, 8, 3)).astype(np.float32)
+    # full-prob flip is an exact mirror
+    flipped = HorizontalFlip(prob=1.0)(imgs, np.random.default_rng(1))
+    np.testing.assert_array_equal(flipped, imgs[:, :, ::-1, :])
+    # zero-pad crop is the identity
+    np.testing.assert_array_equal(RandomCrop(pad=0)(imgs,
+                                                    np.random.default_rng(1)),
+                                  imgs)
+    jittered = RandomCrop(pad=2)(imgs, np.random.default_rng(1))
+    assert jittered.shape == imgs.shape
+    noised = ChannelNoise(scale=0.1)(imgs, np.random.default_rng(1))
+    assert noised.shape == imgs.shape and not np.array_equal(noised, imgs)
+    # composition is deterministic under a fixed stream
+    ops = default_augmentations()
+    np.testing.assert_array_equal(apply_ops(ops, imgs, aug_rng(0, 1, 2)),
+                                  apply_ops(ops, imgs, aug_rng(0, 1, 2)))
+    assert from_names([op.name for op in ops]) == ops
+    with pytest.raises(KeyError):
+        from_names(["nope"])
+
+
+# ---------------------------------------------------------------------------
+# resumable state
+# ---------------------------------------------------------------------------
+
+
+def test_state_restore_replays_sequence():
+    world, tok = _world_tok()
+    aug = default_augmentations()
+    it = ShardedLoader(world, tok, 8, layout=HostLayout(2, 1), seed=7,
+                       augment=aug)
+    next(it), next(it)
+    st = it.state()
+    tail = [next(it) for _ in range(2)]
+
+    fresh = ShardedLoader(world, tok, 8, layout=HostLayout(2, 1), seed=7,
+                          augment=aug)
+    fresh.restore(LoaderState.from_json(st.to_json()))   # through JSON
+    for want in tail:
+        np.testing.assert_array_equal(next(fresh)["images"]["image"],
+                                      want["images"]["image"])
+
+
+def test_restore_rejects_mismatched_configuration():
+    """Every non-cursor field gates restore — including batch geometry
+    and augmentation op PARAMETERS (reprs, not just names), so a resume
+    that would replay a different batch sequence cannot pass validation."""
+    world, tok = _world_tok()
+    it = ShardedLoader(world, tok, 8, seed=7,
+                       augment=default_augmentations())
+    st = it.state()
+    for field, val in [("seed", 8), ("tokenizer_sha", "deadbeef"),
+                       ("augment", ("HorizontalFlip(prob=0.5)",)),
+                       ("n_hosts", 2), ("global_batch", 16),
+                       ("text_len", 32), ("classes_sha", "beef")]:
+        with pytest.raises(ValueError, match=field):
+            it.restore(dataclasses.replace(st, **{field: val}))
+    # same op names, different parameters: still rejected
+    other = ShardedLoader(world, tok, 8, seed=7,
+                          augment=(RandomCrop(pad=4), HorizontalFlip(),
+                                   ChannelNoise()))
+    with pytest.raises(ValueError, match="augment"):
+        other.restore(st)
+
+
+def test_stream_advances_cursor_for_mid_stream_checkpoints():
+    """A state() snapshot taken after consuming n batches from stream()
+    must point at step cursor+n — a mid-stream checkpoint neither replays
+    nor skips batches."""
+    world, tok = _world_tok()
+    it = ShardedLoader(world, tok, 8, seed=3,
+                       augment=default_augmentations())
+    pf = it.stream(depth=2)
+    try:
+        for _ in range(3):
+            next(pf)
+        st = it.state()
+        assert st.step == 3
+        want = next(pf)
+    finally:
+        pf.close()
+    fresh = ShardedLoader(world, tok, 8, seed=3,
+                          augment=default_augmentations())
+    fresh.restore(st)
+    np.testing.assert_array_equal(next(fresh)["images"]["image"],
+                                  want["images"]["image"])
+
+
+def test_loader_state_persists_through_checkpoint_meta(tmp_path):
+    """LoaderState rides checkpoint step dirs as user-meta: save/restore
+    through repro.checkpoint round-trips it (and old checkpoints without
+    meta read back as None)."""
+    from repro import checkpoint as ckpt
+    world, tok = _world_tok()
+    it = ShardedLoader(world, tok, 8, seed=1,
+                       augment=default_augmentations())
+    next(it)
+    ckpt.save(str(tmp_path), 1, {"w": np.zeros((2,))},
+              meta={"loader": it.state().to_json()})
+    meta = ckpt.load_meta(str(tmp_path), 1)
+    restored = LoaderState.from_json(meta["loader"])
+    assert restored == it.state()
+    ckpt.save(str(tmp_path), 2, {"w": np.zeros((2,))})
+    assert ckpt.load_meta(str(tmp_path), 2) is None
+
+
+def test_prefetching_stream_matches_direct_iteration():
+    world, tok = _world_tok()
+    it = ShardedLoader(world, tok, 8, seed=2)
+    direct = [it.local_batch_at(s) for s in range(3)]
+    pf = ShardedLoader(world, tok, 8, seed=2).stream(depth=2)
+    try:
+        for want in direct:
+            np.testing.assert_array_equal(next(pf)["texts"]["tokens"],
+                                          want["texts"]["tokens"])
+    finally:
+        pf.close()
+
+
+# ---------------------------------------------------------------------------
+# tokenizer artifact
+# ---------------------------------------------------------------------------
+
+
+def test_committed_artifact_loads_and_matches_rebuild():
+    """artifacts/tokenizer_v1.json is self-consistent (hash verifies) and
+    byte-reproducible from the grammar (the scripts/build_tokenizer.py
+    --check invariant)."""
+    tok = load_tokenizer("v1")
+    assert tok.version == "v1" and tok.vocab_size == 512
+    rebuilt = build_default_tokenizer()
+    assert rebuilt.content_hash() == tok.content_hash()
+    assert rebuilt.pieces == tok.pieces
+
+
+def test_artifact_rejects_tampering(tmp_path):
+    tok = Tokenizer(["aa", "bb"], version="vX")
+    path = save_tokenizer(tok, str(tmp_path / "tokenizer_vX.json"))
+    loaded = load_tokenizer(path=path)
+    assert loaded.pieces == tok.pieces and loaded.version == "vX"
+
+    with open(path) as f:
+        payload = json.load(f)
+    payload["pieces"].append("zz")
+    with open(path, "w") as f:
+        json.dump(payload, f)
+    with pytest.raises(ValueError, match="hash mismatch"):
+        load_tokenizer(path=path)
+    with pytest.raises(FileNotFoundError, match="build_tokenizer"):
+        load_tokenizer("v999", directory=str(tmp_path))
+
+
+def test_content_hash_tracks_pieces():
+    a, b = Tokenizer(["aa", "bb"]), Tokenizer(["aa", "bb"])
+    assert a.content_hash() == b.content_hash()
+    assert Tokenizer(["aa", "cc"]).content_hash() != a.content_hash()
+
+
+def test_registry_fingerprint_includes_tokenizer_hash():
+    """ISSUE-5 acceptance: the tokenizer artifact hash appears in the
+    class-embedding registry fingerprint, so a retrained vocab invalidates
+    cached class matrices by construction."""
+    from repro.serving.embed.registry import (checkpoint_fingerprint,
+                                              params_fingerprint)
+    params = {"w": np.arange(4, dtype=np.float32)}
+    tok = load_tokenizer("v1")
+    tag = checkpoint_fingerprint(params, tok)
+    assert tok.content_hash() in tag
+    assert tag.startswith(params_fingerprint(params))
+    other = Tokenizer(["aa"])
+    assert checkpoint_fingerprint(params, other) != tag
+    # no tokenizer -> plain params fingerprint (legacy callers)
+    assert checkpoint_fingerprint(params) == params_fingerprint(params)
+
+
+# ---------------------------------------------------------------------------
+# multi-device acceptance (subprocess: 8 simulated host devices)
+# ---------------------------------------------------------------------------
+
+
+def test_two_host_reassembly_and_trainer_resume():
+    """Spawns tests/distributed_checks.py sharded_data: two-host bit-exact
+    reassembly, block->shard device placement on an 8-way mesh, and the
+    checkpoint-resumed contrastive trainer replaying the exact batch
+    sequence."""
+    checks = os.path.join(os.path.dirname(__file__), "distributed_checks.py")
+    env = dict(os.environ)
+    env["JAX_PLATFORMS"] = "cpu"
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                        + " --xla_force_host_platform_device_count=8")
+    proc = subprocess.run([sys.executable, checks, "sharded_data"],
+                          capture_output=True, text=True, timeout=900,
+                          env=env)
+    assert proc.returncode == 0, (
+        f"sharded_data failed\n--- stdout ---\n{proc.stdout}\n"
+        f"--- stderr ---\n{proc.stderr[-4000:]}")
+    assert "PASS sharded_data" in proc.stdout
