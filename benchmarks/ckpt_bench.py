@@ -1,0 +1,130 @@
+"""Checkpoint write/restore bench (DESIGN.md §10.5).
+
+At paper scale (3B params checkpointed every few minutes for a week,
+PAPER.md §5) a blocking save stalls the step for the full host-gather +
+serialize + hash + rename; the AsyncCheckpointManager keeps only the host
+snapshot on the step path. This bench measures, per save of an ~64 MiB
+fp32 pytree:
+
+  save_ref/blocking     full synchronous save (snapshot + np.save per leaf
+                        + sha256 + atomic rename on the calling thread) —
+                        the ``*_ref`` host-drift anchor
+                        (scripts/check_bench.py)
+  save/async_stall      the time ``save_async`` holds the train loop in
+                        steady state (previous write joined first): the
+                        snapshot only. ``must_beat: save_ref/blocking`` —
+                        the whole point of the async path is that the step
+                        stall drops below the blocking save on every host
+  restore/latency       integrity-verified ``io.restore`` of the same tree
+                        (read + reassemble). UNGATED: restore happens once
+                        per (re)launch, not per step — recorded for the
+                        trajectory, not raced
+
+Committed as BENCH_ckpt.json and gated through ``benchmarks/run.py
+--json``: absolute timings ride the 1.3x cross-run gate where they clear
+the 50ms interpret floor; the must_beat invariant carries the async-vs-
+blocking claim regardless of host speed.
+"""
+from __future__ import annotations
+
+import argparse
+import shutil
+import tempfile
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import csv_line, write_json
+from repro import checkpoint as ckpt
+
+N_LEAVES = 16
+LEAF_SHAPE = (1024, 1024)     # 16 × 4 MiB fp32 = 64 MiB per checkpoint
+REPEATS = 3                   # min-of-N (scheduler-noise robustness)
+KEEP_LAST = 2                 # retention bounds bench disk usage
+
+
+def _tree():
+    """The checkpointed state: N_LEAVES device arrays, ~64 MiB total."""
+    keys = jax.random.split(jax.random.key(0), N_LEAVES)
+    return {f"w{i}": jax.random.normal(k, LEAF_SHAPE, jnp.float32)
+            for i, k in enumerate(keys)}
+
+
+def _min_of(fn, reps=REPEATS) -> float:
+    """Min-of-reps wall time of ``fn()`` in µs."""
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e6
+
+
+def run(json_path: str | None = None):
+    """Run the bench; optionally write the BENCH_ckpt.json payload."""
+    tree = jax.block_until_ready(_tree())
+    size_mb = sum(v.size * v.dtype.itemsize
+                  for v in tree.values()) / 2 ** 20
+    root = tempfile.mkdtemp(prefix="ckpt_bench_")
+    entries: dict = {}
+    try:
+        step = iter(range(1, 10_000)).__next__
+
+        with ckpt.AsyncCheckpointManager(root, sync=True,
+                                         keep_last=KEEP_LAST) as m:
+            m.save(step(), tree)                      # warm (page cache, jit)
+            us_sync = round(_min_of(lambda: m.save(step(), tree)), 1)
+        entries["save_ref/blocking"] = {"us": us_sync}
+        csv_line("ckpt/save_ref/blocking", us_sync, f"{size_mb:.0f}MB")
+
+        with ckpt.AsyncCheckpointManager(root, keep_last=KEEP_LAST) as m:
+            m.save(step(), tree)                      # warm
+            stalls = []
+            for _ in range(REPEATS):
+                m.wait()                              # steady state: no
+                t0 = time.perf_counter()              # in-flight write to join
+                m.save(step(), tree)
+                stalls.append(time.perf_counter() - t0)
+            us_async = round(min(stalls) * 1e6, 1)
+        entries["save/async_stall"] = {
+            "us": us_async, "must_beat": "save_ref/blocking",
+            "stall_reduction_vs_blocking": round(us_sync / us_async, 2)}
+        csv_line("ckpt/save/async_stall", us_async,
+                 f"{us_sync / us_async:.2f}x_less_stall")
+
+        last = ckpt.latest_verified_step(root)
+        like = jax.eval_shape(lambda: tree)
+        us_restore = round(
+            _min_of(lambda: ckpt.restore(root, last, like)), 1)
+        entries["restore/latency"] = {"us": us_restore, "ungated": True}
+        csv_line("ckpt/restore/latency", us_restore, f"step={last}")
+    finally:
+        shutil.rmtree(root, ignore_errors=True)
+
+    result = {
+        "meta": {
+            "backend": "host",        # np.save/sha256 — disk + CPU bound
+            "interpret": True,        # keeps the 50ms jitter floor active
+            "shape": {"n_leaves": N_LEAVES, "leaf": list(LEAF_SHAPE),
+                      "total_mb": round(size_mb, 1),
+                      "keep_last": KEEP_LAST},
+        },
+        "entries": entries,
+    }
+    if json_path:
+        write_json(json_path, result)
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__.split("\n\n")[0])
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write BENCH_ckpt.json-style output here")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    run(json_path=args.json)
+
+
+if __name__ == "__main__":
+    main()

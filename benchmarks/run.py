@@ -39,11 +39,14 @@ SUITES = {
     "data": ("benchmarks.data_bench",
              "host-side input pipeline: generation, augmentation "
              "overhead, prefetch depth sweep (gated, DESIGN.md §9.4)"),
+    "ckpt": ("benchmarks.ckpt_bench",
+             "checkpoint save stall: blocking vs async manager, plus "
+             "verified restore (gated, DESIGN.md §10.5)"),
 }
 TABLES = {name: mod for name, (mod, _) in SUITES.items()}
 
 # slow full-sweep benches only run when selected explicitly (or via --json)
-_OPT_IN = {"kernels", "serving", "distributed", "tower", "data"}
+_OPT_IN = {"kernels", "serving", "distributed", "tower", "data", "ckpt"}
 
 _ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
@@ -54,6 +57,7 @@ GATED = {
     "distributed": os.path.join(_ROOT, "BENCH_distributed.json"),
     "tower": os.path.join(_ROOT, "BENCH_tower.json"),
     "data": os.path.join(_ROOT, "BENCH_data.json"),
+    "ckpt": os.path.join(_ROOT, "BENCH_ckpt.json"),
 }
 
 

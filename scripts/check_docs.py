@@ -35,6 +35,7 @@ COVERED_GLOBS = (
     os.path.join("src", "repro", "models", "*.py"),
     os.path.join("src", "repro", "data", "*.py"),
     os.path.join("src", "repro", "data", "sharded", "*.py"),
+    os.path.join("src", "repro", "checkpoint", "*.py"),
 )
 
 

@@ -1,6 +1,12 @@
 from repro.checkpoint.io import (  # noqa: F401
+    CheckpointError,
+    gc_steps,
+    gc_tmp_dirs,
     latest_step,
+    latest_verified_step,
     load_meta,
     restore,
     save,
+    verify,
 )
+from repro.checkpoint.manager import AsyncCheckpointManager  # noqa: F401

@@ -1,18 +1,29 @@
-"""Checkpointing: pytree save/restore with an index, atomic writes, and
-sharded-array support (each leaf gathered to host as numpy; restore re-places
-onto the provided shardings).
+"""Checkpointing: pytree save/restore with an integrity-verified index,
+atomic writes, and sharded-array support (each leaf gathered to host as
+numpy; restore re-places onto the provided shardings).
 
 Layout:  <dir>/step_<N>/
-            index.json      — tree structure + leaf dtypes/shapes
+            index.json      — tree structure + per-leaf dtype/shape and the
+                              INTEGRITY record: sha256 + byte size of every
+                              ``arr_<i>.npy`` as written (DESIGN.md §10.2)
             arr_<i>.npy     — one file per leaf
             user_meta.json  — optional JSON sidecar (``save(..., meta=...)``)
 
 ``meta`` rides inside the same atomic rename as the arrays, so a step dir
 either has its full user metadata (e.g. resumable loader input state,
-DESIGN.md §9) or doesn't exist — never a torn pair.
+DESIGN.md §9) or doesn't exist — never a torn pair. The async manager
+(checkpoint/manager.py) reuses the ``snapshot``/``write_snapshot`` split:
+snapshot on the caller's thread, serialize + rename on a background one.
+
+Validation never uses ``assert`` (gone under ``python -O``): every
+corrupt/mismatched/missing condition raises ``CheckpointError`` naming the
+offending leaf. ``verify`` replays the recorded hashes; ``latest_verified_step``
+walks steps newest→oldest to the most recent checkpoint that passes,
+garbage-collecting stale ``.tmp_ckpt_*`` dirs a crash mid-save left behind.
 """
 from __future__ import annotations
 
+import hashlib
 import json
 import os
 import shutil
@@ -21,38 +32,93 @@ import tempfile
 import jax
 import numpy as np
 
+TMP_PREFIX = ".tmp_ckpt_"
+INDEX_FORMAT = 2          # 1: no hashes (pre-integrity); 2: sha256 + bytes
 
-def _leaf_paths(tree):
+# test-only fault hook (checkpoint/faults.py): called with the path of every
+# file about to be written and before the final rename — raising simulates a
+# transient I/O failure, os._exit a hard kill mid-save
+_write_fault_hook = None
+
+
+class CheckpointError(Exception):
+    """A checkpoint is missing, torn, corrupt, or does not match the target
+    structure. Raised by ``restore``/``verify`` instead of ``assert`` so
+    validation survives ``python -O``; the message names the offending leaf
+    index and the expected-vs-found shape/count/hash."""
+
+
+def set_write_fault_hook(hook):
+    """Install (or clear, with None) the test-only write fault hook; returns
+    the previous hook. The hook is invoked as ``hook(path)`` before every
+    file write and before the atomic rename (path then ends in the final
+    step-dir name) — checkpoint/faults.py builds its deterministic
+    injectors (fail-Nth-write, die-mid-save) on top of this."""
+    global _write_fault_hook
+    prev, _write_fault_hook = _write_fault_hook, hook
+    return prev
+
+
+def _fault(path: str) -> None:
+    if _write_fault_hook is not None:
+        _write_fault_hook(path)
+
+
+def _step_dir(directory: str, step: int) -> str:
+    return os.path.join(directory, f"step_{step:08d}")
+
+
+def _sha256_file(path: str) -> str:
+    h = hashlib.sha256()
+    with open(path, "rb") as f:
+        for chunk in iter(lambda: f.read(1 << 20), b""):
+            h.update(chunk)
+    return h.hexdigest()
+
+
+def snapshot(tree):
+    """Gather every leaf of ``tree`` to host memory — the only part of a
+    save that must run synchronously with respect to the training loop.
+    Returns ``(host numpy leaves, treedef)`` ready for ``write_snapshot``
+    on any thread."""
     leaves, treedef = jax.tree_util.tree_flatten(tree)
-    return leaves, treedef
+    return [np.asarray(jax.device_get(leaf)) for leaf in leaves], treedef
 
 
-def save(directory: str, step: int, tree, meta=None) -> str:
-    """Write ``tree`` as ``<directory>/step_<N>/`` atomically. ``meta``:
-    optional JSON-serializable dict stored as ``user_meta.json`` in the
-    same rename (read back with ``load_meta``)."""
-    final = os.path.join(directory, f"step_{step:08d}")
+def write_snapshot(directory: str, step: int, arrs, treedef,
+                   meta=None) -> str:
+    """Serialize a host snapshot as ``<directory>/step_<N>/`` atomically:
+    every ``arr_<i>.npy`` plus its sha256/byte-size index entry is written
+    into a ``.tmp_ckpt_*`` dir which is renamed into place only once
+    complete — a crash at any point leaves either the previous state or a
+    stale tmp dir (GC'd by ``latest_verified_step``), never a torn step."""
+    final = _step_dir(directory, step)
     os.makedirs(directory, exist_ok=True)
-    tmp = tempfile.mkdtemp(dir=directory, prefix=".tmp_ckpt_")
+    tmp = tempfile.mkdtemp(dir=directory, prefix=TMP_PREFIX)
     try:
-        leaves, treedef = _leaf_paths(tree)
-        index = {"treedef": str(treedef), "n": len(leaves), "step": step,
-                 "leaves": []}
-        for i, leaf in enumerate(leaves):
-            arr = np.asarray(jax.device_get(leaf))
+        index = {"treedef": str(treedef), "n": len(arrs), "step": step,
+                 "format": INDEX_FORMAT, "leaves": []}
+        for i, arr in enumerate(arrs):
+            arr = np.asarray(arr)
+            path = os.path.join(tmp, f"arr_{i}.npy")
             dtype_name = str(arr.dtype)
+            _fault(path)
             if dtype_name == "bfloat16":  # np.save can't store ml_dtypes
-                np.save(os.path.join(tmp, f"arr_{i}.npy"),
-                        arr.view(np.uint16))
+                np.save(path, arr.view(np.uint16))
             else:
-                np.save(os.path.join(tmp, f"arr_{i}.npy"), arr)
-            index["leaves"].append({"dtype": dtype_name,
-                                    "shape": list(arr.shape)})
+                np.save(path, arr)
+            index["leaves"].append({
+                "dtype": dtype_name, "shape": list(arr.shape),
+                "bytes": os.path.getsize(path),
+                "sha256": _sha256_file(path)})
+        _fault(os.path.join(tmp, "index.json"))
         with open(os.path.join(tmp, "index.json"), "w") as f:
             json.dump(index, f)
         if meta is not None:
+            _fault(os.path.join(tmp, "user_meta.json"))
             with open(os.path.join(tmp, "user_meta.json"), "w") as f:
                 json.dump(meta, f, indent=1)
+        _fault(final)
         if os.path.exists(final):
             shutil.rmtree(final)
         os.rename(tmp, final)
@@ -62,44 +128,175 @@ def save(directory: str, step: int, tree, meta=None) -> str:
     return final
 
 
+def save(directory: str, step: int, tree, meta=None) -> str:
+    """Write ``tree`` as ``<directory>/step_<N>/`` atomically (blocking:
+    snapshot + serialize + rename on the calling thread — the async path is
+    ``checkpoint.manager.AsyncCheckpointManager``). ``meta``: optional
+    JSON-serializable dict stored as ``user_meta.json`` in the same rename
+    (read back with ``load_meta``)."""
+    arrs, treedef = snapshot(tree)
+    return write_snapshot(directory, step, arrs, treedef, meta=meta)
+
+
 def load_meta(directory: str, step: int):
     """The ``user_meta.json`` sidecar of a step dir, or None when the
     checkpoint was saved without one (pre-meta checkpoints stay loadable)."""
-    path = os.path.join(directory, f"step_{step:08d}", "user_meta.json")
+    path = os.path.join(_step_dir(directory, step), "user_meta.json")
     if not os.path.exists(path):
         return None
     with open(path) as f:
         return json.load(f)
 
 
+def _list_steps(directory: str):
+    return sorted(int(d.split("_")[1]) for d in os.listdir(directory)
+                  if d.startswith("step_"))
+
+
 def latest_step(directory: str):
+    """Newest step number present on disk (no integrity check — prefer
+    ``latest_verified_step`` for auto-resume), or None."""
     if not os.path.isdir(directory):
         return None
-    steps = [int(d.split("_")[1]) for d in os.listdir(directory)
-             if d.startswith("step_")]
-    return max(steps) if steps else None
+    steps = _list_steps(directory)
+    return steps[-1] if steps else None
+
+
+def verify(directory: str, step: int) -> dict:
+    """Replay the integrity record of ``<directory>/step_<N>/``: the index
+    must parse, every ``arr_<i>.npy`` must exist with the recorded byte size
+    and sha256. Returns the parsed index on success; raises
+    ``CheckpointError`` naming the first offending leaf otherwise.
+    Format-1 checkpoints (written before hashes existed) verify existence
+    and leaf count only."""
+    path = _step_dir(directory, step)
+    if not os.path.isdir(path):
+        raise CheckpointError(f"no checkpoint dir at {path}")
+    try:
+        with open(os.path.join(path, "index.json")) as f:
+            index = json.load(f)
+    except FileNotFoundError:
+        raise CheckpointError(f"{path}: missing index.json (torn write?)") \
+            from None
+    except (json.JSONDecodeError, OSError) as e:
+        raise CheckpointError(f"{path}: unreadable index.json: {e}") from e
+    leaves = index.get("leaves")
+    if not isinstance(leaves, list) or index.get("n") != len(leaves):
+        raise CheckpointError(
+            f"{path}: index.json inconsistent: n={index.get('n')} vs "
+            f"{len(leaves) if isinstance(leaves, list) else 'no'} leaf "
+            f"records")
+    for i, leaf in enumerate(leaves):
+        apath = os.path.join(path, f"arr_{i}.npy")
+        if not os.path.exists(apath):
+            raise CheckpointError(f"{path}: leaf {i} missing ({apath})")
+        want_bytes = leaf.get("bytes")
+        if want_bytes is not None:
+            found = os.path.getsize(apath)
+            if found != want_bytes:
+                raise CheckpointError(
+                    f"{path}: leaf {i} truncated/resized: expected "
+                    f"{want_bytes} bytes, found {found}")
+        want_sha = leaf.get("sha256")
+        if want_sha is not None:
+            found_sha = _sha256_file(apath)
+            if found_sha != want_sha:
+                raise CheckpointError(
+                    f"{path}: leaf {i} content hash mismatch: expected "
+                    f"{want_sha[:12]}…, found {found_sha[:12]}…")
+    return index
+
+
+def gc_tmp_dirs(directory: str) -> list:
+    """Remove stale ``.tmp_ckpt_*`` dirs a crash mid-save left behind;
+    returns the removed paths. Only call when no async save is in flight
+    (the manager and ``latest_verified_step`` — which runs at resume time,
+    before any save starts — respect this)."""
+    if not os.path.isdir(directory):
+        return []
+    removed = []
+    for d in os.listdir(directory):
+        if d.startswith(TMP_PREFIX):
+            path = os.path.join(directory, d)
+            shutil.rmtree(path, ignore_errors=True)
+            removed.append(path)
+    return removed
+
+
+def latest_verified_step(directory: str, *, gc: bool = True):
+    """Newest step whose checkpoint passes ``verify``, walking newest→oldest
+    and skipping torn/corrupt steps — the auto-resume entry point: it always
+    lands on a checkpoint that will restore. ``gc`` (default) also removes
+    stale ``.tmp_ckpt_*`` dirs. Returns None when no step verifies."""
+    if not os.path.isdir(directory):
+        return None
+    if gc:
+        gc_tmp_dirs(directory)
+    for step in reversed(_list_steps(directory)):
+        try:
+            verify(directory, step)
+            return step
+        except CheckpointError:
+            continue
+    return None
+
+
+def gc_steps(directory: str, *, keep_last: int, keep_every: int = 0) -> list:
+    """Retention policy: delete step dirs beyond the newest ``keep_last``,
+    except "keep" steps divisible by ``keep_every`` (0 = no keep steps).
+    Returns the deleted step numbers. ``keep_last`` must be >= 1 — the
+    newest checkpoint is never collected."""
+    if keep_last < 1:
+        raise CheckpointError(f"keep_last must be >= 1, got {keep_last}")
+    if not os.path.isdir(directory):
+        return []
+    steps = _list_steps(directory)
+    keep = set(steps[-keep_last:])
+    if keep_every > 0:
+        keep.update(s for s in steps if s % keep_every == 0)
+    dropped = [s for s in steps if s not in keep]
+    for s in dropped:
+        shutil.rmtree(_step_dir(directory, s), ignore_errors=True)
+    return dropped
 
 
 def restore(directory: str, step: int, like, shardings=None):
     """Restore into the structure of ``like`` (a pytree of arrays or
     ShapeDtypeStructs). ``shardings``: optional matching pytree of
-    NamedShardings to place leaves onto."""
-    path = os.path.join(directory, f"step_{step:08d}")
-    with open(os.path.join(path, "index.json")) as f:
-        meta = json.load(f)
-    like_leaves, treedef = _leaf_paths(like)
-    assert meta["n"] == len(like_leaves), \
-        f"checkpoint has {meta['n']} leaves, target has {len(like_leaves)}"
+    NamedShardings to place leaves onto. Raises ``CheckpointError`` (never
+    a bare assert/FileNotFoundError) on a missing step, leaf-count
+    mismatch, unreadable leaf file, or per-leaf shape mismatch."""
+    path = _step_dir(directory, step)
+    try:
+        with open(os.path.join(path, "index.json")) as f:
+            meta = json.load(f)
+    except FileNotFoundError:
+        raise CheckpointError(f"no checkpoint at {path} (missing "
+                              f"index.json)") from None
+    like_leaves, treedef = jax.tree_util.tree_flatten(like)
+    if meta["n"] != len(like_leaves):
+        raise CheckpointError(
+            f"{path}: checkpoint has {meta['n']} leaves, target structure "
+            f"has {len(like_leaves)}")
     out = []
     shard_leaves = (jax.tree_util.tree_flatten(shardings)[0]
                     if shardings is not None else [None] * len(like_leaves))
     for i, (ref, sh) in enumerate(zip(like_leaves, shard_leaves)):
-        arr = np.load(os.path.join(path, f"arr_{i}.npy"))
+        apath = os.path.join(path, f"arr_{i}.npy")
+        try:
+            arr = np.load(apath)
+        except (FileNotFoundError, OSError, ValueError) as e:
+            raise CheckpointError(
+                f"{path}: leaf {i} unreadable ({apath}): "
+                f"{type(e).__name__}: {e}") from e
         if meta["leaves"][i]["dtype"] == "bfloat16":
             import ml_dtypes
             arr = arr.view(ml_dtypes.bfloat16)
         expect = tuple(np.shape(ref))
-        assert tuple(arr.shape) == expect, (i, arr.shape, expect)
+        if tuple(arr.shape) != expect:
+            raise CheckpointError(
+                f"{path}: leaf {i} shape mismatch: checkpoint has "
+                f"{tuple(arr.shape)}, target expects {expect}")
         if sh is not None:
             out.append(jax.device_put(arr, sh))
         else:

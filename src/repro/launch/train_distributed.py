@@ -38,10 +38,24 @@ batch sequence.
 
 ``--memstats`` prints the compiled per-step memory/FLOPs report
 (launch/memstats.py) before training starts.
+
+Fault tolerance (DESIGN.md §10): checkpoints are written ASYNCHRONOUSLY
+(``checkpoint.AsyncCheckpointManager`` — the step only pays for the host
+snapshot; ``--ckpt-sync`` restores the blocking path), carry per-leaf
+sha256 integrity records, and are retained per ``--ckpt-keep`` /
+``--ckpt-keep-every``. ``--resume auto`` restores params/opt-state/loader
+input state from the newest checkpoint that VERIFIES — torn or corrupt
+step dirs are skipped, stale ``.tmp_ckpt_*`` dirs GC'd. SIGTERM (the
+cluster preemption signal) triggers a final sync checkpoint after the
+in-flight step, and persistent async-write failures degrade the run to
+sync checkpointing after capped-backoff retries.
 """
 from __future__ import annotations
 
 import argparse
+import os
+import signal
+import threading
 import time
 
 import jax
@@ -97,50 +111,117 @@ def make_step(cfg, opt, lr_fn, *, remat="basic", moe_args=None,
     return train_step
 
 
+def _make_manager(args):
+    """The run's AsyncCheckpointManager (None without --ckpt-dir):
+    ``--ckpt-sync`` degrades to the blocking path, ``--ckpt-keep`` /
+    ``--ckpt-keep-every`` set the retention policy (DESIGN.md §10.3)."""
+    if not args.ckpt_dir:
+        return None
+    return ckpt.AsyncCheckpointManager(
+        args.ckpt_dir,
+        sync=bool(getattr(args, "ckpt_sync", False)),
+        keep_last=int(getattr(args, "ckpt_keep", 0) or 0),
+        keep_every=int(getattr(args, "ckpt_keep_every", 0) or 0))
+
+
 def _run_loop(args, step_fn, params, opt_state, make_batch, start, *,
               step_takes_index, ckpt_meta_fn=None):
     """Shared prefetch/step/log/checkpoint loop; returns per-step losses.
     ``ckpt_meta_fn(next_step) -> dict``: optional user-meta (e.g. resumable
-    loader input state) written into every checkpoint step dir."""
+    loader input state) written into every checkpoint step dir.
+
+    Checkpoints go through the async manager (serialize + rename off the
+    step path; DESIGN.md §10). SIGTERM — the preemption signal — is caught:
+    the loop finishes the step in flight, writes a final SYNC checkpoint,
+    and returns early, so a preempted run resumes from its very last step.
+    A persistent async-write failure (after the manager's capped-backoff
+    retries) degrades the run to synchronous checkpointing rather than
+    training on without durability."""
     stop = getattr(args, "stop_after", None) or args.steps
     stream = Prefetcher(make_batch, depth=2, start=start)
     t0, losses = time.time(), []
+    manager = _make_manager(args)
+    preempted = threading.Event()
+    prev_handler = None
+    if threading.current_thread() is threading.main_thread():
+        prev_handler = signal.signal(
+            signal.SIGTERM, lambda signum, frame: preempted.set())
+    preempt_after = getattr(args, "preempt_after", None)
 
-    def save(step):
+    def save(step, *, final=False):
         meta = ckpt_meta_fn(step) if ckpt_meta_fn else None
-        ckpt.save(args.ckpt_dir, step, (params, opt_state), meta=meta)
+        tree = (params, opt_state)
+        try:
+            if final:
+                manager.save_sync(step, tree, meta=meta)
+            else:
+                manager.save(step, tree, meta=meta)
+        except ckpt.CheckpointError as e:
+            # a previous async write died after retries — don't keep
+            # training without durability: degrade to blocking saves and
+            # re-write this step synchronously
+            print(f"ckpt: async write failed ({e}); degrading to sync")
+            manager.sync = True
+            manager.save_sync(step, tree, meta=meta)
 
-    for i in range(start, min(args.steps, stop)):
-        batch = next(stream)
-        if step_takes_index:
-            params, opt_state, loss, metrics = step_fn(
-                params, opt_state, batch, jnp.asarray(i))
-        else:
-            params, opt_state, loss, metrics = step_fn(
-                params, opt_state, batch)
-        losses.append(float(loss))
-        if i % args.log_every == 0 or i == args.steps - 1:
-            gnorm = metrics.get("grad_norm")
-            gtxt = f"gnorm {float(gnorm):.2f} " if gnorm is not None else ""
-            print(f"step {i:5d} loss {float(loss):.4f} {gtxt}"
-                  f"{(time.time()-t0)/max(1, i-start+1):.2f}s/step")
-        if args.ckpt_dir and args.ckpt_every and \
-                (i + 1) % args.ckpt_every == 0:
-            save(i + 1)
-    stream.close()
-    if args.ckpt_dir:
-        save(min(args.steps, stop))
+    final_saved = False
+    try:
+        for i in range(start, min(args.steps, stop)):
+            batch = next(stream)
+            if step_takes_index:
+                params, opt_state, loss, metrics = step_fn(
+                    params, opt_state, batch, jnp.asarray(i))
+            else:
+                params, opt_state, loss, metrics = step_fn(
+                    params, opt_state, batch)
+            losses.append(float(loss))
+            if i % args.log_every == 0 or i == args.steps - 1:
+                gnorm = metrics.get("grad_norm")
+                gtxt = f"gnorm {float(gnorm):.2f} " \
+                    if gnorm is not None else ""
+                print(f"step {i:5d} loss {float(loss):.4f} {gtxt}"
+                      f"{(time.time()-t0)/max(1, i-start+1):.2f}s/step")
+            if preempt_after is not None and i - start + 1 == preempt_after:
+                # simulated-preemption hook: deliver a REAL SIGTERM to
+                # ourselves so tests exercise the exact signal path
+                os.kill(os.getpid(), signal.SIGTERM)
+            if preempted.is_set():
+                if args.ckpt_dir:
+                    print(f"SIGTERM: preemption checkpoint at step {i + 1}")
+                    save(i + 1, final=True)
+                final_saved = True
+                break
+            if args.ckpt_dir and args.ckpt_every and \
+                    (i + 1) % args.ckpt_every == 0:
+                save(i + 1)
+    finally:
+        stream.close()
+        if prev_handler is not None:
+            signal.signal(signal.SIGTERM, prev_handler)
+    if args.ckpt_dir and not final_saved:
+        save(min(args.steps, stop), final=True)
+    if manager is not None:
+        manager.close()
     return losses
 
 
 def _restore(args, params, opt_state, pspecs, ospecs):
+    """Resume per ``--resume``: ``auto`` (default) restores from
+    ``latest_verified_step`` — torn/corrupt step dirs are skipped and
+    stale ``.tmp_ckpt_*`` dirs GC'd, so a crash mid-save can never wedge
+    the relaunch; ``latest`` trusts the newest step dir (the historical
+    behavior); ``off`` starts fresh."""
     start = 0
-    if args.ckpt_dir and (latest := ckpt.latest_step(args.ckpt_dir)):
-        like = jax.eval_shape(lambda: (params, opt_state))
-        params, opt_state = ckpt.restore(args.ckpt_dir, latest, like,
-                                         shardings=(pspecs, ospecs))
-        start = latest
-        print(f"resumed from step {start}")
+    resume = getattr(args, "resume", None) or "auto"
+    if args.ckpt_dir and resume != "off":
+        latest = (ckpt.latest_verified_step(args.ckpt_dir)
+                  if resume == "auto" else ckpt.latest_step(args.ckpt_dir))
+        if latest:
+            like = jax.eval_shape(lambda: (params, opt_state))
+            params, opt_state = ckpt.restore(args.ckpt_dir, latest, like,
+                                             shardings=(pspecs, ospecs))
+            start = latest
+            print(f"resumed from step {start} (--resume {resume})")
     return params, opt_state, start
 
 
@@ -371,6 +452,26 @@ def main():
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=0)
+    ap.add_argument("--ckpt-sync", action="store_true",
+                    help="blocking checkpoint writes (default: async — "
+                         "snapshot on the step path, serialize + atomic "
+                         "rename on a background thread)")
+    ap.add_argument("--ckpt-keep", type=int, default=0,
+                    help="retention: keep only the newest K checkpoints "
+                         "(0 = keep all)")
+    ap.add_argument("--ckpt-keep-every", type=int, default=0,
+                    help="retention: additionally keep every Nth step "
+                         "forever (0 = none)")
+    ap.add_argument("--resume", default="auto",
+                    choices=["auto", "latest", "off"],
+                    help="auto: resume from the newest checkpoint that "
+                         "passes integrity verification (torn/corrupt "
+                         "steps skipped, stale tmp dirs GC'd); latest: "
+                         "trust the newest step dir; off: start fresh")
+    ap.add_argument("--preempt-after", type=int, default=None,
+                    help="chaos hook: SIGTERM ourselves after N steps — "
+                         "exercises the preemption path (final sync "
+                         "checkpoint + clean exit) deterministically")
     ap.add_argument("--stop-after", type=int, default=None,
                     help="halt early but keep the --steps LR horizon")
     args = ap.parse_args()

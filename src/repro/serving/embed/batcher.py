@@ -17,6 +17,13 @@ miserable); padded rows are dropped before futures resolve.
 The engine is model-agnostic: it batches any pytree-of-arrays payload and
 calls the per-tower ``encode_fns`` you hand it. ``ZeroShotService`` wires it
 to the dual encoder's towers.
+
+Failure semantics: an encode-fn exception fails that cohort's futures; any
+OTHER exception inside the flush thread fails EVERY pending future (a
+stranded future is a caller blocked forever) and the worker keeps serving.
+Every future carries a per-request deadline (``request_timeout_s``) — a
+bare ``result()`` can never hang indefinitely, even when the flush thread
+is wedged inside a blocked encode fn.
 """
 from __future__ import annotations
 
@@ -31,15 +38,43 @@ import numpy as np
 DEFAULT_BUCKETS = (1, 2, 4, 8, 16, 32, 64)
 
 
+class DeadlineFuture(Future):
+    """A Future whose bare ``result()``/``exception()`` wait at most until
+    the request deadline instead of forever. Every future the batcher hands
+    out is one of these: even when the flush thread is wedged inside a
+    blocked encode fn (where no amount of exception plumbing can help), a
+    caller that did not pass its own timeout gets ``TimeoutError`` at the
+    deadline rather than hanging indefinitely."""
+
+    _deadline = None  # monotonic seconds; set by the batcher at submit
+
+    def _cap(self, timeout):
+        if timeout is None and self._deadline is not None:
+            return max(0.0, self._deadline - time.monotonic())
+        return timeout
+
+    def result(self, timeout=None):
+        """``Future.result`` defaulting ``timeout`` to the request
+        deadline."""
+        return super().result(self._cap(timeout))
+
+    def exception(self, timeout=None):
+        """``Future.exception`` defaulting ``timeout`` to the request
+        deadline."""
+        return super().exception(self._cap(timeout))
+
+
 class _Group:
     """One submit_many() call: a batched payload awaiting one future."""
 
     __slots__ = ("payload", "n", "future", "t_submit")
 
-    def __init__(self, payload, n: int, t_submit: float):
+    def __init__(self, payload, n: int, t_submit: float,
+                 deadline: float | None = None):
         self.payload = payload
         self.n = n
-        self.future: Future = Future()
+        self.future: DeadlineFuture = DeadlineFuture()
+        self.future._deadline = deadline
         self.t_submit = t_submit
 
 
@@ -71,11 +106,13 @@ class MicroBatcher:
 
     def __init__(self, encode_fns: Dict[str, Callable], *,
                  buckets: Sequence[int] = DEFAULT_BUCKETS,
-                 max_delay_ms: float = 2.0, autostart: bool = True):
+                 max_delay_ms: float = 2.0, request_timeout_s: float = 60.0,
+                 autostart: bool = True):
         if not buckets or any(b <= 0 for b in buckets):
             raise ValueError(f"bad bucket ladder {buckets}")
         self.buckets = tuple(sorted(set(int(b) for b in buckets)))
         self.max_delay = float(max_delay_ms) / 1e3
+        self.request_timeout = float(request_timeout_s)
         self._fns = dict(encode_fns)
         self._pending: Dict[str, list] = {t: [] for t in self._fns}
         self._cv = threading.Condition()
@@ -84,7 +121,7 @@ class MicroBatcher:
         self._thread = None
         self.stats = {"requests": 0, "size_flushes": 0, "deadline_flushes": 0,
                       "manual_flushes": 0, "encoded_examples": 0,
-                      "padded_examples": 0, "batches": 0}
+                      "padded_examples": 0, "batches": 0, "worker_errors": 0}
         if autostart:
             self.start()
 
@@ -116,7 +153,8 @@ class MicroBatcher:
         batched = jax.tree_util.tree_map(lambda a: np.asarray(a)[None],
                                          example)
         group = self._enqueue(tower, batched, 1)
-        out: Future = Future()
+        out = DeadlineFuture()
+        out._deadline = group.future._deadline
         group.future.add_done_callback(
             lambda f: out.set_exception(f.exception()) if f.exception()
             else out.set_result(f.result()[0]))
@@ -132,7 +170,8 @@ class MicroBatcher:
         if tower not in self._fns:
             raise KeyError(f"unknown tower {tower!r}; "
                            f"have {sorted(self._fns)}")
-        group = _Group(payload, n, time.monotonic())
+        now = time.monotonic()
+        group = _Group(payload, n, now, deadline=now + self.request_timeout)
         with self._cv:
             self._pending[tower].append(group)
             self.stats["requests"] += n
@@ -149,23 +188,46 @@ class MicroBatcher:
 
     def _worker(self):
         while True:
-            with self._cv:
-                if self._stop:
-                    return
-                deadline = self._earliest_deadline_locked()
-                if deadline is None:
-                    self._cv.wait()
-                else:
-                    now = time.monotonic()
-                    if deadline > now and not self._size_due_locked():
-                        self._cv.wait(timeout=deadline - now)
-                if self._stop:
-                    return
-                due = [(t, "size_flushes" if self._size_due_locked(t)
-                        else "deadline_flushes")
-                       for t in self._pending if self._due_locked(t)]
-            for tower, reason in due:
-                self._flush_tower(tower, reason)
+            try:
+                with self._cv:
+                    if self._stop:
+                        return
+                    deadline = self._earliest_deadline_locked()
+                    if deadline is None:
+                        self._cv.wait()
+                    else:
+                        now = time.monotonic()
+                        if deadline > now and not self._size_due_locked():
+                            self._cv.wait(timeout=deadline - now)
+                    if self._stop:
+                        return
+                    due = [(t, "size_flushes" if self._size_due_locked(t)
+                            else "deadline_flushes")
+                           for t in self._pending if self._due_locked(t)]
+                for tower, reason in due:
+                    self._flush_tower(tower, reason)
+            except Exception as e:  # noqa: BLE001 — flush-thread bug: a
+                # stranded future is a caller blocked forever, so EVERY
+                # pending request fails with the exception and the worker
+                # keeps serving future submissions
+                self.stats["worker_errors"] += 1
+                self._fail_all_pending(e)
+
+    def _fail_all_pending(self, exc: Exception) -> int:
+        """Fail every queued (unflushed) request with ``exc``; returns how
+        many futures were failed. The flush thread calls this when it hits
+        an exception outside the per-cohort encode path — nothing may be
+        left waiting on a worker that just lost its state."""
+        with self._cv:
+            groups = [g for gs in self._pending.values() for g in gs]
+            for tower in self._pending:
+                self._pending[tower] = []
+        failed = 0
+        for g in groups:
+            if g.future.set_running_or_notify_cancel():
+                g.future.set_exception(exc)
+                failed += 1
+        return failed
 
     def _earliest_deadline_locked(self):
         oldest = [g.t_submit for gs in self._pending.values() for g in gs]
@@ -190,16 +252,25 @@ class MicroBatcher:
         if not groups:
             return 0
         self.stats[reason] += 1
-        # only structurally identical payloads may coalesce: mixing treedefs
-        # or per-example shapes would mispair leaves under one treedef and
-        # silently scramble results, so each cohort encodes separately
-        cohorts: dict = {}
-        for g in groups:
-            key = (jax.tree_util.tree_structure(g.payload),
-                   _shape_sig(g.payload))
-            cohorts.setdefault(key, []).append(g)
-        for cohort in cohorts.values():
-            self._encode_chunk(tower, cohort)
+        try:
+            # only structurally identical payloads may coalesce: mixing
+            # treedefs or per-example shapes would mispair leaves under one
+            # treedef and silently scramble results, so each cohort encodes
+            # separately
+            cohorts: dict = {}
+            for g in groups:
+                key = (jax.tree_util.tree_structure(g.payload),
+                       _shape_sig(g.payload))
+                cohorts.setdefault(key, []).append(g)
+            for cohort in cohorts.values():
+                self._encode_chunk(tower, cohort)
+        except Exception as e:
+            # groups are already popped — fail them before propagating, or
+            # their callers would block until the deadline for nothing
+            for g in groups:
+                if not g.future.done():
+                    g.future.set_exception(e)
+            raise
         return sum(g.n for g in groups)
 
     def _bucket_for(self, n: int) -> int:

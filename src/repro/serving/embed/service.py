@@ -58,6 +58,7 @@ class ZeroShotService:
                  registry_dir: Optional[str] = None,
                  buckets: Sequence[int] = DEFAULT_BUCKETS,
                  max_delay_ms: float = 2.0,
+                 request_timeout_s: float = 60.0,
                  precision="f32",
                  interpret: Optional[bool] = None,
                  autostart: bool = True):
@@ -80,7 +81,8 @@ class ZeroShotService:
         self.batcher = MicroBatcher(
             {"image": lambda im: enc_i(self.params, im),
              "text": lambda tx: enc_t(self.params, tx)},
-            buckets=buckets, max_delay_ms=max_delay_ms, autostart=autostart)
+            buckets=buckets, max_delay_ms=max_delay_ms,
+            request_timeout_s=request_timeout_s, autostart=autostart)
         self.registry = ClassEmbeddingRegistry(self._compute_class_matrix,
                                                cache_dir=registry_dir)
 
@@ -108,7 +110,9 @@ class ZeroShotService:
     def _result(self, fut):
         if not self.batcher.running:
             self.batcher.flush_now()   # thread-free (autostart=False) path
-        return np.asarray(fut.result(timeout=60.0))
+        # the per-request deadline bounds the wait: classify/embed_* can
+        # never hang indefinitely on a wedged flush thread
+        return np.asarray(fut.result(timeout=self.batcher.request_timeout))
 
     # -- classification ----------------------------------------------------
     def classify(self, images, class_names: Sequence[str], *,
@@ -148,7 +152,8 @@ class ZeroShotService:
             fut = self.batcher.submit_many("text", texts)
             if not self.batcher.running:
                 self.batcher.flush_now()
-            return jnp.asarray(fut.result(timeout=60.0))
+            return jnp.asarray(
+                fut.result(timeout=self.batcher.request_timeout))
         return class_embeddings(encode, self.tok, class_names, templates,
                                 text_len=self.text_len)
 

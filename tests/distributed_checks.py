@@ -1,18 +1,26 @@
-"""Standalone multi-device checks for core/distributed_loss.py and the
-sharded data subsystem (data/sharded/, DESIGN.md §9).
+"""Standalone multi-device checks for core/distributed_loss.py, the
+sharded data subsystem (data/sharded/, DESIGN.md §9), and the checkpoint
+fault-tolerance harness (checkpoint/, DESIGN.md §10).
 
-Run by tests/test_distributed_loss.py / tests/test_sharded_loader.py in a
-SUBPROCESS with ``XLA_FLAGS=--xla_force_host_platform_device_count=8``
-(the tier-1 pytest process pins the single real CPU device — see
-tests/conftest.py — and jax locks the device count at first init, so
-multi-shard meshes need their own process). ``loss``/``gradaccum`` assert
-the cross-shard GLOBAL-batch loss and its dX/dY/dτ gradients are bit-close
-to the single-device fused loss at the same global batch; ``sharded_data``
-asserts the two-host loader reassembles bit-exactly, device assembly
-places the right rows on the right shards, and a checkpoint-resumed
-loader replays the identical batch sequence.
+Run by tests/test_distributed_loss.py / tests/test_sharded_loader.py /
+tests/test_fault_tolerance.py in a SUBPROCESS with
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (the tier-1 pytest
+process pins the single real CPU device — see tests/conftest.py — and jax
+locks the device count at first init, so multi-shard meshes need their own
+process). ``loss``/``gradaccum`` assert the cross-shard GLOBAL-batch loss
+and its dX/dY/dτ gradients are bit-close to the single-device fused loss at
+the same global batch; ``sharded_data`` asserts the two-host loader
+reassembles bit-exactly, device assembly places the right rows on the right
+shards, and a checkpoint-resumed loader replays the identical batch
+sequence. ``ckpt_fault`` is the kill-and-recover acceptance check: a
+training run hard-killed MID-CHECKPOINT-WRITE (``ckpt_victim`` grandchild
+process, ``os._exit`` via the write fault hook — SIGKILL-equivalent), with
+its newest surviving checkpoint then bit-rotted, must auto-resume from the
+newest VERIFIED step and replay the uninterrupted run's per-step losses
+bit-exactly; ditto a SIGTERM-preempted run.
 
-Usage:  python tests/distributed_checks.py {loss|gradaccum|sharded_data}
+Usage:  python tests/distributed_checks.py
+            {loss|gradaccum|sharded_data|ckpt_fault|ckpt_victim CKPT_DIR}
 """
 import os
 
@@ -213,10 +221,116 @@ def check_sharded_data():
     print("ok trainer resume replays the batch sequence")
 
 
+_TRAIN_BASE = dict(arch="basic-s", smoke=True, objective="contrastive",
+                   steps=6, batch=64, seq=16, lr=1e-3, seed=0,
+                   sharding="basic_ws", remat="basic", model_parallel=1,
+                   num_micro=2, loss="chunked", augment="on", tokenizer="v1",
+                   log_every=100, ckpt_dir=None, ckpt_every=0,
+                   stop_after=None)
+
+_VICTIM_KILL_STEP = 4     # die during the 2nd file-write of this step's save
+_VICTIM_EXIT = 17
+
+
+def run_ckpt_victim(ckpt_dir):
+    """Grandchild process of the ckpt_fault check: train with async
+    per-step checkpointing, then die by ``os._exit`` (no cleanup — the
+    SIGKILL/preemption stand-in) in the middle of writing step
+    ``_VICTIM_KILL_STEP``'s checkpoint, leaving a torn ``.tmp_ckpt_*``
+    behind. Never returns."""
+    import types
+
+    from repro.checkpoint import faults, io
+    from repro.launch.train_distributed import train
+
+    orig = io.write_snapshot
+
+    def dying_write(directory, step, arrs, treedef, meta=None):
+        if step == _VICTIM_KILL_STEP:
+            # allow one leaf file, then os._exit on the next write: the
+            # tmp dir is left torn, exactly like a mid-save preemption
+            with faults.exit_during_write(after=1, code=_VICTIM_EXIT):
+                return orig(directory, step, arrs, treedef, meta=meta)
+        return orig(directory, step, arrs, treedef, meta=meta)
+
+    io.write_snapshot = dying_write
+    train(types.SimpleNamespace(**dict(_TRAIN_BASE, ckpt_dir=ckpt_dir,
+                                       ckpt_every=1)))
+    raise SystemExit("victim survived training — kill hook never fired")
+
+
+def check_ckpt_fault():
+    """Acceptance (ISSUE-6): (1) a run hard-killed mid-checkpoint-write
+    leaves completed steps plus a torn tmp dir; (2) after the newest
+    completed checkpoint is additionally bit-rotted, ``--resume auto``
+    lands on the older verified step (GC'ing the torn tmp) and the resumed
+    run replays the uninterrupted run's per-step losses BIT-EXACTLY on the
+    8-device mesh; (3) a SIGTERM-preempted run writes a final sync
+    checkpoint after the in-flight step and resumes bit-exactly too."""
+    import glob
+    import subprocess
+    import tempfile
+    import types
+
+    from repro import checkpoint as ckpt
+    from repro.checkpoint import faults
+    from repro.launch.train_distributed import train
+
+    full = train(types.SimpleNamespace(**_TRAIN_BASE))
+    print(f"uninterrupted run: {len(full)} steps")
+
+    with tempfile.TemporaryDirectory() as d:
+        # (1) kill a training run in the middle of a checkpoint write
+        proc = subprocess.run(
+            [sys.executable, os.path.abspath(__file__), "ckpt_victim", d],
+            capture_output=True, text=True, timeout=900, env=dict(os.environ))
+        assert proc.returncode == _VICTIM_EXIT, (
+            f"victim exit {proc.returncode}\n--- stdout ---\n{proc.stdout}"
+            f"\n--- stderr ---\n{proc.stderr[-3000:]}")
+        torn = glob.glob(os.path.join(d, ".tmp_ckpt_*"))
+        assert torn, "kill mid-write must leave a torn tmp dir"
+        assert ckpt.latest_step(d) == _VICTIM_KILL_STEP - 1
+        print(f"ok victim killed mid-write of step {_VICTIM_KILL_STEP} "
+              f"(torn tmp: {os.path.basename(torn[0])})")
+
+        # (2) bit-rot the newest completed checkpoint: auto-resume must
+        # skip it to the older verified step and GC the torn tmp
+        faults.flip_byte(d, _VICTIM_KILL_STEP - 1)
+        good = _VICTIM_KILL_STEP - 2
+        assert ckpt.latest_verified_step(d, gc=False) == good
+        resumed = train(types.SimpleNamespace(**dict(_TRAIN_BASE,
+                                                     ckpt_dir=d)))
+        assert not glob.glob(os.path.join(d, ".tmp_ckpt_*")), \
+            "resume must GC the torn tmp dir"
+        np.testing.assert_array_equal(
+            np.asarray(resumed, np.float64),
+            np.asarray(full[good:], np.float64),
+            err_msg="killed+resumed losses must be bit-exact vs "
+                    "uninterrupted")
+        print(f"ok resume skipped corrupt step {_VICTIM_KILL_STEP - 1} -> "
+              f"{good}; {len(resumed)} resumed losses bit-exact")
+
+    # (3) SIGTERM preemption: final sync checkpoint + bit-exact resume
+    with tempfile.TemporaryDirectory() as d:
+        pre = train(types.SimpleNamespace(**dict(_TRAIN_BASE, ckpt_dir=d,
+                                                 preempt_after=2)))
+        assert len(pre) == 2 and ckpt.latest_verified_step(d) == 2
+        resumed = train(types.SimpleNamespace(**dict(_TRAIN_BASE,
+                                                     ckpt_dir=d)))
+        np.testing.assert_array_equal(
+            np.asarray(pre + resumed, np.float64),
+            np.asarray(full, np.float64),
+            err_msg="SIGTERM-preempted + resumed losses must be bit-exact")
+    print("ok SIGTERM preemption checkpoint + bit-exact resume")
+
+
 if __name__ == "__main__":
     mode = sys.argv[1] if len(sys.argv) > 1 else "loss"
+    if mode == "ckpt_victim":
+        run_ckpt_victim(sys.argv[2])
     assert jax.device_count() >= 8, jax.devices()
     {"loss": check_loss_equivalence,
      "gradaccum": check_gradaccum_composition,
-     "sharded_data": check_sharded_data}[mode]()
+     "sharded_data": check_sharded_data,
+     "ckpt_fault": check_ckpt_fault}[mode]()
     print(f"PASS {mode}")

@@ -1,5 +1,8 @@
-"""Checkpoint save/restore roundtrip + atomicity."""
+"""Checkpoint save/restore roundtrip, atomicity, integrity verification,
+retention/GC, and the async manager (DESIGN.md §10)."""
+import json
 import os
+import threading
 
 import jax
 import jax.numpy as jnp
@@ -7,8 +10,15 @@ import numpy as np
 import pytest
 
 from repro import checkpoint as ckpt
+from repro.checkpoint import faults
+from repro.checkpoint import io as ckpt_io
 from repro.configs import get_arch, smoke_variant
 from repro.models import transformer as tf
+
+
+def _steps_on_disk(d):
+    return sorted(int(x.split("_")[1]) for x in os.listdir(d)
+                  if x.startswith("step_"))
 
 
 def test_roundtrip(tmp_path):
@@ -17,6 +27,7 @@ def test_roundtrip(tmp_path):
     path = ckpt.save(str(tmp_path), 7, params)
     assert os.path.isdir(path)
     assert ckpt.latest_step(str(tmp_path)) == 7
+    assert ckpt.latest_verified_step(str(tmp_path)) == 7
 
     like = jax.eval_shape(lambda: params)
     restored = ckpt.restore(str(tmp_path), 7, like)
@@ -26,13 +37,25 @@ def test_roundtrip(tmp_path):
 
 
 def test_restore_rejects_wrong_structure(tmp_path):
+    """Validation raises CheckpointError (NOT assert — must survive
+    ``python -O``) naming the leaf/count mismatch."""
     tree = {"a": jnp.ones((3,)), "b": jnp.zeros((2, 2))}
     ckpt.save(str(tmp_path), 1, tree)
-    with pytest.raises(AssertionError):
+    with pytest.raises(ckpt.CheckpointError, match="2 leaves.*has 1"):
         ckpt.restore(str(tmp_path), 1, {"a": jnp.ones((3,))})
-    with pytest.raises(AssertionError):
+    with pytest.raises(ckpt.CheckpointError, match="leaf 0 shape mismatch"):
         ckpt.restore(str(tmp_path), 1,
                      {"a": jnp.ones((4,)), "b": jnp.zeros((2, 2))})
+
+
+def test_restore_missing_step_and_leaf_raise_checkpoint_error(tmp_path):
+    tree = {"a": jnp.ones((3,))}
+    ckpt.save(str(tmp_path), 1, tree)
+    with pytest.raises(ckpt.CheckpointError, match="no checkpoint"):
+        ckpt.restore(str(tmp_path), 9, tree)
+    os.remove(tmp_path / "step_00000001" / "arr_0.npy")
+    with pytest.raises(ckpt.CheckpointError, match="leaf 0 unreadable"):
+        ckpt.restore(str(tmp_path), 1, tree)
 
 
 def test_multiple_steps_latest(tmp_path):
@@ -53,3 +76,229 @@ def test_optimizer_state_roundtrip(tmp_path):
     like = jax.eval_shape(lambda: {"params": params, "opt": st})
     restored = ckpt.restore(str(tmp_path), 2, like)
     assert restored["opt"].m["final_norm"].dtype == jnp.bfloat16
+
+
+# ---------------------------------------------------------------------------
+# integrity: verify / latest_verified_step on corrupted checkpoints
+# ---------------------------------------------------------------------------
+
+
+_TREE = {"a": np.arange(64, dtype=np.float32).reshape(8, 8),
+         "b": np.ones((16,), np.float32)}
+
+
+def test_index_records_hash_and_size(tmp_path):
+    ckpt.save(str(tmp_path), 1, _TREE)
+    with open(tmp_path / "step_00000001" / "index.json") as f:
+        index = json.load(f)
+    assert index["format"] == 2
+    for i, leaf in enumerate(index["leaves"]):
+        path = tmp_path / "step_00000001" / f"arr_{i}.npy"
+        assert leaf["bytes"] == os.path.getsize(path)
+        assert len(leaf["sha256"]) == 64
+
+
+def test_verify_rejects_truncated_leaf(tmp_path):
+    ckpt.save(str(tmp_path), 1, _TREE)
+    faults.truncate_leaf(str(tmp_path), 1, leaf=0)
+    with pytest.raises(ckpt.CheckpointError, match="leaf 0 truncated"):
+        ckpt.verify(str(tmp_path), 1)
+
+
+def test_verify_rejects_flipped_byte(tmp_path):
+    """Bit rot keeps the size right — only the sha256 catches it."""
+    ckpt.save(str(tmp_path), 1, _TREE)
+    assert ckpt.verify(str(tmp_path), 1)["n"] == 2
+    faults.flip_byte(str(tmp_path), 1, leaf=1)
+    with pytest.raises(ckpt.CheckpointError, match="leaf 1 content hash"):
+        ckpt.verify(str(tmp_path), 1)
+
+
+def test_verify_rejects_tampered_index_hash(tmp_path):
+    ckpt.save(str(tmp_path), 1, _TREE)
+    faults.tamper_index_hash(str(tmp_path), 1, leaf=0)
+    with pytest.raises(ckpt.CheckpointError, match="leaf 0 content hash"):
+        ckpt.verify(str(tmp_path), 1)
+
+
+def test_verify_rejects_missing_leaf_and_index(tmp_path):
+    ckpt.save(str(tmp_path), 1, _TREE)
+    os.remove(tmp_path / "step_00000001" / "arr_1.npy")
+    with pytest.raises(ckpt.CheckpointError, match="leaf 1 missing"):
+        ckpt.verify(str(tmp_path), 1)
+    os.remove(tmp_path / "step_00000001" / "index.json")
+    with pytest.raises(ckpt.CheckpointError, match="missing index.json"):
+        ckpt.verify(str(tmp_path), 1)
+    with pytest.raises(ckpt.CheckpointError, match="no checkpoint dir"):
+        ckpt.verify(str(tmp_path), 42)
+
+
+def test_latest_verified_skips_bad_newest_to_good_older(tmp_path):
+    """Auto-resume must land on the newest GOOD checkpoint: a corrupt
+    newest step and a truncated middle step are both skipped."""
+    for s in (1, 2, 3):
+        ckpt.save(str(tmp_path), s, _TREE)
+    faults.flip_byte(str(tmp_path), 3)
+    assert ckpt.latest_verified_step(str(tmp_path)) == 2
+    faults.truncate_leaf(str(tmp_path), 2)
+    assert ckpt.latest_verified_step(str(tmp_path)) == 1
+    faults.tamper_index_hash(str(tmp_path), 1)
+    assert ckpt.latest_verified_step(str(tmp_path)) is None
+
+
+def test_latest_verified_gcs_leftover_tmp_dirs(tmp_path):
+    """A crash mid-save leaks ``.tmp_ckpt_*``; resume GCs it and never
+    mistakes it for a checkpoint."""
+    ckpt.save(str(tmp_path), 4, _TREE)
+    tmp = faults.leftover_tmp(str(tmp_path))
+    assert os.path.isdir(tmp)
+    assert ckpt.latest_verified_step(str(tmp_path)) == 4
+    assert not os.path.isdir(tmp)
+    # gc=False leaves alien dirs alone (an in-flight writer may own them)
+    tmp2 = faults.leftover_tmp(str(tmp_path))
+    assert ckpt.latest_verified_step(str(tmp_path), gc=False) == 4
+    assert os.path.isdir(tmp2)
+
+
+def test_verify_accepts_legacy_index_without_hashes(tmp_path):
+    """Format-1 checkpoints (pre-integrity) still verify on existence +
+    leaf count, so old runs stay resumable."""
+    ckpt.save(str(tmp_path), 1, _TREE)
+    ipath = tmp_path / "step_00000001" / "index.json"
+    with open(ipath) as f:
+        index = json.load(f)
+    for leaf in index["leaves"]:
+        leaf.pop("sha256"), leaf.pop("bytes")
+    index.pop("format")
+    with open(ipath, "w") as f:
+        json.dump(index, f)
+    assert ckpt.verify(str(tmp_path), 1)["n"] == 2
+    assert ckpt.latest_verified_step(str(tmp_path)) == 1
+
+
+# ---------------------------------------------------------------------------
+# retention / GC keep policy
+# ---------------------------------------------------------------------------
+
+
+def test_gc_keep_last_k(tmp_path):
+    for s in range(1, 7):
+        ckpt.save(str(tmp_path), s, _TREE)
+    removed = ckpt.gc_steps(str(tmp_path), keep_last=2)
+    assert removed == [1, 2, 3, 4]
+    assert _steps_on_disk(tmp_path) == [5, 6]
+
+
+def test_gc_keep_last_1_never_removes_newest(tmp_path):
+    """K=1 edge: everything but the newest goes; K=0 is rejected."""
+    for s in (3, 9):
+        ckpt.save(str(tmp_path), s, _TREE)
+    assert ckpt.gc_steps(str(tmp_path), keep_last=1) == [3]
+    assert _steps_on_disk(tmp_path) == [9]
+    assert ckpt.gc_steps(str(tmp_path), keep_last=1) == []
+    with pytest.raises(ckpt.CheckpointError, match="keep_last"):
+        ckpt.gc_steps(str(tmp_path), keep_last=0)
+
+
+def test_gc_keep_every_n_boundary(tmp_path):
+    """keep-every-N: multiples of N survive forever, including step N
+    itself exactly at the boundary; non-multiples outside the K window
+    go."""
+    for s in range(1, 11):
+        ckpt.save(str(tmp_path), s, _TREE)
+    ckpt.gc_steps(str(tmp_path), keep_last=2, keep_every=5)
+    assert _steps_on_disk(tmp_path) == [5, 9, 10]  # 5,10 kept; 9,10 last-2
+    ckpt.save(str(tmp_path), 11, _TREE)
+    ckpt.gc_steps(str(tmp_path), keep_last=2, keep_every=5)
+    assert _steps_on_disk(tmp_path) == [5, 10, 11]
+
+
+# ---------------------------------------------------------------------------
+# async manager
+# ---------------------------------------------------------------------------
+
+
+def test_manager_async_save_matches_sync(tmp_path):
+    """Async and sync paths must byte-agree: same index hashes, same
+    restored values, meta riding the same atomic rename."""
+    a = ckpt.AsyncCheckpointManager(str(tmp_path / "a"))
+    a.save_async(1, _TREE, meta={"k": 1})
+    a.close()
+    s = ckpt.AsyncCheckpointManager(str(tmp_path / "s"), sync=True)
+    s.save(1, _TREE, meta={"k": 1})
+    with open(tmp_path / "a" / "step_00000001" / "index.json") as f:
+        ia = json.load(f)
+    with open(tmp_path / "s" / "step_00000001" / "index.json") as f:
+        ib = json.load(f)
+    assert [x["sha256"] for x in ia["leaves"]] == \
+        [x["sha256"] for x in ib["leaves"]]
+    assert ckpt.load_meta(str(tmp_path / "a"), 1) == {"k": 1}
+    got = ckpt.restore(str(tmp_path / "a"), 1, _TREE)
+    np.testing.assert_array_equal(np.asarray(got["a"]), _TREE["a"])
+    assert a.stats["async_saves"] == 1 and s.stats["sync_saves"] == 1
+
+
+def test_manager_joins_inflight_write_before_next_save(tmp_path):
+    """A second save (or shutdown) joins the in-flight write — step dirs
+    appear in order and at most one background writer exists."""
+    gate = threading.Event()
+    orig = ckpt_io.write_snapshot
+
+    def slow(directory, step, arrs, treedef, meta=None):
+        if step == 1:
+            gate.wait(timeout=10.0)
+        return orig(directory, step, arrs, treedef, meta=meta)
+
+    m = ckpt.AsyncCheckpointManager(str(tmp_path))
+    ckpt_io_write, ckpt_io.write_snapshot = \
+        ckpt_io.write_snapshot, slow
+    try:
+        m.save_async(1, _TREE)
+        assert m.in_flight
+        gate.set()
+        m.save_async(2, _TREE)  # joins step 1 first
+        assert ckpt.verify(str(tmp_path), 1)
+        m.close()
+        assert ckpt.verify(str(tmp_path), 2)
+    finally:
+        ckpt_io.write_snapshot = ckpt_io_write
+
+
+def test_manager_surfaces_write_error_on_next_call_then_heals(tmp_path):
+    """A failed background write raises on the NEXT wait()/save; the
+    manager retries transient OSErrors with backoff before giving up, and
+    keeps working once the fault clears."""
+    m = ckpt.AsyncCheckpointManager(str(tmp_path), max_retries=2,
+                                    backoff_s=0.005)
+    with faults.failing_writes(100) as fired:
+        m.save_async(1, _TREE)
+        with pytest.raises(ckpt.CheckpointError, match="step 1 failed"):
+            m.wait()
+    assert fired["fired"] == 3          # 1 try + 2 retries, capped backoff
+    assert m.stats["retried_writes"] == 2 and m.stats["failed_writes"] == 1
+    # no torn step dir was published
+    assert ckpt.latest_verified_step(str(tmp_path)) is None
+    m.save_async(2, _TREE)              # healed: works again
+    m.close()
+    assert ckpt.latest_verified_step(str(tmp_path)) == 2
+
+
+def test_manager_transient_fault_retries_through(tmp_path):
+    """A fault that clears within the retry budget never surfaces."""
+    m = ckpt.AsyncCheckpointManager(str(tmp_path), max_retries=3,
+                                    backoff_s=0.005)
+    with faults.failing_writes(2):
+        m.save_async(1, _TREE)
+        m.wait()                        # no raise: retries absorbed it
+    assert m.stats["retried_writes"] == 2
+    assert ckpt.verify(str(tmp_path), 1)
+
+
+def test_manager_retention_rides_saves(tmp_path):
+    m = ckpt.AsyncCheckpointManager(str(tmp_path), keep_last=2,
+                                    keep_every=4)
+    for s in range(1, 7):
+        m.save(s, _TREE)
+    m.close()
+    assert _steps_on_disk(tmp_path) == [4, 5, 6]
+    assert m.stats["gc_removed"] == 3

@@ -154,6 +154,56 @@ def test_batcher_delivers_encoder_errors():
         mb.submit("nope", {"v": np.zeros((3,), np.float32)})
 
 
+def test_batcher_flush_thread_bug_fails_pending_futures(monkeypatch):
+    """Regression (ISSUE-6): an exception raised in the flush thread
+    OUTSIDE the per-cohort encode path used to kill the worker and leave
+    every pending future unresolved — callers blocked forever. Now every
+    pending request fails with that exception and the worker survives."""
+    from repro.serving.embed import batcher as batcher_mod
+
+    def poisoned(payload):
+        raise ValueError("poisoned shape-sig")
+    monkeypatch.setattr(batcher_mod, "_shape_sig", poisoned)
+    mb = MicroBatcher({"t": _sum_encoder, "u": _sum_encoder},
+                      buckets=(1, 2, 4), max_delay_ms=5.0,
+                      request_timeout_s=10.0)
+    try:
+        f1 = mb.submit_many("t", {"v": np.ones((2, 3), np.float32)})
+        f2 = mb.submit_many("u", {"v": np.ones((2, 3), np.float32)})
+        with pytest.raises(ValueError, match="poisoned"):
+            f1.result(timeout=5.0)
+        with pytest.raises(ValueError, match="poisoned"):
+            f2.result(timeout=5.0)
+        assert mb.running            # the worker did not die
+    finally:
+        mb.stop()
+    assert mb.stats["worker_errors"] >= 1
+
+
+def test_batcher_request_deadline_bounds_bare_result():
+    """A blocked encode fn wedges the flush thread where no exception
+    plumbing can reach — the per-request deadline still bounds a bare
+    ``result()`` so classify/embed_* can never hang indefinitely."""
+    from concurrent.futures import TimeoutError as FutTimeout
+    release = time.monotonic() + 1.5
+
+    def wedged(batch):
+        while time.monotonic() < release:
+            time.sleep(0.01)
+        return jnp.sum(batch["v"], axis=1)[:, None]
+
+    mb = MicroBatcher({"t": wedged}, buckets=(1, 2), max_delay_ms=1.0,
+                      request_timeout_s=0.25)
+    t0 = time.monotonic()
+    try:
+        fut = mb.submit_many("t", {"v": np.ones((1, 3), np.float32)})
+        with pytest.raises(FutTimeout):
+            fut.result()             # NO timeout argument — must not hang
+        assert time.monotonic() - t0 < 1.0
+    finally:
+        mb.stop()
+
+
 # ---------------------------------------------------------------------------
 # class-embedding registry
 # ---------------------------------------------------------------------------

@@ -1,0 +1,109 @@
+"""Crash/preemption fault-injection harness (DESIGN.md §10.4).
+
+The end-to-end acceptance check lives in tests/distributed_checks.py
+``ckpt_fault`` and runs in a SUBPROCESS on the 8-device simulated mesh
+(device-count pinning — see tests/conftest.py): a training run hard-killed
+mid-checkpoint-write (its own grandchild process dying by ``os._exit``
+through the write fault hook), whose newest surviving checkpoint is then
+bit-rotted, must ``--resume auto`` from the older verified step and replay
+the uninterrupted run's per-step losses bit-exactly; a SIGTERM-preempted
+run must write a final sync checkpoint and resume bit-exactly as well.
+
+The in-process tests cover the trainer-facing recovery pieces that don't
+need a multi-device mesh: async-write failure degrading to sync saves, and
+``--resume off/latest`` semantics.
+"""
+import os
+import subprocess
+import sys
+import types
+
+import numpy as np
+
+_CHECKS = os.path.join(os.path.dirname(__file__), "distributed_checks.py")
+
+
+def test_killed_and_resumed_run_replays_losses_bit_exactly():
+    """ISSUE-6 acceptance: kill mid-save -> torn tmp + corrupt newest ->
+    auto-resume from the verified step -> bit-exact losses; plus the
+    SIGTERM preemption leg. Slowest check in the suite (three training
+    runs + a victim subprocess)."""
+    env = dict(os.environ)
+    env["JAX_PLATFORMS"] = "cpu"
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                        + " --xla_force_host_platform_device_count=8")
+    proc = subprocess.run([sys.executable, _CHECKS, "ckpt_fault"],
+                          capture_output=True, text=True, timeout=900,
+                          env=env)
+    assert proc.returncode == 0, (
+        f"distributed_checks.py ckpt_fault failed\n--- stdout ---\n"
+        f"{proc.stdout}\n--- stderr ---\n{proc.stderr[-4000:]}")
+    assert "PASS ckpt_fault" in proc.stdout
+
+
+def _lm_args(**kw):
+    base = dict(arch="llama3.2-1b", smoke=True, objective="lm", steps=3,
+                batch=4, seq=32, lr=1e-3, seed=0, sharding="basic_ws",
+                remat="basic", model_parallel=1, log_every=100,
+                ckpt_dir=None, ckpt_every=0, stop_after=None)
+    base.update(kw)
+    return types.SimpleNamespace(**base)
+
+
+def test_async_write_failure_degrades_to_sync(tmp_path, capsys):
+    """A persistent async-write failure must not lose the run: the trainer
+    flips the manager to sync mode and re-writes the step blocking, so
+    every checkpoint still lands on disk."""
+    from repro import checkpoint as ckpt
+    from repro.checkpoint import faults
+    from repro.launch.train_distributed import train
+
+    import pytest
+
+    d = str(tmp_path / "ck")
+    # every async attempt fails (manager retries 3 times per write), but
+    # the fallback sync path heals because the fault budget runs out
+    with faults.failing_writes(4, message="disk went away"):
+        train(_lm_args(ckpt_dir=d, ckpt_every=1))
+    out = capsys.readouterr().out
+    assert "degrading to sync" in out
+    assert ckpt.latest_verified_step(d) == 3
+    # step 1's async write died after retries; the failure surfaced at the
+    # step-2 save, which the trainer re-wrote SYNC — step 1 is superseded,
+    # not silently torn
+    with pytest.raises(ckpt.CheckpointError):
+        ckpt.verify(d, 1)
+    for step in (2, 3):
+        ckpt.verify(d, step)
+
+
+def test_resume_off_ignores_checkpoints(tmp_path):
+    from repro import checkpoint as ckpt
+    from repro.launch.train_distributed import train
+
+    d = str(tmp_path / "ck")
+    full = train(_lm_args(ckpt_dir=d, ckpt_every=1))
+    assert ckpt.latest_verified_step(d) == 3
+    fresh = train(_lm_args(ckpt_dir=d, ckpt_every=0, resume="off"))
+    np.testing.assert_array_equal(np.asarray(fresh), np.asarray(full))
+
+
+def test_resume_auto_skips_corrupt_latest_in_trainer(tmp_path, capsys):
+    """Trainer-level: --resume auto lands on the verified step when the
+    newest checkpoint is corrupt; --resume latest would have tried (and
+    failed on) the corrupt one."""
+    import pytest
+
+    from repro import checkpoint as ckpt
+    from repro.checkpoint import faults
+    from repro.launch.train_distributed import train
+
+    d = str(tmp_path / "ck")
+    train(_lm_args(ckpt_dir=d, ckpt_every=1))
+    faults.truncate_leaf(d, 3)
+    with pytest.raises(ckpt.CheckpointError):
+        # trusting mode restores the newest dir blindly — and fails loudly
+        train(_lm_args(ckpt_dir=d, steps=4, resume="latest"))
+    # ... auto mode skips it (its final save then re-writes/heals step 3)
+    train(_lm_args(ckpt_dir=d, steps=3))
+    assert "resumed from step 2 (--resume auto)" in capsys.readouterr().out
