@@ -1,0 +1,197 @@
+"""Telemetry overhead bench (DESIGN.md §11.4).
+
+Observability is only free if it stays off the hot path: the trainer's
+per-step instrumentation is two trace spans (data_wait / device_step), a
+handful of histogram observes, and one runlog JSONL line. The claim this
+bench gates is "instrumented step <= 1.05x bare step". Measuring that as
+a ratio of two wall-clock loops flaps on shared hosts — load drift over
+seconds swings ANY multi-ms workload (matmul or sleep) by more than the
+5% budget itself — so the gated form measures the telemetry cost
+DIRECTLY (a tight loop of the per-step instrumentation with no workload:
+pure host CPU microseconds, stable under contention) and requires it to
+beat a 5%-of-bare-step budget. Same claim, no noisy subtraction.
+
+  bare_ref/step_loop      N_STEPS bare steps of a clock-based simulated
+                          device-blocked step (the trainer's steady
+                          state) — the ``*_ref`` host-drift anchor
+                          (scripts/check_bench.py) and the budget's base
+  step/telemetry          N_STEPS iterations of the full per-step
+                          telemetry alone: tracer spans, registry
+                          histogram observe, RunLogger.log_step to a real
+                          file. ``must_beat: step/overhead_budget`` — THE
+                          1.05x GATE
+  step/overhead_budget    synthetic: 5% of bare_ref/step_loop. UNGATED
+                          (derived, not timed) — exists so must_beat's
+                          strictly-faster semantics express "telemetry
+                          stays within 5% of the step it instruments"
+  step/instrumented       the workload loop with telemetry riding along,
+                          UNGATED informational (it carries the host
+                          noise the direct form avoids)
+  micro/*                 per-op costs (span pair, histogram observe,
+                          runlog step record), UNGATED — what the budget
+                          is spent on
+
+Committed as BENCH_obs.json and gated through ``benchmarks/run.py
+--json``: the must_beat invariant carries the <=1.05x overhead claim on
+every host; absolute timings ride the 1.3x cross-run gate where they
+clear the 50ms interpret floor.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import statistics
+import tempfile
+import time
+
+import numpy as np
+
+from benchmarks.common import csv_line, write_json
+from repro.obs import metrics as obs_metrics
+from repro.obs import runlog as obs_runlog
+from repro.obs import trace as obs_trace
+
+N_STEPS = 30                  # steps per timed loop
+REPEATS = 7                   # median-of-N (scheduler-noise robustness)
+STEP_S = 0.005                # simulated device-blocked step: smoke scale
+OVERHEAD_BUDGET = 0.05        # telemetry must cost <5% of the bare step
+
+
+def _workload():
+    """The fixed per-step work: block STEP_S on the 'device' (wall clock —
+    the steady-state trainer is device-bound, and sleep overshoot under
+    load hits bare and instrumented loops alike), plus a token host-side
+    reduction standing in for the loss fetch."""
+    rng = np.random.default_rng(0)
+    a = rng.standard_normal((64, 64)).astype(np.float32)
+
+    def step():
+        time.sleep(STEP_S)
+        return float(a.sum())
+    return step
+
+
+def _bare_loop(step_fn) -> float:
+    t0 = time.perf_counter()
+    for _ in range(N_STEPS):
+        step_fn()
+    return time.perf_counter() - t0
+
+
+def _instrumented_loop(step_fn, tracer, runlog, hist) -> float:
+    """The trainer's per-step telemetry, verbatim shape (_run_loop):
+    data_wait span, device_step span, histogram observe, log_step line.
+    ``step_fn=None`` measures the telemetry alone — the gated form."""
+    t0 = time.perf_counter()
+    for i in range(N_STEPS):
+        t_iter = time.perf_counter()
+        with obs_trace.span(tracer, "data_wait", step=i):
+            pass                                  # batch already prefetched
+        t_wait = time.perf_counter() - t_iter
+        with obs_trace.span(tracer, "device_step", step=i):
+            out = step_fn() if step_fn is not None else 0.0
+        step_s = time.perf_counter() - t_iter
+        hist.observe(step_s)
+        runlog.log_step(i, loss=float(out), data_wait_s=t_wait,
+                        device_step_s=step_s - t_wait, ckpt_stall_s=0.0,
+                        step_s=step_s, examples_per_sec=N_STEPS / step_s)
+    return time.perf_counter() - t0
+
+
+def run(json_path: str | None = None):
+    """Run the bench; optionally write the BENCH_obs.json payload."""
+    step_fn = _workload()
+    step_fn()                                     # warm (BLAS threads, pages)
+
+    tmp = tempfile.mkdtemp(prefix="obs_bench_")
+    registry = obs_metrics.Registry()
+    hist = registry.histogram("bench/step_s")
+    tracer = obs_trace.Tracer()
+    # interleaved median-of-N: host drift hits all three variants equally,
+    # and median (not min) keeps one lucky/unlucky trial from skewing the
+    # budget base or the informational ratio
+    bares, insts, tels = [], [], []
+    with obs_runlog.RunLogger(os.path.join(tmp, "runlog.jsonl")) as runlog:
+        _instrumented_loop(step_fn, tracer, runlog, hist)   # warm file path
+        for _ in range(REPEATS):
+            bares.append(_bare_loop(step_fn))
+            insts.append(_instrumented_loop(step_fn, tracer, runlog, hist))
+            tels.append(_instrumented_loop(None, tracer, runlog, hist))
+    us_bare = round(statistics.median(bares) * 1e6, 1)
+    us_inst = round(statistics.median(insts) * 1e6, 1)
+    us_tel = round(statistics.median(tels) * 1e6, 1)
+
+    entries = {
+        "bare_ref/step_loop": {
+            "us": us_bare,
+            "per_step_us": round(us_bare / N_STEPS, 1)},
+        "step/overhead_budget": {
+            "us": round(us_bare * OVERHEAD_BUDGET, 1), "ungated": True,
+            "budget_frac_of_bare": OVERHEAD_BUDGET},
+        "step/telemetry": {
+            "us": us_tel, "must_beat": "step/overhead_budget",
+            "per_step_us": round(us_tel / N_STEPS, 1),
+            "frac_of_bare_step": round(us_tel / us_bare, 4)},
+        "step/instrumented": {
+            "us": us_inst, "ungated": True,
+            "per_step_us": round(us_inst / N_STEPS, 1),
+            "overhead_vs_bare": round(us_inst / us_bare, 4)},
+    }
+    csv_line("obs/bare_ref/step_loop", us_bare, f"{N_STEPS}steps")
+    csv_line("obs/step/telemetry", us_tel,
+             f"{us_tel / us_bare:.4f}_of_bare")
+    csv_line("obs/step/instrumented", us_inst,
+             f"{us_inst / us_bare:.3f}x_bare")
+
+    # per-op micro costs (informational: what the 5% budget is spent on)
+    reg2 = obs_metrics.Registry()
+    h2 = reg2.histogram("micro/x")
+    tr2 = obs_trace.Tracer()
+    n = 10_000
+    t0 = time.perf_counter()
+    for i in range(n):
+        with obs_trace.span(tr2, "s", step=i):
+            pass
+    us_span = round((time.perf_counter() - t0) / n * 1e6, 3)
+    t0 = time.perf_counter()
+    for _ in range(n):
+        h2.observe(0.01)
+    us_obs = round((time.perf_counter() - t0) / n * 1e6, 3)
+    with obs_runlog.RunLogger(os.path.join(tmp, "micro.jsonl")) as rl2:
+        t0 = time.perf_counter()
+        for i in range(1000):
+            rl2.log_step(i, loss=1.0, data_wait_s=0.0, device_step_s=0.01,
+                         ckpt_stall_s=0.0, step_s=0.01,
+                         examples_per_sec=100.0)
+        us_line = round((time.perf_counter() - t0) / 1000 * 1e6, 3)
+    for name, us in (("micro/span_pair", us_span),
+                     ("micro/hist_observe", us_obs),
+                     ("micro/runlog_step", us_line)):
+        entries[name] = {"us": us, "ungated": True}
+        csv_line(f"obs/{name}", us, "per_op")
+
+    result = {
+        "meta": {
+            "backend": "host",     # pure-python telemetry, clock workload
+            "interpret": True,     # keeps the 50ms jitter floor active
+            "shape": {"n_steps": N_STEPS, "step_s": STEP_S,
+                      "budget": OVERHEAD_BUDGET},
+        },
+        "entries": entries,
+    }
+    if json_path:
+        write_json(json_path, result)
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__.split("\n\n")[0])
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write BENCH_obs.json-style output here")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    run(json_path=args.json)
+
+
+if __name__ == "__main__":
+    main()

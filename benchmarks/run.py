@@ -42,11 +42,15 @@ SUITES = {
     "ckpt": ("benchmarks.ckpt_bench",
              "checkpoint save stall: blocking vs async manager, plus "
              "verified restore (gated, DESIGN.md §10.5)"),
+    "obs": ("benchmarks.obs_bench",
+            "telemetry overhead: per-step instrumentation vs 5%-of-step "
+            "budget (gated, DESIGN.md §11.4)"),
 }
 TABLES = {name: mod for name, (mod, _) in SUITES.items()}
 
 # slow full-sweep benches only run when selected explicitly (or via --json)
-_OPT_IN = {"kernels", "serving", "distributed", "tower", "data", "ckpt"}
+_OPT_IN = {"kernels", "serving", "distributed", "tower", "data", "ckpt",
+           "obs"}
 
 _ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
@@ -58,6 +62,7 @@ GATED = {
     "tower": os.path.join(_ROOT, "BENCH_tower.json"),
     "data": os.path.join(_ROOT, "BENCH_data.json"),
     "ckpt": os.path.join(_ROOT, "BENCH_ckpt.json"),
+    "obs": os.path.join(_ROOT, "BENCH_obs.json"),
 }
 
 

@@ -9,6 +9,8 @@ modules lacks a docstring:
   - every module under src/repro/models/ (the tower runtime)
   - every module under src/repro/data/ incl. data/sharded/ (the input
     subsystem, ISSUE-5)
+  - every module under src/repro/checkpoint/ (ISSUE-6)
+  - every module under src/repro/obs/ (the telemetry subsystem, ISSUE-7)
 
 "Public" = top-level ``def``/``class`` whose name has no leading
 underscore, plus the module itself (module docstring required). Purely
@@ -36,6 +38,7 @@ COVERED_GLOBS = (
     os.path.join("src", "repro", "data", "*.py"),
     os.path.join("src", "repro", "data", "sharded", "*.py"),
     os.path.join("src", "repro", "checkpoint", "*.py"),
+    os.path.join("src", "repro", "obs", "*.py"),
 )
 
 

@@ -1,0 +1,98 @@
+"""Runlog schema gate: validate a runlog JSONL against obs schema v1.
+
+Checks every record of a runlog (committed sample or fresh run output)
+with ``repro.obs.runlog.validate_record`` — schema version, known kinds,
+required per-kind keys — plus file-level structure: the first record
+must be ``run_start``, step records must carry the full time-breakdown
+(``data_wait_s`` / ``device_step_s`` / ``ckpt_stall_s``), and resumed
+segments must be announced by ``resume`` markers (step numbers may only
+restart right after one).
+
+  PYTHONPATH=src python scripts/check_runlog.py <runlog.jsonl> [...]
+
+Exit 1 with one line per offender; exit 0 with a summary when clean.
+Wired into tier-1 via tests/test_obs.py (the committed
+``artifacts/runlog_sample.jsonl``) and tests/test_train_distributed.py
+(a fresh smoke run's output).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+if os.path.join(_ROOT, "src") not in sys.path:
+    sys.path.insert(0, os.path.join(_ROOT, "src"))
+
+from repro.obs import runlog as rl  # noqa: E402
+
+
+def check_file(path: str) -> list[str]:
+    """All schema violations in ``path`` as '<path>:<line>: <error>'
+    lines (empty = valid)."""
+    failures = []
+    records = []
+    with open(path) as f:
+        lines = f.read().splitlines()
+    for i, line in enumerate(lines):
+        if not line.strip():
+            continue
+        try:
+            rec = json.loads(line)
+        except json.JSONDecodeError as e:
+            if i == len(lines) - 1:
+                continue            # torn final line: crash mid-write
+            failures.append(f"{path}:{i + 1}: unparseable JSON ({e})")
+            continue
+        for err in rl.validate_record(rec):
+            failures.append(f"{path}:{i + 1}: {err}")
+        records.append((i + 1, rec))
+    if not records:
+        failures.append(f"{path}:1: empty runlog")
+        return failures
+    if records[0][1].get("kind") != "run_start":
+        failures.append(f"{path}:{records[0][0]}: first record is "
+                        f"{records[0][1].get('kind')!r}, not 'run_start'")
+    prev_step, resume_pending = None, False
+    for lineno, rec in records:
+        kind = rec.get("kind")
+        if kind == "resume":
+            resume_pending = True
+        elif kind == "step":
+            step = rec.get("step")
+            if prev_step is not None and isinstance(step, int) \
+                    and step <= prev_step and not resume_pending:
+                failures.append(
+                    f"{path}:{lineno}: step {step} after {prev_step} "
+                    f"without a resume marker (interleaved runs?)")
+            if isinstance(step, int):
+                prev_step = step
+            resume_pending = False
+    return failures
+
+
+def main(argv=None) -> int:
+    """CLI entry: validate each runlog path; 0 = all clean."""
+    ap = argparse.ArgumentParser(
+        description="validate runlog JSONL files against the obs schema "
+                    "(v%d)" % rl.SCHEMA_VERSION)
+    ap.add_argument("paths", nargs="+", help="runlog.jsonl file(s)")
+    args = ap.parse_args(argv)
+    failed = 0
+    for path in args.paths:
+        failures = check_file(path)
+        for line in failures:
+            print(f"check_runlog: INVALID {line}", file=sys.stderr)
+        if failures:
+            failed += 1
+        else:
+            n = sum(1 for _ in rl.iter_runlog(path))
+            print(f"check_runlog: OK {path} ({n} records, schema v"
+                  f"{rl.SCHEMA_VERSION})")
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -34,18 +34,30 @@ import threading
 import time
 
 from repro.checkpoint import io
+from repro.obs import metrics as obs_metrics
+
+_STAT_KEYS = ("saves", "async_saves", "sync_saves", "retried_writes",
+              "failed_writes", "gc_removed", "degraded")
 
 
 class AsyncCheckpointManager:
     """Background-writing checkpointer with retry, deferred-error
     surfacing, and retention GC (see module docstring for the contract).
     Use as a context manager or call ``close()`` so the final write is
-    joined before process exit."""
+    joined before process exit.
+
+    Telemetry (DESIGN.md §11): counters, the ``ckpt/write_latency_s``
+    histogram (full serialize+hash+rename, observed on whichever thread
+    writes) and the ``ckpt/last_stall_s`` gauge (how long the last
+    ``save*`` held the CALLER — the step-path cost) live on an
+    ``obs.metrics.Registry`` (``metrics`` attribute; pass ``registry=``
+    to share the run's). The legacy dict-shaped ``stats`` accessor is a
+    read-only view over those counters."""
 
     def __init__(self, directory: str, *, sync: bool = False,
                  keep_last: int = 0, keep_every: int = 0,
                  max_retries: int = 3, backoff_s: float = 0.05,
-                 backoff_max_s: float = 1.0):
+                 backoff_max_s: float = 1.0, registry=None):
         self.directory = directory
         self.sync = bool(sync)
         self.keep_last = int(keep_last)
@@ -56,9 +68,24 @@ class AsyncCheckpointManager:
         self._thread = None
         self._error = None
         self._error_step = None
-        self.stats = {"saves": 0, "async_saves": 0, "sync_saves": 0,
-                      "retried_writes": 0, "failed_writes": 0,
-                      "gc_removed": 0}
+        self.metrics = registry if registry is not None \
+            else obs_metrics.Registry()
+        self._c = {k: self.metrics.counter(f"ckpt/{k}") for k in _STAT_KEYS}
+        self._h_write = self.metrics.histogram("ckpt/write_latency_s")
+        self._g_stall = self.metrics.gauge("ckpt/last_stall_s")
+
+    @property
+    def stats(self) -> dict:
+        """Dict-shaped counter view (the pre-§11 ad-hoc ``stats`` dict
+        shape, now backed by the shared registry)."""
+        return {k: int(c.value) for k, c in self._c.items()}
+
+    def degrade_to_sync(self) -> None:
+        """Flip to blocking saves permanently (the trainer's response to
+        a persistent async-write failure) and count the transition."""
+        if not self.sync:
+            self.sync = True
+            self._c["degraded"].inc()
 
     # -- lifecycle ---------------------------------------------------------
     @property
@@ -111,12 +138,14 @@ class AsyncCheckpointManager:
         """Blocking save (the degraded/final-checkpoint path): join any
         in-flight write, then snapshot + serialize + rename on the calling
         thread, with the same retry/backoff. Returns the step-dir path."""
+        t0 = time.perf_counter()
         self.wait()
         arrs, treedef = io.snapshot(tree)
         path = self._write_with_retry(step, arrs, treedef, meta)
         self._gc()
-        self.stats["saves"] += 1
-        self.stats["sync_saves"] += 1
+        self._c["saves"].inc()
+        self._c["sync_saves"].inc()
+        self._g_stall.set(time.perf_counter() - t0)
         return path
 
     def save_async(self, step: int, tree, meta=None) -> None:
@@ -124,6 +153,7 @@ class AsyncCheckpointManager:
         background thread. Raises a previous write's deferred failure
         before snapshotting (in which case THIS save does not start —
         callers fall back, e.g. to ``save_sync``)."""
+        t0 = time.perf_counter()
         self.wait()
         arrs, treedef = io.snapshot(tree)
 
@@ -132,25 +162,29 @@ class AsyncCheckpointManager:
                 self._write_with_retry(step, arrs, treedef, meta)
                 self._gc()
             except BaseException as e:  # noqa: BLE001 — surfaced in wait()
-                self.stats["failed_writes"] += 1
+                self._c["failed_writes"].inc()
                 self._error, self._error_step = e, step
         self._thread = threading.Thread(target=work, daemon=True,
                                         name=f"ckpt-save-{step}")
         self._thread.start()
-        self.stats["saves"] += 1
-        self.stats["async_saves"] += 1
+        self._c["saves"].inc()
+        self._c["async_saves"].inc()
+        self._g_stall.set(time.perf_counter() - t0)
 
     # -- internals ---------------------------------------------------------
     def _write_with_retry(self, step, arrs, treedef, meta):
         delay = self.backoff_s
         for attempt in range(self.max_retries + 1):
+            t0 = time.perf_counter()
             try:
-                return io.write_snapshot(self.directory, step, arrs,
+                path = io.write_snapshot(self.directory, step, arrs,
                                          treedef, meta=meta)
+                self._h_write.observe(time.perf_counter() - t0)
+                return path
             except OSError:
                 if attempt == self.max_retries:
                     raise
-                self.stats["retried_writes"] += 1
+                self._c["retried_writes"].inc()
                 time.sleep(delay)
                 delay = min(delay * 2.0, self.backoff_max_s)
 
@@ -158,4 +192,4 @@ class AsyncCheckpointManager:
         if self.keep_last > 0:
             removed = io.gc_steps(self.directory, keep_last=self.keep_last,
                                   keep_every=self.keep_every)
-            self.stats["gc_removed"] += len(removed)
+            self._c["gc_removed"].inc(len(removed))

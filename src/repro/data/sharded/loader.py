@@ -31,6 +31,7 @@ have produced.
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Optional, Sequence, Tuple
 
 import numpy as np
@@ -38,6 +39,7 @@ import numpy as np
 from repro.data.pipeline import Prefetcher, host_rng
 from repro.data.sharded.augment import apply_ops
 from repro.data.synthetic import World, contrastive_batch
+from repro.obs import trace as obs_trace
 
 # tags the augmentation stream so it never collides with the batch-draw
 # stream at the same (seed, host, step) key
@@ -117,7 +119,8 @@ class ShardedLoader:
     def __init__(self, world: World, tok, global_batch: int, *,
                  layout: HostLayout = HostLayout(), seed: int = 0,
                  text_len: int = 16, classes: Optional[np.ndarray] = None,
-                 augment: Sequence = (), start_step: int = 0):
+                 augment: Sequence = (), start_step: int = 0,
+                 registry=None, tracer=None):
         if global_batch % layout.n_hosts:
             raise ValueError(
                 f"global batch {global_batch} must be divisible by "
@@ -131,6 +134,17 @@ class ShardedLoader:
         self.classes = classes
         self.augment = tuple(augment)
         self._step = int(start_step)
+        # telemetry (DESIGN.md §11): per-host block-generation timing into
+        # ``registry`` histograms and ``tracer`` spans on pid lane
+        # 1+host_id (the trace's simulated-host lanes); both optional and
+        # free when None
+        self._registry = registry
+        self._tracer = tracer
+        self._h_gen = None if registry is None else {
+            h: registry.histogram("data/gen_seconds", host=h)
+            for h in range(layout.n_hosts)}
+        self._h_global = None if registry is None else \
+            registry.histogram("data/global_batch_seconds")
 
     @property
     def local_batch(self) -> int:
@@ -139,14 +153,20 @@ class ShardedLoader:
 
     # -- batch materialization --------------------------------------------
     def _block(self, step: int, host_id: int) -> dict:
-        rng = host_rng(self.seed, host_id, step)
-        batch, _ = contrastive_batch(self.world, self.tok, self.local_batch,
-                                     rng, text_len=self.text_len,
-                                     classes=self.classes)
-        if self.augment:
-            batch["images"]["image"] = apply_ops(
-                self.augment, batch["images"]["image"],
-                aug_rng(self.seed, host_id, step))
+        t0 = time.perf_counter()
+        with obs_trace.span(self._tracer, "host_block", pid=1 + host_id,
+                            step=step, host=host_id):
+            rng = host_rng(self.seed, host_id, step)
+            batch, _ = contrastive_batch(self.world, self.tok,
+                                         self.local_batch, rng,
+                                         text_len=self.text_len,
+                                         classes=self.classes)
+            if self.augment:
+                batch["images"]["image"] = apply_ops(
+                    self.augment, batch["images"]["image"],
+                    aug_rng(self.seed, host_id, step))
+        if self._h_gen is not None:
+            self._h_gen[host_id].observe(time.perf_counter() - t0)
         return batch
 
     def local_batch_at(self, step: int) -> dict:
@@ -159,8 +179,12 @@ class ShardedLoader:
         concatenated in host order (the single-process materialization and
         the oracle the two-host test reassembles against)."""
         import jax
+        t0 = time.perf_counter()
         blocks = [self._block(step, h) for h in range(self.layout.n_hosts)]
-        return jax.tree.map(lambda *xs: np.concatenate(xs, axis=0), *blocks)
+        out = jax.tree.map(lambda *xs: np.concatenate(xs, axis=0), *blocks)
+        if self._h_global is not None:
+            self._h_global.observe(time.perf_counter() - t0)
+        return out
 
     # -- iteration ---------------------------------------------------------
     def __iter__(self):

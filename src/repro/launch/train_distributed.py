@@ -49,6 +49,15 @@ step dirs are skipped, stale ``.tmp_ckpt_*`` dirs GC'd. SIGTERM (the
 cluster preemption signal) triggers a final sync checkpoint after the
 in-flight step, and persistent async-write failures degrade the run to
 sync checkpointing after capped-backoff retries.
+
+Telemetry (DESIGN.md §11): with ``--run-dir`` (default: ``--ckpt-dir``)
+the loop streams one schema-versioned JSONL record per step to
+``<run-dir>/runlog.jsonl`` — loss, grad-norm, examples/sec, and the
+data-wait / device-step / ckpt-stall breakdown — plus checkpoint /
+degrade / resume marker records, and exports a Chrome ``trace_event``
+JSON (``trace.json``, Perfetto-viewable, per-host pid lanes) on exit.
+``--log-every N`` paces the human stdout line, ``--quiet`` silences it;
+summarize a run with ``python -m repro.obs.report <run-dir>/runlog.jsonl``.
 """
 from __future__ import annotations
 
@@ -63,6 +72,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import checkpoint as ckpt
+from repro import obs
+from repro.obs import trace as obs_trace
 from repro.configs import get_arch, smoke_variant
 from repro.core import sharding as shd
 from repro.core.remat import get_policy, list_policies
@@ -111,24 +122,62 @@ def make_step(cfg, opt, lr_fn, *, remat="basic", moe_args=None,
     return train_step
 
 
-def _make_manager(args):
+def _make_manager(args, registry=None):
     """The run's AsyncCheckpointManager (None without --ckpt-dir):
     ``--ckpt-sync`` degrades to the blocking path, ``--ckpt-keep`` /
-    ``--ckpt-keep-every`` set the retention policy (DESIGN.md §10.3)."""
+    ``--ckpt-keep-every`` set the retention policy (DESIGN.md §10.3).
+    ``registry``: the run's obs.Registry, so checkpoint counters and the
+    write-latency histogram land in the same snapshot as everything
+    else."""
     if not args.ckpt_dir:
         return None
     return ckpt.AsyncCheckpointManager(
         args.ckpt_dir,
         sync=bool(getattr(args, "ckpt_sync", False)),
         keep_last=int(getattr(args, "ckpt_keep", 0) or 0),
-        keep_every=int(getattr(args, "ckpt_keep_every", 0) or 0))
+        keep_every=int(getattr(args, "ckpt_keep_every", 0) or 0),
+        registry=registry)
+
+
+def _make_obs(args, resumed_from):
+    """The run's telemetry bundle (DESIGN.md §11): a metrics Registry
+    (always — subsystem counters are cheap), plus a span Tracer and a
+    schema-versioned RunLogger when the run has a directory to stream
+    into (``--run-dir``, defaulting to ``--ckpt-dir``). A resumed run
+    APPENDS to the existing runlog with a ``resumed_from`` marker record
+    instead of interleaving a second run_start header."""
+    run_dir = getattr(args, "run_dir", None) or args.ckpt_dir
+    registry = obs.Registry()
+    tracer = runlog = None
+    if run_dir:
+        os.makedirs(run_dir, exist_ok=True)
+        tracer = obs.Tracer()
+        meta = {"arch": getattr(args, "arch", None),
+                "objective": getattr(args, "objective", "auto"),
+                "batch": getattr(args, "batch", None),
+                "steps": getattr(args, "steps", None),
+                "seed": getattr(args, "seed", None)}
+        runlog = obs.RunLogger(os.path.join(run_dir, "runlog.jsonl"),
+                               meta=meta,
+                               resumed_from=resumed_from or None)
+    return registry, tracer, runlog, run_dir
 
 
 def _run_loop(args, step_fn, params, opt_state, make_batch, start, *,
-              step_takes_index, ckpt_meta_fn=None):
+              step_takes_index, ckpt_meta_fn=None, registry=None,
+              tracer=None, runlog=None, run_dir=None):
     """Shared prefetch/step/log/checkpoint loop; returns per-step losses.
     ``ckpt_meta_fn(next_step) -> dict``: optional user-meta (e.g. resumable
     loader input state) written into every checkpoint step dir.
+
+    Telemetry (DESIGN.md §11): every step appends one schema-versioned
+    JSONL record to ``runlog`` — loss, grad-norm, examples/sec, and the
+    data-wait / device-step / ckpt-stall time breakdown — while stdout
+    only gets the human line every ``--log-every`` steps (``--quiet``
+    silences it entirely). ``tracer`` records the same phases as spans;
+    the Chrome trace JSON is exported to ``<run_dir>/trace.json`` when
+    the loop ends. All of it is host-side work OUTSIDE the jitted step
+    (the ``benchmarks/obs_bench.py`` overhead gate pins it ≤1.05× bare).
 
     Checkpoints go through the async manager (serialize + rename off the
     step path; DESIGN.md §10). SIGTERM — the preemption signal — is caught:
@@ -140,7 +189,8 @@ def _run_loop(args, step_fn, params, opt_state, make_batch, start, *,
     stop = getattr(args, "stop_after", None) or args.steps
     stream = Prefetcher(make_batch, depth=2, start=start)
     t0, losses = time.time(), []
-    manager = _make_manager(args)
+    quiet = bool(getattr(args, "quiet", False))
+    manager = _make_manager(args, registry)
     preempted = threading.Event()
     prev_handler = None
     if threading.current_thread() is threading.main_thread():
@@ -148,9 +198,12 @@ def _run_loop(args, step_fn, params, opt_state, make_batch, start, *,
             signal.SIGTERM, lambda signum, frame: preempted.set())
     preempt_after = getattr(args, "preempt_after", None)
 
-    def save(step, *, final=False):
+    def save(step, *, final=False, event="save"):
+        """Checkpoint + degrade-on-failure; returns the loop stall in
+        seconds (the runlog/step record's ``ckpt_stall_s`` share)."""
         meta = ckpt_meta_fn(step) if ckpt_meta_fn else None
         tree = (params, opt_state)
+        t_save = time.perf_counter()
         try:
             if final:
                 manager.save_sync(step, tree, meta=meta)
@@ -161,26 +214,35 @@ def _run_loop(args, step_fn, params, opt_state, make_batch, start, *,
             # training without durability: degrade to blocking saves and
             # re-write this step synchronously
             print(f"ckpt: async write failed ({e}); degrading to sync")
-            manager.sync = True
+            manager.degrade_to_sync()
+            if runlog:
+                runlog.log("checkpoint", step=step,
+                           event="degrade_to_sync", error=str(e))
             manager.save_sync(step, tree, meta=meta)
+        stall = time.perf_counter() - t_save
+        if runlog:
+            runlog.log("checkpoint", step=step, event=event,
+                       sync=bool(final or manager.sync), stall_s=stall)
+        return stall
 
     final_saved = False
     try:
         for i in range(start, min(args.steps, stop)):
-            batch = next(stream)
-            if step_takes_index:
-                params, opt_state, loss, metrics = step_fn(
-                    params, opt_state, batch, jnp.asarray(i))
-            else:
-                params, opt_state, loss, metrics = step_fn(
-                    params, opt_state, batch)
-            losses.append(float(loss))
-            if i % args.log_every == 0 or i == args.steps - 1:
-                gnorm = metrics.get("grad_norm")
-                gtxt = f"gnorm {float(gnorm):.2f} " \
-                    if gnorm is not None else ""
-                print(f"step {i:5d} loss {float(loss):.4f} {gtxt}"
-                      f"{(time.time()-t0)/max(1, i-start+1):.2f}s/step")
+            t_iter = time.perf_counter()
+            with obs_trace.span(tracer, "data_wait", step=i):
+                batch = next(stream)
+            t_data = time.perf_counter()
+            with obs_trace.span(tracer, "device_step", step=i):
+                if step_takes_index:
+                    params, opt_state, loss, metrics = step_fn(
+                        params, opt_state, batch, jnp.asarray(i))
+                else:
+                    params, opt_state, loss, metrics = step_fn(
+                        params, opt_state, batch)
+                loss_f = float(loss)   # blocks until the device step ends
+            t_device = time.perf_counter()
+            losses.append(loss_f)
+            ckpt_stall, breaking = 0.0, False
             if preempt_after is not None and i - start + 1 == preempt_after:
                 # simulated-preemption hook: deliver a REAL SIGTERM to
                 # ourselves so tests exercise the exact signal path
@@ -188,20 +250,50 @@ def _run_loop(args, step_fn, params, opt_state, make_batch, start, *,
             if preempted.is_set():
                 if args.ckpt_dir:
                     print(f"SIGTERM: preemption checkpoint at step {i + 1}")
-                    save(i + 1, final=True)
-                final_saved = True
-                break
-            if args.ckpt_dir and args.ckpt_every and \
+                    with obs_trace.span(tracer, "ckpt_stall", step=i):
+                        ckpt_stall += save(i + 1, final=True,
+                                           event="preempt_save")
+                final_saved = breaking = True
+            elif args.ckpt_dir and args.ckpt_every and \
                     (i + 1) % args.ckpt_every == 0:
-                save(i + 1)
+                with obs_trace.span(tracer, "ckpt_stall", step=i):
+                    ckpt_stall += save(i + 1)
+            step_s = time.perf_counter() - t_iter
+            if runlog:
+                gnorm = metrics.get("grad_norm")
+                extra = {} if gnorm is None \
+                    else {"grad_norm": float(gnorm)}
+                runlog.log_step(
+                    i, loss=loss_f, data_wait_s=t_data - t_iter,
+                    device_step_s=t_device - t_data,
+                    ckpt_stall_s=ckpt_stall, step_s=step_s,
+                    examples_per_sec=args.batch / step_s, **extra)
+            if not quiet and (i % args.log_every == 0
+                              or i == args.steps - 1):
+                gnorm = metrics.get("grad_norm")
+                gtxt = f"gnorm {float(gnorm):.2f} " \
+                    if gnorm is not None else ""
+                print(f"step {i:5d} loss {loss_f:.4f} {gtxt}"
+                      f"{(time.time()-t0)/max(1, i-start+1):.2f}s/step")
+            if breaking:
+                break
     finally:
         stream.close()
         if prev_handler is not None:
             signal.signal(signal.SIGTERM, prev_handler)
     if args.ckpt_dir and not final_saved:
-        save(min(args.steps, stop), final=True)
+        with obs_trace.span(tracer, "ckpt_stall"):
+            save(min(args.steps, stop), final=True, event="final_save")
     if manager is not None:
         manager.close()
+    if runlog:
+        if registry is not None:
+            runlog.log("metrics", **registry.snapshot())
+        runlog.close()
+    if tracer is not None and run_dir:
+        path = tracer.export(os.path.join(run_dir, "trace.json"))
+        if not quiet:
+            print(f"obs: trace -> {path} (open in Perfetto)")
     return losses
 
 
@@ -246,6 +338,7 @@ def train_lm(args):
             args.seed)
         params, opt_state, start = _restore(args, params, opt_state,
                                             pspecs, ospecs)
+        registry, tracer, runlog, run_dir = _make_obs(args, start)
         step_fn = jax.jit(make_step(cfg, opt, lr_fn, remat=args.remat,
                                     moe_args=moe_args, precision=precision),
                           donate_argnums=(0, 1))
@@ -256,7 +349,8 @@ def train_lm(args):
             return jax.tree.map(jnp.asarray, b)
 
         return _run_loop(args, step_fn, params, opt_state, make_batch, start,
-                         step_takes_index=True)
+                         step_takes_index=True, registry=registry,
+                         tracer=tracer, runlog=runlog, run_dir=run_dir)
 
 
 def train_contrastive(args):
@@ -340,12 +434,17 @@ def train_contrastive(args):
                 "train_contrastive simulates multi-host input inside one "
                 "process; wiring jax.process_index() into HostLayout is a "
                 "ROADMAP item")
+        registry, tracer, runlog, run_dir = _make_obs(args, start)
+        if tracer is not None:
+            for h in range(data_size):
+                tracer.set_process_name(1 + h, f"host {h}")
         # one host block per data shard: block h of the global batch lands
         # on data shard h, the §5.1 "distributed equally to all cores" layout
         loader = ShardedLoader(world, tok, args.batch,
                                layout=HostLayout(n_hosts=data_size),
                                seed=args.seed, text_len=args.seq,
-                               augment=augment)
+                               augment=augment, registry=registry,
+                               tracer=tracer)
         if start and args.ckpt_dir and \
                 (meta := ckpt.load_meta(args.ckpt_dir, start)) \
                 and "loader" in meta:
@@ -374,7 +473,9 @@ def train_contrastive(args):
             step_fn = compiled
 
         return _run_loop(args, step_fn, params, opt_state, make_batch, start,
-                         step_takes_index=False, ckpt_meta_fn=ckpt_meta_fn)
+                         step_takes_index=False, ckpt_meta_fn=ckpt_meta_fn,
+                         registry=registry, tracer=tracer, runlog=runlog,
+                         run_dir=run_dir)
 
 
 def train(args):
@@ -449,7 +550,16 @@ def main():
     ap.add_argument("--tokenizer", default="v1",
                     help="tokenizer artifact version to load "
                          "(artifacts/tokenizer_<v>.json; contrastive only)")
-    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--log-every", type=int, default=10,
+                    help="print a human step line every N steps (the "
+                         "runlog gets EVERY step regardless)")
+    ap.add_argument("--quiet", action="store_true",
+                    help="no per-step stdout lines; telemetry still "
+                         "streams to the runlog")
+    ap.add_argument("--run-dir", default=None,
+                    help="directory for runlog.jsonl + trace.json "
+                         "(default: --ckpt-dir; no files when neither "
+                         "is set). DESIGN.md §11")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=0)
     ap.add_argument("--ckpt-sync", action="store_true",

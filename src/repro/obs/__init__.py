@@ -1,0 +1,34 @@
+"""Unified telemetry subsystem (DESIGN.md §11).
+
+One stats mechanism repo-wide, three layers:
+
+  metrics  — process-wide registry of counters / gauges / fixed-bucket
+             histograms (p50/p90/p99 summaries), thread-safe, labeled
+             children, ``snapshot()``/``to_json()``.
+  trace    — ``span(...)`` context managers recording wall-time events
+             into a ring buffer, exportable as Chrome ``trace_event``
+             JSON (load in Perfetto / chrome://tracing), with per-host
+             ``pid`` lanes for the simulated multi-host runs.
+  runlog   — one schema-versioned JSONL record per train step (loss,
+             grad-norm, examples/sec, data-wait / device-step /
+             ckpt-stall breakdown, checkpoint + retention events), plus
+             the ``python -m repro.obs.report`` trajectory summarizer.
+
+Everything is off-hot-path cheap: instruments mutate a couple of Python
+ints under a lock, snapshotting and JSONL writes happen outside the
+jitted step, and ``benchmarks/obs_bench.py`` gates the instrumented-vs-
+bare step overhead at ≤1.05×.
+"""
+from repro.obs.metrics import (Counter, Gauge, Histogram, Registry,
+                               exponential_buckets, get_registry)
+from repro.obs.runlog import (RunLogger, RunlogError, SCHEMA_VERSION,
+                              STEP_BREAKDOWN_KEYS, read_runlog,
+                              validate_record)
+from repro.obs.trace import Tracer, span
+
+__all__ = [
+    "Counter", "Gauge", "Histogram", "Registry", "exponential_buckets",
+    "get_registry", "RunLogger", "RunlogError", "SCHEMA_VERSION",
+    "STEP_BREAKDOWN_KEYS", "read_runlog", "validate_record", "Tracer",
+    "span",
+]

@@ -35,7 +35,13 @@ from typing import Callable, Dict, Sequence
 import jax
 import numpy as np
 
+from repro.obs import metrics as obs_metrics
+
 DEFAULT_BUCKETS = (1, 2, 4, 8, 16, 32, 64)
+
+_STAT_KEYS = ("requests", "size_flushes", "deadline_flushes",
+              "manual_flushes", "encoded_examples", "padded_examples",
+              "batches", "worker_errors")
 
 
 class DeadlineFuture(Future):
@@ -107,7 +113,7 @@ class MicroBatcher:
     def __init__(self, encode_fns: Dict[str, Callable], *,
                  buckets: Sequence[int] = DEFAULT_BUCKETS,
                  max_delay_ms: float = 2.0, request_timeout_s: float = 60.0,
-                 autostart: bool = True):
+                 autostart: bool = True, registry=None):
         if not buckets or any(b <= 0 for b in buckets):
             raise ValueError(f"bad bucket ladder {buckets}")
         self.buckets = tuple(sorted(set(int(b) for b in buckets)))
@@ -119,11 +125,27 @@ class MicroBatcher:
         self._compiled: Dict[tuple, int] = {}   # shape-cache key -> hit count
         self._stop = False
         self._thread = None
-        self.stats = {"requests": 0, "size_flushes": 0, "deadline_flushes": 0,
-                      "manual_flushes": 0, "encoded_examples": 0,
-                      "padded_examples": 0, "batches": 0, "worker_errors": 0}
+        # telemetry (DESIGN.md §11): counters + queue-depth gauge +
+        # latency/occupancy histograms on an obs registry (pass
+        # ``registry=`` to share one; default is private so concurrent
+        # batcher instances never mix series)
+        self.metrics = registry if registry is not None \
+            else obs_metrics.Registry()
+        self._c = {k: self.metrics.counter(f"serve/{k}")
+                   for k in _STAT_KEYS}
+        self._g_queue = self.metrics.gauge("serve/queue_depth")
+        self._h_request = self.metrics.histogram("serve/request_latency_s")
+        self._h_flush = self.metrics.histogram("serve/flush_latency_s")
+        self._h_occupancy = self.metrics.histogram(
+            "serve/batch_occupancy", buckets=obs_metrics.RATIO_BUCKETS)
         if autostart:
             self.start()
+
+    @property
+    def stats(self) -> dict:
+        """Dict-shaped counter view (the pre-§11 ad-hoc ``stats`` dict
+        shape, now backed by the shared registry — back-compat tested)."""
+        return {k: int(c.value) for k, c in self._c.items()}
 
     # -- lifecycle ---------------------------------------------------------
     @property
@@ -174,8 +196,10 @@ class MicroBatcher:
         group = _Group(payload, n, now, deadline=now + self.request_timeout)
         with self._cv:
             self._pending[tower].append(group)
-            self.stats["requests"] += n
+            self._g_queue.set(sum(g.n for gs in self._pending.values()
+                                  for g in gs))
             self._cv.notify_all()
+        self._c["requests"].inc(n)
         return group
 
     # -- flushing ----------------------------------------------------------
@@ -210,7 +234,7 @@ class MicroBatcher:
                 # stranded future is a caller blocked forever, so EVERY
                 # pending request fails with the exception and the worker
                 # keeps serving future submissions
-                self.stats["worker_errors"] += 1
+                self._c["worker_errors"].inc()
                 self._fail_all_pending(e)
 
     def _fail_all_pending(self, exc: Exception) -> int:
@@ -222,6 +246,7 @@ class MicroBatcher:
             groups = [g for gs in self._pending.values() for g in gs]
             for tower in self._pending:
                 self._pending[tower] = []
+            self._g_queue.set(0)
         failed = 0
         for g in groups:
             if g.future.set_running_or_notify_cancel():
@@ -249,9 +274,12 @@ class MicroBatcher:
     def _flush_tower(self, tower: str, reason: str) -> int:
         with self._cv:
             groups, self._pending[tower] = self._pending[tower], []
+            self._g_queue.set(sum(g.n for gs in self._pending.values()
+                                  for g in gs))
         if not groups:
             return 0
-        self.stats[reason] += 1
+        self._c[reason].inc()
+        t_flush = time.monotonic()
         try:
             # only structurally identical payloads may coalesce: mixing
             # treedefs or per-example shapes would mispair leaves under one
@@ -271,6 +299,7 @@ class MicroBatcher:
                 if not g.future.done():
                     g.future.set_exception(e)
             raise
+        self._h_flush.observe(time.monotonic() - t_flush)
         return sum(g.n for g in groups)
 
     def _bucket_for(self, n: int) -> int:
@@ -300,17 +329,20 @@ class MicroBatcher:
                 key = (tower, bucket, _shape_sig(batch))
                 self._compiled[key] = self._compiled.get(key, 0) + 1
                 outs.append(np.asarray(self._fns[tower](batch))[:m])
-                self.stats["padded_examples"] += bucket - m
-                self.stats["batches"] += 1
+                self._c["padded_examples"].inc(bucket - m)
+                self._c["batches"].inc()
+                self._h_occupancy.observe(m / bucket)
             emb = np.concatenate(outs) if len(outs) > 1 else outs[0]
         except Exception as e:  # noqa: BLE001 — deliver, don't kill worker
             for g in groups:
                 g.future.set_exception(e)
             return
-        self.stats["encoded_examples"] += n
+        self._c["encoded_examples"].inc(n)
         off = 0
+        done = time.monotonic()
         for g in groups:
             g.future.set_result(emb[off:off + g.n])
+            self._h_request.observe(done - g.t_submit)
             off += g.n
 
     # -- observability -----------------------------------------------------

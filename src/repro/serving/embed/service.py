@@ -158,9 +158,15 @@ class ZeroShotService:
                                 text_len=self.text_len)
 
     def stats(self) -> dict:
+        """Service-wide stats: the batcher's dict-shaped counters + the
+        class-embedding registry's hit/miss counts (legacy shape), plus
+        ``metrics`` — the full ``obs.metrics.Registry`` snapshot
+        (queue-depth gauge, request/flush latency and batch-occupancy
+        histograms with p50/p90/p99; DESIGN.md §11)."""
         return {"batcher": dict(self.batcher.stats),
                 "compiled_shapes": len(self.batcher.compiled_shapes()),
-                "registry": dict(self.registry.stats)}
+                "registry": dict(self.registry.stats),
+                "metrics": self.batcher.metrics.snapshot()}
 
     def close(self):
         self.batcher.stop()

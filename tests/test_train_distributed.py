@@ -1,9 +1,20 @@
-"""Distributed trainer: loss decreases; checkpoint resume continues exactly."""
+"""Distributed trainer: loss decreases; checkpoint resume continues exactly;
+every step streams a schema-valid runlog record with the full time
+breakdown, and the trace export is Perfetto-shaped (DESIGN.md §11)."""
+import json
+import os
+import sys
 import types
 
 import numpy as np
 
 from repro.launch.train_distributed import train
+from repro.obs import runlog as rl
+from repro.obs import trace as obs_trace
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "scripts"))
+
+import check_runlog  # noqa: E402
 
 
 def _args(**kw):
@@ -34,3 +45,56 @@ def test_checkpoint_resume_is_exact(tmp_path):
     train(_args(steps=12, stop_after=6, ckpt_dir=d))
     resumed = train(_args(steps=12, ckpt_dir=d))
     np.testing.assert_allclose(resumed, full[6:], rtol=1e-4)
+
+
+def test_smoke_run_streams_runlog_and_trace(tmp_path, capsys):
+    """A --run-dir smoke run emits one schema-valid step record per step
+    (full data-wait/device-step/ckpt-stall breakdown), checkpoint events,
+    and a Chrome-trace JSON whose spans carry the required keys."""
+    rd = str(tmp_path / "run")
+    train(_args(steps=6, ckpt_dir=str(tmp_path / "ck"), ckpt_every=3,
+                run_dir=rd, quiet=True, log_every=2))
+    # quiet mode: telemetry streams, stdout stays silent
+    assert "step " not in capsys.readouterr().out
+
+    path = os.path.join(rd, "runlog.jsonl")
+    assert check_runlog.check_file(path) == []       # the schema gate
+    records = rl.read_runlog(path)
+    steps = [r for r in records if r["kind"] == "step"]
+    assert [r["step"] for r in steps] == list(range(6))
+    for r in steps:
+        for key in rl.STEP_BREAKDOWN_KEYS + ("step_s", "loss",
+                                             "examples_per_sec",
+                                             "grad_norm"):
+            assert isinstance(r[key], (int, float)), (key, r)
+        assert r["step_s"] >= r["data_wait_s"] + r["device_step_s"]
+    saves = [r for r in records if r["kind"] == "checkpoint"]
+    assert {r["event"] for r in saves} >= {"save", "final_save"}
+    # the final registry snapshot rode along
+    final = [r for r in records if r["kind"] == "metrics"]
+    assert final and final[-1]["counters"]["ckpt/saves"] >= 2
+
+    doc = json.load(open(os.path.join(rd, "trace.json")))
+    spans = [e for e in doc["traceEvents"] if e["ph"] == "X"]
+    assert {"data_wait", "device_step", "ckpt_stall"} <= \
+        {e["name"] for e in spans}
+    for ev in doc["traceEvents"]:
+        for key in obs_trace.REQUIRED_EVENT_KEYS:
+            assert key in ev, (key, ev)
+
+
+def test_resume_appends_to_runlog_with_marker(tmp_path):
+    """A --resume relaunch APPENDS to the same runlog — one run_start,
+    one resume marker, monotone step records across the boundary."""
+    d = str(tmp_path / "ck")
+    train(_args(steps=12, stop_after=6, ckpt_dir=d, quiet=True))
+    train(_args(steps=12, ckpt_dir=d, quiet=True))   # run_dir defaults here
+    path = os.path.join(d, "runlog.jsonl")
+    assert check_runlog.check_file(path) == []
+    records = rl.read_runlog(path)
+    kinds = [r["kind"] for r in records]
+    assert kinds.count("run_start") == 1 and kinds.count("resume") == 1
+    assert next(r for r in records
+                if r["kind"] == "resume")["resumed_from"] == 6
+    assert [r["step"] for r in records
+            if r["kind"] == "step"] == list(range(12))
