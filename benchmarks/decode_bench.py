@@ -1,0 +1,149 @@
+"""Continuous-batching decode bench (DESIGN.md §12.5).
+
+The serving claim behind ``serving.continuous``: with >= slots-many
+requests in flight, slot-packed decoding serves a request stream faster
+than the legacy engine decoding requests ONE AT A TIME — the packed
+(num_slots, 1) step streams the model weights once per token tick for
+all slots, where the sequential loop streams them once per token per
+request. This bench pins that on a fixed stream of 8 requests:
+
+  prefill_ref/b1             one b=1 prompt prefill (the admission-path
+                             unit cost) — a ``*_ref`` host-drift anchor
+                             (scripts/check_bench.py)
+  generate_ref/one_at_a_time legacy ``Engine.generate`` over the 8
+                             requests sequentially (b=1 each): the
+                             one-at-a-time serving baseline and second
+                             ``*_ref`` anchor
+  generate/continuous_s4     ``ContinuousEngine`` (num_slots=4) serving
+                             the same 8 requests through its admission
+                             queue. ``must_beat: generate_ref/
+                             one_at_a_time`` — continuous batching must
+                             outrun one-at-a-time decode at >=4
+                             concurrent requests on every host
+  step/packed_s4             one packed 4-slot decode step (per-slot
+                             positions). UNGATED: sub-ms and jittery on
+                             shared hosts; recorded for the trajectory
+
+Committed as BENCH_decode.json and gated through ``benchmarks/run.py
+--json``: absolute timings ride the 1.3x cross-run gate where they clear
+the 50ms interpret floor; the must_beat invariant carries the
+continuous-vs-sequential claim regardless of host speed.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import csv_line, write_json
+from repro.configs import get_arch, smoke_variant
+from repro.models import transformer as tf
+from repro.serving import ContinuousEngine, Engine
+
+ARCH = "llama3.2-1b"
+CACHE_LEN = 64
+PROMPT_LEN = 8                # one length -> one prefill compile
+MAX_NEW = 16
+N_REQUESTS = 8
+NUM_SLOTS = 4
+REPEATS = 3                   # min-of-N (scheduler-noise robustness)
+MOE = {"dispatch": "dense"}
+
+
+def _min_of(fn, reps=REPEATS) -> float:
+    """Min-of-reps wall time of ``fn()`` in µs."""
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e6
+
+
+def run(json_path: str | None = None):
+    """Run the bench; optionally write the BENCH_decode.json payload."""
+    cfg = smoke_variant(get_arch(ARCH))
+    params = tf.init_params(cfg, jax.random.key(0))
+    rng = np.random.default_rng(0)
+    prompts = rng.integers(4, cfg.vocab, (N_REQUESTS, PROMPT_LEN),
+                           dtype=np.int32)
+    entries: dict = {}
+
+    # EOS never fires on the random-weight model in practice, but pin the
+    # token count anyway so both engines decode exactly the same stream
+    eos = -1
+
+    legacy = Engine(cfg, params, cache_len=CACHE_LEN, moe_args=MOE,
+                    eos_id=eos)
+    legacy.generate(prompts[:1], MAX_NEW)            # warm: compile both
+
+    us_prefill = round(_min_of(lambda: jax.block_until_ready(
+        legacy._prefill(params, jnp.asarray(prompts[:1]))[0])), 1)
+    entries["prefill_ref/b1"] = {"us": us_prefill}
+    csv_line("decode/prefill_ref/b1", us_prefill, f"plen={PROMPT_LEN}")
+
+    def one_at_a_time():
+        for p in prompts:
+            legacy.generate(p[None, :], MAX_NEW)
+
+    us_seq = round(_min_of(one_at_a_time), 1)
+    total_toks = N_REQUESTS * MAX_NEW
+    entries["generate_ref/one_at_a_time"] = {
+        "us": us_seq, "tok_per_s": round(total_toks / (us_seq / 1e6), 1)}
+    csv_line("decode/generate_ref/one_at_a_time", us_seq,
+             f"{total_toks / (us_seq / 1e6):.0f}tok/s")
+
+    cont = ContinuousEngine(cfg, params, cache_len=CACHE_LEN,
+                            num_slots=NUM_SLOTS, moe_args=MOE, eos_id=eos)
+    reqs = [(p, MAX_NEW, i) for i, p in enumerate(prompts)]
+    got = cont.run(reqs)                             # warm: compile all three
+    assert all(got[i].size == MAX_NEW for i in range(N_REQUESTS)), \
+        "bench stream must be EOS-free so both engines decode equal tokens"
+
+    us_cont = round(_min_of(lambda: cont.run(reqs)), 1)
+    entries["generate/continuous_s4"] = {
+        "us": us_cont, "must_beat": "generate_ref/one_at_a_time",
+        "tok_per_s": round(total_toks / (us_cont / 1e6), 1),
+        "speedup_vs_one_at_a_time": round(us_seq / us_cont, 2)}
+    csv_line("decode/generate/continuous_s4", us_cont,
+             f"{us_seq / us_cont:.2f}x_vs_sequential")
+
+    toks = jnp.asarray(prompts[:NUM_SLOTS, :1])
+    pos = jnp.asarray(np.arange(NUM_SLOTS) + PROMPT_LEN, jnp.int32)
+    caches = cont._caches
+    step_fn = jax.jit(cont._step_impl)   # no donation: reusable input cache
+    jax.block_until_ready(step_fn(params, caches, toks, pos)[0])   # warm
+    us_step = round(_min_of(lambda: jax.block_until_ready(
+        step_fn(params, caches, toks, pos)[0])), 1)
+    entries["step/packed_s4"] = {"us": us_step, "ungated": True}
+    csv_line("decode/step/packed_s4", us_step, f"slots={NUM_SLOTS}")
+
+    result = {
+        "meta": {
+            "backend": jax.default_backend(),
+            "interpret": True,       # CPU XLA decode: keep the 50ms floor
+            "shape": {"arch": ARCH, "cache_len": CACHE_LEN,
+                      "prompt_len": PROMPT_LEN, "max_new": MAX_NEW,
+                      "n_requests": N_REQUESTS, "num_slots": NUM_SLOTS},
+        },
+        "entries": entries,
+    }
+    if json_path:
+        write_json(json_path, result)
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__.split("\n\n")[0])
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write BENCH_decode.json-style output here")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    run(json_path=args.json)
+
+
+if __name__ == "__main__":
+    main()

@@ -33,6 +33,7 @@ _DEFAULT_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 COVERED_GLOBS = (
     os.path.join("src", "repro", "core", "*.py"),
     os.path.join("src", "repro", "kernels", "*", "ops.py"),
+    os.path.join("src", "repro", "serving", "*.py"),
     os.path.join("src", "repro", "serving", "embed", "*.py"),
     os.path.join("src", "repro", "models", "*.py"),
     os.path.join("src", "repro", "data", "*.py"),

@@ -9,6 +9,13 @@ bandwidth win over the broadcast-per-q-head reference (a real-TPU ~group×
 reduction in cache reads).
 
 Grid: (batch * kv_heads, cache_blocks), cache innermost.
+
+Validity is PER ROW: each (batch, kv) row carries its own (t,) mask, so a
+packed continuous-batching cache — slots at different decode positions,
+ragged live lengths — sweeps in ONE launch. A row with no valid slot
+(an empty/free batching slot) emits zeros rather than a normalized
+average: its ``l`` accumulator never leaves 0 and the guarded divide
+returns 0 exactly (the reference op pins this contract).
 """
 from __future__ import annotations
 
@@ -37,11 +44,17 @@ def _decode_kernel(q_ref, k_ref, v_ref, valid_ref, o_ref, m_scr, l_scr,
     k = k_ref[0].astype(jnp.float32)                    # (bk, d)
     s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                             preferred_element_type=jnp.float32)  # (g, bk)
-    s = jnp.where(valid_ref[...][None, :], s, NEG_INF)
+    vmask = valid_ref[0][None, :]                       # (1, bk)
+    s = jnp.where(vmask, s, NEG_INF)
 
     m_prev, l_prev = m_scr[...], l_scr[...]
     m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
-    p = jnp.exp(s - m_new[:, None])
+    # explicit zero at masked entries: when a whole block is masked while
+    # m is still NEG_INF (a length-0 slot, or leading dead blocks),
+    # exp(s - m) = exp(0) = 1 would leak them; where masked entries DO
+    # see a finite m, exp(NEG_INF - m) underflows to 0 exactly, so this
+    # is bit-identical on the partially-masked blocks
+    p = jnp.where(vmask, jnp.exp(s - m_new[:, None]), 0.0)
     alpha = jnp.exp(m_prev - m_new)
     l_scr[...] = l_prev * alpha + jnp.sum(p, axis=1)
     acc_scr[...] = acc_scr[...] * alpha[:, None] + jax.lax.dot_general(
@@ -57,12 +70,17 @@ def _decode_kernel(q_ref, k_ref, v_ref, valid_ref, o_ref, m_scr, l_scr,
 
 
 def decode_attention_bkv(q, k, v, valid, *, block_k=256, interpret=False):
-    """q: (b*kv, g, d); k/v: (b*kv, t, d); valid: (t,) bool.
-    Returns (b*kv, g, d) f32-accumulated attention output."""
+    """q: (b*kv, g, d); k/v: (b*kv, t, d); valid: (t,) bool shared across
+    rows, or (b*kv, t) bool per row (ragged packed cache). Rows with no
+    valid slot return zeros. Returns (b*kv, g, d) f32-accumulated
+    attention output."""
     bkv, g, d = q.shape
     t = k.shape[1]
     block_k = min(block_k, t)
     assert t % block_k == 0, (t, block_k)
+    if valid.ndim == 1:
+        valid = jnp.broadcast_to(valid[None, :], (bkv, t))
+    assert valid.shape == (bkv, t), (valid.shape, (bkv, t))
     grid = (bkv, t // block_k)
     scale = d ** -0.5
 
@@ -73,7 +91,7 @@ def decode_attention_bkv(q, k, v, valid, *, block_k=256, interpret=False):
             pl.BlockSpec((1, g, d), lambda b, j: (b, 0, 0)),
             pl.BlockSpec((1, block_k, d), lambda b, j: (b, j, 0)),
             pl.BlockSpec((1, block_k, d), lambda b, j: (b, j, 0)),
-            pl.BlockSpec((block_k,), lambda b, j: (j,)),
+            pl.BlockSpec((1, block_k), lambda b, j: (b, j)),
         ],
         out_specs=pl.BlockSpec((1, g, d), lambda b, j: (b, 0, 0)),
         out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),

@@ -7,13 +7,23 @@ from repro.kernels.decode_attention.kernel import decode_attention_bkv
 
 
 def decode_attention(q, k, v, valid, *, block_k=256, interpret=False):
-    """q: (b, h, d); k/v: (b, kv, t, d); valid: (t,) bool -> (b, h, d)."""
+    """q: (b, h, d); k/v: (b, kv, t, d) -> (b, h, d).
+
+    ``valid``: (t,) bool shared by every row (the legacy fixed-batch
+    decode, all slots at one position), or (b, t) bool PER SLOT — the
+    continuous-batching packed cache, where each slot decodes at its own
+    position and free slots may be fully masked (those rows return
+    zeros; see ``decode_attention_ref``). All ``group`` query heads of a
+    kv head share their slot's mask."""
     b, h, d = q.shape
     kv, t = k.shape[1], k.shape[2]
     g = h // kv
     qb = q.reshape(b, kv, g, d).reshape(b * kv, g, d)
     kb = k.reshape(b * kv, t, d)
     vb = v.reshape(b * kv, t, d)
+    if valid.ndim == 2:
+        # per-slot mask: every kv head of slot i sweeps with slot i's mask
+        valid = jnp.repeat(valid, kv, axis=0)            # (b*kv, t)
     out = decode_attention_bkv(qb, kb, vb, valid, block_k=block_k,
                                interpret=interpret)
     return out.reshape(b, kv, g, d).reshape(b, h, d)

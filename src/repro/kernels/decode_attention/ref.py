@@ -9,13 +9,21 @@ NEG_INF = -1e30
 
 def decode_attention_ref(q, k, v, valid):
     """q: (b, h, d) one query per head; k/v: (b, kv, t, d) cache;
-    valid: (t,) bool mask of live cache slots. Returns (b, h, d)."""
+    valid: (t,) bool mask of live cache slots, or (b, t) bool per slot
+    (ragged packed cache). Returns (b, h, d). Rows whose mask is all
+    False (an empty continuous-batching slot) return ZEROS — not the
+    normalized average a bare softmax over a fully -inf row would give —
+    matching the kernel's guarded online-softmax divide."""
     b, h, d = q.shape
     kv = k.shape[1]
     g = h // kv
+    if valid.ndim == 1:
+        valid = jnp.broadcast_to(valid[None, :], (b, k.shape[2]))
     qg = q.reshape(b, kv, g, d).astype(jnp.float32)
     s = jnp.einsum("bkgd,bktd->bkgt", qg, k.astype(jnp.float32)) * (d ** -0.5)
-    s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
     w = jax.nn.softmax(s, axis=-1)
     out = jnp.einsum("bkgt,bktd->bkgd", w, v.astype(jnp.float32))
+    any_valid = jnp.any(valid, axis=1)                   # (b,)
+    out = jnp.where(any_valid[:, None, None, None], out, 0.0)
     return out.reshape(b, h, d).astype(q.dtype)

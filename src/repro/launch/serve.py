@@ -1,7 +1,19 @@
-"""Serving launcher: batched generation with the Engine.
+"""Serving launcher: batched generation with the Engine, or a request-queue
+driver over the continuous-batching engine.
 
+  # lockstep batch (legacy):
   python -m repro.launch.serve --arch llama3.2-1b --smoke \
       --batch 4 --prompt-len 16 --max-new 32
+
+  # continuous batching: synthetic request queue with staggered arrivals
+  python -m repro.launch.serve --arch llama3.2-1b --smoke \
+      --engine continuous --slots 4 --requests 16 --arrival 0.05 \
+      --prompt-len 16 --max-new 32
+
+The continuous driver submits ``--requests`` requests with Poisson-ish
+inter-arrival gaps (``--arrival`` mean seconds; 0 = all up front), ragged
+prompt lengths around ``--prompt-len``, and reports tokens/s, slot
+occupancy, and admission-wait quantiles from the engine's obs registry.
 """
 from __future__ import annotations
 
@@ -13,14 +25,86 @@ import numpy as np
 
 from repro.configs import get_arch, smoke_variant
 from repro.models import transformer as tf
-from repro.serving import Engine
+from repro.serving import ContinuousEngine, Engine
+
+
+def _run_legacy(cfg, params, moe_args, args):
+    eng = Engine(cfg, params, cache_len=args.cache_len, moe_args=moe_args,
+                 precision=args.precision, attn=args.attn)
+    rng = np.random.default_rng(args.seed)
+    prompts = rng.integers(4, cfg.vocab, (args.batch, args.prompt_len),
+                           dtype=np.int32)
+    t0 = time.time()
+    out = eng.generate(prompts, args.max_new, temperature=args.temperature,
+                       seed=args.seed)
+    dt = time.time() - t0
+    toks = out.size
+    print(f"generated {toks} tokens in {dt:.2f}s "
+          f"({toks/dt:.1f} tok/s incl. compile)")
+    for row in out[:4]:
+        print(" ", row[:16].tolist(), "...")
+
+
+def _run_continuous(cfg, params, moe_args, args):
+    eng = ContinuousEngine(cfg, params, cache_len=args.cache_len,
+                           num_slots=args.slots, moe_args=moe_args,
+                           precision=args.precision, attn=args.attn,
+                           temperature=args.temperature, seed=args.seed)
+    rng = np.random.default_rng(args.seed)
+    # ragged prompts around --prompt-len so admission sees mixed shapes
+    # (bucketed to 4 lengths: prefill compiles once per bucket)
+    lens = np.clip(args.prompt_len + rng.choice([-4, 0, 4, 8], args.requests),
+                   1, None)
+    arrivals = (np.zeros(args.requests) if args.arrival <= 0
+                else rng.exponential(args.arrival, args.requests))
+    reqs = [(rng.integers(4, cfg.vocab, (int(pl),), dtype=np.int32),
+             args.max_new) for pl in lens]
+
+    t0 = time.time()
+    done, submitted = {}, 0
+    while submitted < len(reqs) or eng.pending:
+        now = time.time() - t0
+        while submitted < len(reqs) and arrivals[:submitted + 1].sum() <= now:
+            eng.submit(*reqs[submitted])
+            submitted += 1
+        for fin in eng.step():
+            done[fin.request_id] = fin.tokens
+        if not eng.pending and submitted < len(reqs):
+            time.sleep(min(0.005, args.arrival or 0.005))
+    dt = time.time() - t0
+
+    snap = eng.stats()
+    toks = eng.registry.counter("decode/tokens").value
+    admit = eng.registry.histogram("decode/admission_wait_s").summary()
+    occ = eng.registry.histogram("decode/slot_occupancy_ratio").summary()
+    occ_mean = occ["sum"] / occ["count"] if occ["count"] else 0.0
+    admit_mean = admit["sum"] / admit["count"] if admit["count"] else 0.0
+    print(f"served {len(done)} requests / {toks} tokens in {dt:.2f}s "
+          f"({snap['derived']['tokens_per_sec']:.1f} tok/s incl. compile)")
+    print(f"slot occupancy: mean {occ_mean:.2f} over {occ['count']} ticks; "
+          f"admission wait: mean {admit_mean*1e3:.1f}ms "
+          f"p99~{admit['p99']*1e3:.1f}ms over {admit['count']} admissions")
+    for rid in sorted(done)[:4]:
+        print(f"  req {rid}:", done[rid][:16].tolist(), "...")
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
     ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--engine", default="legacy",
+                    choices=["legacy", "continuous"],
+                    help="'legacy' = lockstep fixed batch; 'continuous' = "
+                         "slot-based admission queue (serving.continuous)")
+    ap.add_argument("--batch", type=int, default=4,
+                    help="[legacy] fixed batch size")
+    ap.add_argument("--slots", type=int, default=4,
+                    help="[continuous] cache slot capacity")
+    ap.add_argument("--requests", type=int, default=16,
+                    help="[continuous] number of synthetic requests")
+    ap.add_argument("--arrival", type=float, default=0.0,
+                    help="[continuous] mean inter-arrival gap in seconds "
+                         "(0 = all requests queued up front)")
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--max-new", type=int, default=32)
     ap.add_argument("--cache-len", type=int, default=256)
@@ -44,21 +128,10 @@ def main():
         cfg = smoke_variant(cfg)
     params = tf.init_params(cfg, jax.random.key(args.seed))
     moe_args = {"dispatch": "dense"} if args.smoke else None
-    eng = Engine(cfg, params, cache_len=args.cache_len, moe_args=moe_args,
-                 precision=args.precision, attn=args.attn)
-
-    rng = np.random.default_rng(args.seed)
-    prompts = rng.integers(4, cfg.vocab, (args.batch, args.prompt_len),
-                           dtype=np.int32)
-    t0 = time.time()
-    out = eng.generate(prompts, args.max_new, temperature=args.temperature,
-                       seed=args.seed)
-    dt = time.time() - t0
-    toks = out.size
-    print(f"generated {toks} tokens in {dt:.2f}s "
-          f"({toks/dt:.1f} tok/s incl. compile)")
-    for row in out[:4]:
-        print(" ", row[:16].tolist(), "...")
+    if args.engine == "continuous":
+        _run_continuous(cfg, params, moe_args, args)
+    else:
+        _run_legacy(cfg, params, moe_args, args)
 
 
 if __name__ == "__main__":

@@ -310,7 +310,12 @@ def resolve_decode_backend(impl: Optional[str], *, cache_len: int,
 
 def decode_attention(p, cfg: ArchConfig, x, cache: KVCache, pos,
                      impl: Optional[str] = None):
-    """One-token decode. x: (b, 1, d); pos: scalar int32 (current position).
+    """One-token decode. x: (b, 1, d); pos: scalar int32 (every row at the
+    same position — the legacy fixed-batch engine), or (b,) int32 PER-SLOT
+    positions — the continuous-batching engine, where each cache row is a
+    slot at its own decode depth (write, RoPE, and length mask are all
+    per row; stale entries past a slot's position carry a retired
+    request's keys and weight exactly 0 under the mask).
 
     Returns (out (b,1,d), new_cache). ``impl``: decode backend override
     ('einsum' | 'pallas' | 'auto'); None defers to ``cfg.attn_impl`` via
@@ -319,22 +324,39 @@ def decode_attention(p, cfg: ArchConfig, x, cache: KVCache, pos,
     """
     b = x.shape[0]
     hd = cfg.resolved_head_dim
-    positions = jnp.full((b, 1), pos, jnp.int32)
+    pos = jnp.asarray(pos, jnp.int32)
+    per_slot = pos.ndim == 1
+    positions = pos[:, None] if per_slot else jnp.full((b, 1), pos, jnp.int32)
     q, k_new, v_new = _project_qkv(p, cfg, x, positions)
 
     clen = cache.k.shape[2]
     ring = is_ring(cfg, cache)
-    slot = (pos % clen) if ring else pos
-    k = jax.lax.dynamic_update_slice_in_dim(
-        cache.k, k_new.transpose(0, 2, 1, 3).astype(cache.k.dtype), slot, axis=2)
-    v = jax.lax.dynamic_update_slice_in_dim(
-        cache.v, v_new.transpose(0, 2, 1, 3).astype(cache.v.dtype), slot, axis=2)
-
     idx = jnp.arange(clen)
-    valid = idx <= pos
-    if ring:
-        # once pos >= clen the ring is full and every slot is in-window
-        valid = jnp.where(pos >= clen, jnp.ones_like(valid), valid)
+    if per_slot:
+        slot = (pos % clen) if ring else pos              # (b,)
+        wmask = (idx[None, :] == slot[:, None])[:, None, :, None]
+        k = jnp.where(wmask,
+                      k_new.transpose(0, 2, 1, 3).astype(cache.k.dtype),
+                      cache.k)
+        v = jnp.where(wmask,
+                      v_new.transpose(0, 2, 1, 3).astype(cache.v.dtype),
+                      cache.v)
+        valid = idx[None, :] <= pos[:, None]              # (b, clen)
+        if ring:
+            valid = jnp.where((pos >= clen)[:, None],
+                              jnp.ones_like(valid), valid)
+    else:
+        slot = (pos % clen) if ring else pos
+        k = jax.lax.dynamic_update_slice_in_dim(
+            cache.k, k_new.transpose(0, 2, 1, 3).astype(cache.k.dtype),
+            slot, axis=2)
+        v = jax.lax.dynamic_update_slice_in_dim(
+            cache.v, v_new.transpose(0, 2, 1, 3).astype(cache.v.dtype),
+            slot, axis=2)
+        valid = idx <= pos
+        if ring:
+            # once pos >= clen the ring is full and every slot is in-window
+            valid = jnp.where(pos >= clen, jnp.ones_like(valid), valid)
 
     impl = resolve_decode_backend(impl if impl is not None else cfg.attn_impl,
                                   cache_len=clen, head_dim=hd)
@@ -348,11 +370,13 @@ def decode_attention(p, cfg: ArchConfig, x, cache: KVCache, pos,
         out = out.astype(q.dtype).reshape(b, 1, cfg.n_heads * hd)
         return L.dense(out, p["wo"]), KVCache(k=k, v=v)
 
-    mask = jnp.where(valid, 0.0, NEG_INF)[None, :]    # (1, clen)
+    mask = jnp.where(valid, 0.0, NEG_INF)                 # (clen,) | (b, clen)
+    mask = mask[None, None, None, :] if not per_slot \
+        else mask[:, None, None, :]
     group = cfg.n_heads // kv
     qh = q.reshape(b, kv, group, hd)
     scores = jnp.einsum("bkgd,bktd->bkgt", qh, k.astype(qh.dtype)) * (hd ** -0.5)
-    scores = scores.astype(jnp.float32) + mask[:, None, None, :]
+    scores = scores.astype(jnp.float32) + mask
     w = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
     out = jnp.einsum("bkgt,bktd->bkgd", w, v.astype(w.dtype))
     out = out.reshape(b, 1, cfg.n_heads * hd)

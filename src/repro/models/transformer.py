@@ -331,7 +331,9 @@ def prefill(cfg: ArchConfig, params, batch, *, dtype=jnp.bfloat16,
 def decode_step(cfg: ArchConfig, params, token, pos, caches, *,
                 dtype=jnp.bfloat16, precision=None, moe_args=None,
                 unroll: int = 1):
-    """One decode step. token: (b, 1) int32; pos: scalar int32."""
+    """One decode step. token: (b, 1) int32; pos: scalar int32 (all rows
+    at one position, the legacy engine) or (b,) int32 per-slot positions
+    (continuous batching: every cache row advances at its own depth)."""
     pol = prec_lib.resolve(precision, dtype)
     h = jnp.take(params["embed"], token, axis=0).astype(pol.compute_dtype)
     h, new_caches, _ = forward(cfg, params, h, pos, caches=caches, decode=True,

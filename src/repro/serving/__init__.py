@@ -1,4 +1,8 @@
-from repro.serving.engine import Engine  # noqa: F401
+from repro.serving.engine import Engine, sample_tokens  # noqa: F401
+from repro.serving.continuous import (  # noqa: F401
+    ContinuousEngine,
+    FinishedRequest,
+)
 from repro.serving.embed import (  # noqa: F401
     ClassEmbeddingRegistry,
     MicroBatcher,

@@ -1,0 +1,311 @@
+"""Continuous-batching decode engine (DESIGN.md §12).
+
+The legacy ``Engine`` decodes a FIXED batch in lockstep: every request
+prefills together, every slot steps together, and the whole batch only
+retires when its slowest member finishes. This engine decouples the two
+phases JetStream/MaxText-style around a slot-based cache of capacity
+``num_slots``:
+
+  prefill(prompt)      one b=1 compiled forward per prompt length, emitting
+                       the first greedy token and a single cache ROW
+  insert(row, slot)    splice that row into the packed (num_slots, ...)
+                       KV/SSM cache — ONE compiled program regardless of
+                       prompt length, so admission never recompiles
+  generate_step()      one jitted donated step advancing ALL slots one
+                       token via per-slot positions (models.transformer
+                       ``decode_step`` with ``pos: (S,)``) — each row is
+                       RoPE'd, cache-written, and length-masked at its own
+                       decode depth
+
+Host-side per-slot state (request id, position, emitted tokens, EOS)
+retires finished slots and immediately refills them from the FIFO
+admission queue, so new requests stream in while others keep decoding.
+
+Parity contract (pinned by tests/test_continuous_engine.py): for greedy
+decoding, every request's tokens are identical to ``Engine.generate``
+run ALONE on that request — prefill is literally the same b=1 program,
+and the packed generate step computes each row independently (stale
+cache entries past a slot's position weight exactly 0 under the per-slot
+mask, so a reused slot can never leak a retired request's context).
+
+Telemetry: a private ``obs.Registry`` (injectable via ``registry=``)
+carries ``decode/slot_occupancy`` (gauge + ratio histogram),
+``decode/admission_wait_s`` / ``decode/prefill_s`` / ``decode/step_s``
+histograms, and ``decode/tokens`` / ``decode/requests`` counters —
+``tokens/s`` falls out of ``decode/tokens`` over the run wall clock
+(``stats()`` reports it directly).
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import time
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models import precision as prec_lib
+from repro.models import transformer as tf
+from repro.obs import Registry
+from repro.obs.metrics import RATIO_BUCKETS
+from repro.serving.engine import sample_tokens
+
+
+@dataclasses.dataclass
+class FinishedRequest:
+    """A retired request: its id, prompt length, and every generated token
+    (EOS included when hit; never padded — pad tokens from the fixed-shape
+    step are masked out host-side before they can reach a result)."""
+    request_id: int
+    prompt_len: int
+    tokens: np.ndarray           # (n_generated,) int32, n <= max_new_tokens
+
+
+@dataclasses.dataclass
+class _Slot:
+    """Host-side state of one cache row (the device holds only the packed
+    KV/SSM rows; everything the scheduler needs lives here)."""
+    request_id: int = -1
+    active: bool = False
+    pos: int = 0                 # next decode position (= prompt_len + n - 1
+    #                              when emitting token n, 1-based)
+    next_token: int = 0          # last sampled token, the next step's input
+    emitted: Optional[list] = None
+    max_new: int = 0
+    prompt_len: int = 0
+    rng: Optional[np.random.Generator] = None
+
+
+class ContinuousEngine:
+    """Slot-based continuous-batching decode engine.
+
+    ``submit()`` enqueues requests; each ``step()`` admits queued requests
+    into free slots (prefill → insert), advances every active slot one
+    token with a single jitted program, and retires slots whose request
+    hit EOS or its token budget — returning those as ``FinishedRequest``
+    records. ``run()`` is the drain loop.
+
+    Greedy (``temperature=0``) outputs are bit-identical per request to
+    ``Engine.generate`` run alone (the parity suite's contract); sampled
+    decoding draws from a PER-REQUEST rng seeded by ``(seed, request_id)``
+    so outputs stay reproducible under any arrival order.
+    """
+
+    def __init__(self, cfg: ArchConfig, params, *, cache_len: int,
+                 num_slots: int, dtype=None, precision=None,
+                 attn: Optional[str] = None,
+                 moe_args: Optional[dict] = None,
+                 eos_id: int = 3, temperature: float = 0.0, seed: int = 0,
+                 registry: Optional[Registry] = None):
+        assert cfg.causal, f"{cfg.name} is encoder-only; no decode step"
+        assert num_slots >= 1, num_slots
+        if attn is not None:
+            from repro.models import attention as attn_lib
+            if attn != "auto" and attn not in attn_lib.ATTN_BACKENDS:
+                raise KeyError(
+                    f"unknown attention impl {attn!r}; have "
+                    f"{attn_lib.available_backends()} + 'auto'")
+            cfg = dataclasses.replace(cfg, attn_impl=attn)
+        self.cfg, self.params = cfg, params
+        self.cache_len = int(cache_len)
+        self.num_slots = int(num_slots)
+        self.precision = prec_lib.resolve(precision, dtype or jnp.float32)
+        self.moe_args = moe_args or {}
+        self.eos_id = int(eos_id)
+        self.temperature = float(temperature)
+        self.seed = int(seed)
+
+        self._prefill = jax.jit(self._prefill_impl)      # compiled per plen
+        self._insert = jax.jit(self._insert_impl,        # ONE compile: row
+                               donate_argnums=(0,))      # shape is plen-free
+        self._step = jax.jit(self._step_impl, donate_argnums=(1,))
+
+        self._queue: collections.deque = collections.deque()
+        self._slots = [_Slot() for _ in range(self.num_slots)]
+        self._caches = None                              # built on 1st insert
+        self._next_id = 0
+        self._finished: List[FinishedRequest] = []
+        self._t0 = None
+
+        self.registry = registry if registry is not None else Registry()
+        self._m_occ = self.registry.gauge("decode/slot_occupancy")
+        self._m_occ_hist = self.registry.histogram(
+            "decode/slot_occupancy_ratio", buckets=RATIO_BUCKETS)
+        self._m_queue = self.registry.gauge("decode/queue_depth")
+        self._m_admit = self.registry.histogram("decode/admission_wait_s")
+        self._m_prefill = self.registry.histogram("decode/prefill_s")
+        self._m_step = self.registry.histogram("decode/step_s")
+        self._m_tokens = self.registry.counter("decode/tokens")
+        self._m_requests = self.registry.counter("decode/requests")
+        self._m_admitted = self.registry.counter("decode/admissions")
+
+    # -- compiled bodies ---------------------------------------------------
+    def _prefill_impl(self, params, tokens):
+        """b=1 prompt forward -> (last-position logits, one cache row)."""
+        logits, caches = tf.prefill(self.cfg, params, {"tokens": tokens},
+                                    precision=self.precision,
+                                    moe_args=self.moe_args,
+                                    collect_cache_len=self.cache_len)
+        return logits[:, 0, :], caches
+
+    def _insert_impl(self, caches, row, slot):
+        """Splice a b=1 prefill row into the packed cache at ``slot``.
+
+        Every cache leaf is stacked (n_periods, batch, ...), so one
+        ``dynamic_update_slice_in_dim`` on axis 1 covers KV and SSM leaves
+        alike; the row fully overwrites the slot (prefill zero-pads past
+        the prompt), so no bytes of the previous tenant survive."""
+        return jax.tree.map(
+            lambda big, r: jax.lax.dynamic_update_slice_in_dim(
+                big, r.astype(big.dtype), slot, axis=1), caches, row)
+
+    def _step_impl(self, params, caches, tokens, pos):
+        """Advance all slots one token: per-slot positions end to end."""
+        logits, caches = tf.decode_step(self.cfg, params, tokens, pos,
+                                        caches, precision=self.precision,
+                                        moe_args=self.moe_args)
+        return logits[:, 0, :], caches
+
+    # -- admission ---------------------------------------------------------
+    def submit(self, prompt: np.ndarray, max_new_tokens: int,
+               request_id: Optional[int] = None) -> int:
+        """Enqueue one request. ``prompt``: (plen,) int32. Returns its id
+        (auto-assigned unless given). Requests are admitted FIFO as slots
+        free up; the queue is unbounded (capacity pressure lives in the
+        slot array, not here)."""
+        prompt = np.asarray(prompt, np.int32)
+        assert prompt.ndim == 1 and prompt.size >= 1, prompt.shape
+        assert max_new_tokens >= 1, max_new_tokens
+        if not (prompt.size + max_new_tokens <= self.cache_len
+                or self.cfg.sliding_window is not None):
+            raise ValueError(
+                f"prompt_len {prompt.size} + max_new_tokens "
+                f"{max_new_tokens} exceeds cache_len {self.cache_len}")
+        rid = self._next_id if request_id is None else int(request_id)
+        self._next_id = max(self._next_id, rid) + 1
+        self._queue.append((rid, prompt, int(max_new_tokens), time.time()))
+        self._m_queue.set(len(self._queue))
+        self._m_requests.inc()
+        return rid
+
+    def _free_slots(self) -> List[int]:
+        return [i for i, s in enumerate(self._slots) if not s.active]
+
+    def _admit(self) -> None:
+        """Fill free slots from the queue: prefill(prompt) -> insert(slot).
+
+        A request whose FIRST token already finishes it (max_new_tokens=1,
+        or an immediate EOS) retires here and never occupies a slot."""
+        for slot_idx in self._free_slots():
+            if not self._queue:
+                break
+            rid, prompt, max_new, t_sub = self._queue.popleft()
+            t0 = time.time()
+            self._m_admit.observe(t0 - t_sub)
+            logits, row = self._prefill(self.params,
+                                        jnp.asarray(prompt[None, :]))
+            rng = np.random.default_rng((self.seed, rid))
+            tok = int(sample_tokens(logits, self.temperature, rng)[0])
+            self._m_tokens.inc()
+            self._m_admitted.inc()
+            if tok == self.eos_id or max_new == 1:
+                self._finished.append(FinishedRequest(
+                    request_id=rid, prompt_len=prompt.size,
+                    tokens=np.asarray([tok], np.int32)))
+                self._m_prefill.observe(time.time() - t0)
+                continue
+            if self._caches is None:
+                # size the packed cache off the first real row: same leaf
+                # dtypes/shapes as prefill builds (policy-dependent), with
+                # the batch axis widened to num_slots
+                self._caches = jax.tree.map(
+                    lambda r: jnp.zeros(
+                        (r.shape[0], self.num_slots, *r.shape[2:]), r.dtype),
+                    row)
+            self._caches = self._insert(self._caches, row,
+                                        jnp.asarray(slot_idx, jnp.int32))
+            s = self._slots[slot_idx]
+            s.request_id, s.active = rid, True
+            s.pos, s.next_token = prompt.size, tok
+            s.emitted, s.max_new = [tok], max_new
+            s.prompt_len, s.rng = prompt.size, rng
+            self._m_prefill.observe(time.time() - t0)
+        self._m_queue.set(len(self._queue))
+
+    # -- decode ------------------------------------------------------------
+    def step(self) -> List[FinishedRequest]:
+        """One engine tick: admit, advance every active slot one token,
+        retire. Returns the requests that finished during this tick (also
+        drained from an internal list — callers own them)."""
+        if self._t0 is None:
+            self._t0 = time.time()
+        self._admit()
+        active = [i for i, s in enumerate(self._slots) if s.active]
+        self._m_occ.set(len(active) / self.num_slots)
+        self._m_occ_hist.observe(len(active) / self.num_slots)
+        if active:
+            t0 = time.time()
+            tokens = np.zeros((self.num_slots, 1), np.int32)
+            pos = np.zeros((self.num_slots,), np.int32)
+            for i in active:
+                tokens[i, 0] = self._slots[i].next_token
+                pos[i] = self._slots[i].pos
+            logits, self._caches = self._step(
+                self.params, self._caches, jnp.asarray(tokens),
+                jnp.asarray(pos))
+            logits = np.asarray(logits, np.float32)
+            for i in active:
+                s = self._slots[i]
+                tok = int(sample_tokens(logits[i:i + 1], self.temperature,
+                                        s.rng)[0])
+                s.emitted.append(tok)
+                s.pos += 1
+                s.next_token = tok
+                self._m_tokens.inc()
+                if tok == self.eos_id or len(s.emitted) >= s.max_new:
+                    self._finished.append(FinishedRequest(
+                        request_id=s.request_id, prompt_len=s.prompt_len,
+                        tokens=np.asarray(s.emitted, np.int32)))
+                    s.active = False
+                    s.emitted, s.rng = None, None
+            self._m_step.observe(time.time() - t0)
+        out, self._finished = self._finished, []
+        return out
+
+    @property
+    def pending(self) -> int:
+        """Requests not yet finished: queued + occupying a slot."""
+        return len(self._queue) + sum(s.active for s in self._slots)
+
+    def run(self, requests=None, *, max_steps: int = 100_000
+            ) -> Dict[int, np.ndarray]:
+        """Drain loop: optionally ``submit()`` each ``(prompt, max_new)``
+        pair (or ``(prompt, max_new, request_id)`` triple), then ``step()``
+        until nothing is pending. Returns {request_id: tokens}."""
+        for req in requests or []:
+            self.submit(*req)
+        done: Dict[int, np.ndarray] = {}
+        steps = 0
+        while self.pending:
+            for fin in self.step():
+                done[fin.request_id] = fin.tokens
+            steps += 1
+            if steps > max_steps:
+                raise RuntimeError(f"run() exceeded {max_steps} steps with "
+                                   f"{self.pending} requests pending")
+        return done
+
+    def stats(self) -> dict:
+        """Registry snapshot + derived throughput (tokens/s over the wall
+        clock since the first ``step()``)."""
+        snap = self.registry.snapshot()
+        elapsed = (time.time() - self._t0) if self._t0 else 0.0
+        snap["derived"] = {
+            "tokens_per_sec": (self._m_tokens.value / elapsed
+                               if elapsed > 0 else 0.0),
+            "elapsed_s": elapsed,
+        }
+        return snap

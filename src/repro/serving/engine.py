@@ -12,9 +12,12 @@ the full-sequence backend for prefill (``models.attention`` registry) AND
 the decode backend (``resolve_decode_backend``; 'pallas' sweeps the KV
 cache with the kernels/decode_attention GQA kernel).
 
-Sampling: greedy or temperature. Per-slot EOS stops are tracked host-side;
+Sampling: greedy or temperature (module-level ``sample_tokens``, shared
+with the continuous engine). Per-slot EOS stops are tracked host-side;
 finished slots keep decoding pad tokens (masked out of the result) — the
-fixed-shape analog of continuous batching.
+fixed-shape analog of continuous batching (``serving.continuous`` lifts
+the fixed-batch restriction with slot-level admission; this engine stays
+the lockstep baseline and the parity oracle its tests pin against).
 """
 from __future__ import annotations
 
@@ -30,7 +33,26 @@ from repro.models import precision as prec_lib
 from repro.models import transformer as tf
 
 
+def sample_tokens(logits, temperature, rng) -> np.ndarray:
+    """Sample one token per row from (b, vocab) logits. Greedy for
+    ``temperature <= 0`` (fp32 host-side argmax — the tie-break every
+    engine must share for token-level parity), else softmax sampling
+    drawn from ``rng``."""
+    logits = np.asarray(logits, np.float32)
+    if temperature <= 0:
+        return np.argmax(logits, axis=-1).astype(np.int32)
+    p = jax.nn.softmax(jnp.asarray(logits / temperature), axis=-1)
+    p = np.asarray(p)
+    return np.array([rng.choice(p.shape[-1], p=pi / pi.sum())
+                     for pi in p], np.int32)
+
+
 class Engine:
+    """Lockstep fixed-batch decode engine: one prefill + one donated
+    decode program per (batch, cache_len); every slot advances together
+    and the batch retires when its slowest request finishes. The
+    continuous engine's parity oracle (DESIGN.md §12.3)."""
+
     def __init__(self, cfg: ArchConfig, params, *, cache_len: int,
                  dtype=None, precision=None,
                  attn: Optional[str] = None,
@@ -95,12 +117,7 @@ class Engine:
             tok = self._sample(logits, temperature, rng)
         return out
 
-    @staticmethod
-    def _sample(logits, temperature, rng):
-        logits = np.asarray(logits, np.float32)
-        if temperature <= 0:
-            return np.argmax(logits, axis=-1).astype(np.int32)
-        p = jax.nn.softmax(jnp.asarray(logits / temperature), axis=-1)
-        p = np.asarray(p)
-        return np.array([rng.choice(p.shape[-1], p=pi / pi.sum())
-                         for pi in p], np.int32)
+    # kept as a staticmethod alias so existing callers/tests that reach
+    # for Engine._sample keep working; the one implementation lives at
+    # module level so both engines share its tie-breaking exactly
+    _sample = staticmethod(sample_tokens)

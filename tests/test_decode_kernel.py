@@ -55,6 +55,69 @@ def test_decode_attention_single_valid_slot():
                                atol=2e-5)
 
 
+@pytest.mark.parametrize("b,h,kv,t,d", [
+    (4, 8, 2, 256, 64),
+    (3, 4, 4, 128, 32),
+    (2, 16, 1, 256, 64),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_decode_attention_per_slot_ragged(b, h, kv, t, d, dtype):
+    """Continuous-batching shape: every slot has its OWN live length —
+    including the edge lengths 0 (a free slot: must return zeros) and t
+    (a fully wrapped slot) — and the kernel must match the per-slot
+    einsum oracle row for row."""
+    ks = jax.random.split(jax.random.key(7 * b + t + h), 3)
+    q = jax.random.normal(ks[0], (b, h, d), jnp.float32).astype(dtype)
+    k = jax.random.normal(ks[1], (b, kv, t, d), jnp.float32).astype(dtype)
+    v = jax.random.normal(ks[2], (b, kv, t, d), jnp.float32).astype(dtype)
+    # staggered lengths: 0 (free slot), 1, ragged middles, full cache
+    lengths = np.array([0, 1, t // 2 - 3, t][:b] + [t // 3] * max(0, b - 4))
+    valid = jnp.arange(t)[None, :] < jnp.asarray(lengths)[:, None]
+    ref = decode_attention_ref(q, k, v, valid)
+    got = decode_attention(q, k, v, valid, block_k=64, interpret=True)
+    tol = 2e-5 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(ref, np.float32),
+                               rtol=tol, atol=tol)
+    # the length-0 row is exactly zero in both
+    np.testing.assert_array_equal(np.asarray(got[0], np.float32),
+                                  np.zeros((h, d), np.float32))
+
+
+def test_decode_attention_per_slot_matches_shared_mask():
+    """A (b, t) mask with identical rows must reproduce the legacy (t,)
+    shared-mask result bit for bit (same kernel schedule either way)."""
+    ks = jax.random.split(jax.random.key(11), 3)
+    b, h, kv, t, d = 3, 6, 2, 128, 32
+    q = jax.random.normal(ks[0], (b, h, d))
+    k = jax.random.normal(ks[1], (b, kv, t, d))
+    v = jax.random.normal(ks[2], (b, kv, t, d))
+    shared = jnp.arange(t) < 77
+    per_slot = jnp.broadcast_to(shared[None, :], (b, t))
+    a = decode_attention(q, k, v, shared, block_k=32, interpret=True)
+    bb = decode_attention(q, k, v, per_slot, block_k=32, interpret=True)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(bb))
+
+
+def test_decode_attention_per_slot_stale_rows_never_leak():
+    """Slots beyond a row's live length carry STALE data from a retired
+    request; poisoning them with huge values must not move the output
+    (exp(NEG_INF - m) underflows to exactly 0)."""
+    ks = jax.random.split(jax.random.key(12), 3)
+    b, h, kv, t, d = 2, 4, 2, 128, 32
+    q = jax.random.normal(ks[0], (b, h, d))
+    k = jax.random.normal(ks[1], (b, kv, t, d))
+    v = jax.random.normal(ks[2], (b, kv, t, d))
+    lengths = jnp.asarray([5, 100])
+    valid = jnp.arange(t)[None, :] < lengths[:, None]
+    clean = decode_attention(q, k, v, valid, block_k=32, interpret=True)
+    poison = jnp.where(valid[:, None, :, None], v, 1e6)
+    kp = jnp.where(valid[:, None, :, None], k, 1e6)
+    dirty = decode_attention(q, kp, poison, valid, block_k=32,
+                             interpret=True)
+    np.testing.assert_array_equal(np.asarray(clean), np.asarray(dirty))
+
+
 def test_decode_attention_matches_model_decode_path():
     """Kernel agrees with models.attention.decode_attention's einsum math."""
     ks = jax.random.split(jax.random.key(2), 3)

@@ -28,8 +28,12 @@ def _args(**kw):
 
 def test_trainer_reduces_loss():
     # uniform-random tokens have an entropy floor of ln(vocab) ~ 6.24; from
-    # a ~6.6 init the trainer must close most of the gap to the floor.
-    losses = train(_args(steps=40, lr=5e-3))
+    # a ~6.6 init the trainer must close most of the gap to the floor. The
+    # AdaFactorW+warmup-cosine run transits a loss BUMP (up to ~7.0 around
+    # steps 10-30, second-moment estimates settling) before descending, so
+    # the horizon must extend past it: at 40 steps last-5 mean still sits
+    # above first-5, at 80 the descent is unambiguous (~6.58 -> ~6.40).
+    losses = train(_args(steps=80, lr=5e-3))
     assert np.mean(losses[-5:]) < np.mean(losses[:5]) - 0.05, \
         (np.mean(losses[:5]), np.mean(losses[-5:]))
     assert all(np.isfinite(losses))
