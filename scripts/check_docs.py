@@ -5,7 +5,7 @@ modules lacks a docstring:
 
   - every module under src/repro/core/
   - every kernels public-op module src/repro/kernels/*/ops.py
-  - every module under src/repro/serving/embed/
+  - every module under src/repro/serving/embed/ and serving/retrieval/
   - every module under src/repro/models/ (the tower runtime)
   - every module under src/repro/data/ incl. data/sharded/ (the input
     subsystem, ISSUE-5)
@@ -35,6 +35,7 @@ COVERED_GLOBS = (
     os.path.join("src", "repro", "kernels", "*", "ops.py"),
     os.path.join("src", "repro", "serving", "*.py"),
     os.path.join("src", "repro", "serving", "embed", "*.py"),
+    os.path.join("src", "repro", "serving", "retrieval", "*.py"),
     os.path.join("src", "repro", "models", "*.py"),
     os.path.join("src", "repro", "data", "*.py"),
     os.path.join("src", "repro", "data", "sharded", "*.py"),

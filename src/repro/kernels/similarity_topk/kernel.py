@@ -61,8 +61,8 @@ def _merge_topk(vals, idx, cand_v, cand_i, k):
     return jnp.stack(out_v, axis=1), jnp.stack(out_i, axis=1)
 
 
-def _topk_kernel(x_ref, c_ref, inv_tau_ref, vals_ref, idx_ref, vscr, iscr,
-                 *, bc, k, n_classes, nj):
+def _topk_kernel(x_ref, c_ref, inv_tau_ref, n_valid_ref, vals_ref, idx_ref,
+                 vscr, iscr, *, bc, k, nj):
     j = pl.program_id(1)
 
     @pl.when(j == 0)
@@ -72,7 +72,7 @@ def _topk_kernel(x_ref, c_ref, inv_tau_ref, vals_ref, idx_ref, vscr, iscr,
 
     a = _tile(x_ref, c_ref, inv_tau_ref[0])                    # (bm, bc)
     col = j * bc + jax.lax.broadcasted_iota(jnp.int32, a.shape, 1)
-    a = jnp.where(col < n_classes, a, NEG)                     # mask padding
+    a = jnp.where(col < n_valid_ref[0], a, NEG)                # mask padding
 
     vscr[...], iscr[...] = _merge_topk(vscr[...], iscr[...], a, col, k)
 
@@ -82,25 +82,34 @@ def _topk_kernel(x_ref, c_ref, inv_tau_ref, vals_ref, idx_ref, vscr, iscr,
         idx_ref[...] = iscr[...]
 
 
-def topk_fused(x, c, inv_tau, *, k, bm, bc, n_classes, interpret=False):
+def topk_fused(x, c, inv_tau, *, k, bm, bc, n_classes, n_valid=None,
+               interpret=False):
     """One grid sweep -> (values (b, k) fp32, indices (b, k) int32).
 
     x: (b, d) with b % bm == 0; c: (n_pad, d) with n_pad % bc == 0 and
     rows ≥ n_classes zero-padded (masked by index inside the kernel).
+    ``n_valid`` optionally overrides the static ``n_classes`` mask with a
+    TRACED scalar (the sharded serving path masks each shard's padded tail
+    with a value computed from the shard index at run time); columns ≥ the
+    mask carry value NEG, so when fewer than k valid columns exist the tail
+    of the output is (NEG, <masked col id>) — callers that shard must
+    retire those by value (see serving/retrieval/sharded.py).
     """
     b, d = x.shape
     n_pad = c.shape[0]
     assert b % bm == 0 and n_pad % bc == 0, (b, bm, n_pad, bc)
     ni, nj = b // bm, n_pad // bc
     inv_tau = jnp.asarray([inv_tau], jnp.float32)
+    n_valid = jnp.asarray(n_classes if n_valid is None else n_valid,
+                          jnp.int32).reshape((1,))
 
     return pl.pallas_call(
-        functools.partial(_topk_kernel, bc=bc, k=k, n_classes=n_classes,
-                          nj=nj),
+        functools.partial(_topk_kernel, bc=bc, k=k, nj=nj),
         grid=(ni, nj),
         in_specs=[
             pl.BlockSpec((bm, d), lambda i, j: (i, 0)),
             pl.BlockSpec((bc, d), lambda i, j: (j, 0)),
+            pl.BlockSpec((1,), lambda i, j: (0,)),
             pl.BlockSpec((1,), lambda i, j: (0,)),
         ],
         out_specs=[
@@ -114,4 +123,4 @@ def topk_fused(x, c, inv_tau, *, k, bm, bc, n_classes, interpret=False):
             pltpu.VMEM((bm, k), jnp.int32),     # running top-k class ids
         ],
         interpret=interpret,
-    )(x, c, inv_tau)
+    )(x, c, inv_tau, n_valid)

@@ -67,15 +67,50 @@ def pick_bc(n: int, d: int, k: int, bm: int, itemsize: int, *,
     return 128
 
 
+def merge_topk(cand_v, cand_i, k: int):
+    """Top-k of a (b, m) candidate pool: k unrolled select-max-retire
+    rounds, the SAME ordering contract as the kernel's running merge —
+    descending by value, ties broken by the LOWER index (each round picks
+    the smallest index among the columns achieving the row max, then
+    retires that candidate). The sharded serving path feeds it the
+    all-gathered per-shard top-k pools (top-k-of-top-k combine,
+    serving/retrieval/sharded.py); because the rule is order-independent,
+    merging per-shard top-ks is bit-identical to one global sweep.
+
+    cand_v: (b, m) fp32 values; cand_i: (b, m) int32 ids (globally unique
+    per row; `kernel.IDX_PAD` marks empty slots, which must carry value
+    `kernel.NEG`). Returns (values (b, k) fp32, indices (b, k) int32).
+    """
+    from repro.kernels.similarity_topk.kernel import IDX_PAD, NEG
+
+    if cand_v.shape[1] < k:
+        raise ValueError(f"candidate pool {cand_v.shape} narrower than "
+                         f"k={k}")
+    out_v, out_i = [], []
+    for _ in range(int(k)):
+        m = jnp.max(cand_v, axis=1)                            # (b,)
+        at_max = cand_v == m[:, None]
+        sel = jnp.min(jnp.where(at_max, cand_i, IDX_PAD), axis=1)
+        out_v.append(m)
+        out_i.append(sel)
+        cand_v = jnp.where(cand_i == sel[:, None], NEG, cand_v)
+    return (jnp.stack(out_v, axis=1).astype(jnp.float32),
+            jnp.stack(out_i, axis=1).astype(jnp.int32))
+
+
 def similarity_topk(image_emb, class_emb, k: int, *, inv_tau=1.0,
                     bm: int | None = None, bc: int | None = None,
+                    n_valid=None,
                     interpret: bool | None = None):
     """Top-k similarities of each image row against every class row.
 
     image_emb: (b, d); class_emb: (n, d); returns (values (b, k) fp32,
     indices (b, k) int32), rows sorted descending, ties broken by lower
     class index. ``interpret=None`` auto-detects the backend (compiled on
-    accelerators, interpreter on CPU).
+    accelerators, interpreter on CPU). ``n_valid`` optionally narrows the
+    valid class prefix with a TRACED scalar (columns ≥ n_valid are masked
+    to the NEG sentinel — the shard-local mask of the mesh-sharded path,
+    where the last shard's tail padding is only known per shard index).
     """
     b, d = image_emb.shape
     n, d2 = class_emb.shape
@@ -107,7 +142,8 @@ def similarity_topk(image_emb, class_emb, k: int, *, inv_tau=1.0,
         c = jnp.pad(c, ((0, n_pad - n), (0, 0)))
 
     vals, idx = kernel.topk_fused(x, c, inv_tau, k=k, bm=bm, bc=bc,
-                                  n_classes=n, interpret=interpret)
+                                  n_classes=n, n_valid=n_valid,
+                                  interpret=interpret)
     return vals[:b], idx[:b]
 
 

@@ -39,8 +39,17 @@ def main():
                     help="tokenizer artifact version "
                          "(artifacts/tokenizer_<v>.json)")
     ap.add_argument("--max-delay-ms", type=float, default=2.0)
+    ap.add_argument("--retrieval", default="fused",
+                    choices=("fused", "sharded", "twostage"),
+                    help="top-k sweep: single-device fused kernel, "
+                         "mesh-sharded exact, or coarse→fine two-stage "
+                         "(DESIGN.md §13)")
+    ap.add_argument("--nprobe", default=None,
+                    help="twostage blocks probed per query (int or 'all' "
+                         "= exact; default all)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
+    nprobe = None if args.nprobe in (None, "all") else int(args.nprobe)
 
     cfg = get_arch(args.arch)
     if args.smoke:
@@ -57,7 +66,8 @@ def main():
 
     with ZeroShotService(cfg, params, tok,
                          registry_dir=args.registry_dir,
-                         max_delay_ms=args.max_delay_ms) as svc:
+                         max_delay_ms=args.max_delay_ms,
+                         retrieval=args.retrieval, nprobe=nprobe) as svc:
         t0 = time.time()
         svc.classify(render_images(world, rng.integers(
             0, args.classes, args.batch), rng), world.class_names, k=args.k)

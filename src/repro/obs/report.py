@@ -98,15 +98,71 @@ def format_report(summary: dict) -> str:
     return "\n".join(lines)
 
 
+def format_serving(snapshot: dict) -> str:
+    """Render a serving metrics snapshot (``Registry.snapshot()`` JSON, or
+    the full ``ZeroShotService.stats()`` dict — the ``metrics`` key is
+    unwrapped automatically) with the retrieval path front and centre:
+    per-stage latency percentiles, the two-stage prune ratio, and
+    per-shard winner skew (``serve/retrieval_shard_share`` records the
+    MAX per-shard share of top-k winners each call; 1/S is perfectly
+    balanced, 1.0 means one shard owns every winner)."""
+    snap = snapshot.get("metrics", snapshot)
+    hists = snap.get("histograms", {})
+    counters = snap.get("counters", {})
+    lines = []
+
+    latency = {k: v for k, v in sorted(hists.items())
+               if k.startswith("serve/retrieval_latency_s")}
+    if latency:
+        lines.append(f"{'retrieval latency':<34}{'count':>7}"
+                     + "".join(f"{f'p{q}':>12}" for q in _PCTS))
+        for name, h in latency.items():
+            lines.append(f"{name:<34}{h['count']:>7}"
+                         + "".join(f"{h[f'p{q}'] * 1e3:10.2f}ms"
+                                   for q in _PCTS))
+    for name, h in sorted(hists.items()):
+        if name.startswith("serve/retrieval_prune_ratio") and h["count"]:
+            mean = h["sum"] / h["count"]
+            lines.append(f"prune ratio ({name}): mean {mean:.3f} "
+                         f"p50 {h['p50']:.3f} p99 {h['p99']:.3f} "
+                         f"over {h['count']} calls "
+                         f"(fraction of gallery reranked; lower = "
+                         f"coarser stage pruned more)")
+        elif name.startswith("serve/retrieval_shard_share") and h["count"]:
+            mean = h["sum"] / h["count"]
+            lines.append(f"shard skew ({name}): max-share mean {mean:.3f} "
+                         f"p99 {h['p99']:.3f} over {h['count']} calls "
+                         f"(1/S balanced, 1.0 one shard wins all)")
+    serve_counters = {k: v for k, v in sorted(counters.items())
+                      if k.startswith("serve/")}
+    if serve_counters:
+        lines.append("counters: " + " ".join(f"{k}={v}" for k, v in
+                                             serve_counters.items()))
+    if not lines:
+        lines.append("no serve/retrieval_* series in snapshot")
+    return "\n".join(lines)
+
+
 def main(argv=None) -> int:
     """CLI entry: summarize one runlog; non-zero on schema failures."""
     ap = argparse.ArgumentParser(
         description="summarize a runlog JSONL's trajectory and step-time "
-                    "percentiles (obs/runlog.py schema v1)")
-    ap.add_argument("runlog", help="path to runlog.jsonl")
+                    "percentiles (obs/runlog.py schema v1), or a serving "
+                    "metrics snapshot with --serving")
+    ap.add_argument("runlog", help="path to runlog.jsonl (or, with "
+                                   "--serving, a metrics snapshot JSON)")
     ap.add_argument("--lenient", action="store_true",
                     help="skip invalid records instead of failing")
+    ap.add_argument("--serving", action="store_true",
+                    help="treat the input as a JSON metrics snapshot "
+                         "(Registry.snapshot() or ZeroShotService.stats()) "
+                         "and report the serve/retrieval_* series")
     args = ap.parse_args(argv)
+    if args.serving:
+        import json
+        with open(args.runlog) as f:
+            print(format_serving(json.load(f)))
+        return 0
     try:
         records = rl.read_runlog(args.runlog, strict=not args.lenient)
     except rl.RunlogError as e:

@@ -80,7 +80,9 @@ class ClassEmbeddingRegistry:
         self._compute = compute_fn
         self.cache_dir = cache_dir
         self._mem: dict = {}
-        self.stats = {"mem_hits": 0, "disk_hits": 0, "computes": 0}
+        self._index_mem: dict = {}
+        self.stats = {"mem_hits": 0, "disk_hits": 0, "computes": 0,
+                      "index_hits": 0, "index_builds": 0}
 
     @staticmethod
     def key(class_names: Sequence[str], templates: Sequence[str],
@@ -146,3 +148,38 @@ class ClassEmbeddingRegistry:
         cm = ClassMatrix(key, version, matrix, "computed")
         self._mem[key] = cm
         return cm
+
+    def get_centroid_index(self, cm: ClassMatrix, *,
+                           n_blocks: Optional[int] = None):
+        """The two-stage coarse index for a registry artifact, built once
+        per (key, version, n_blocks) and cached next to the class matrix.
+
+        The memo/disk key embeds the ClassMatrix's own key AND version, so
+        anything that invalidates the matrix — new checkpoint, retrained
+        tokenizer, ``refresh()`` — invalidates the index by construction:
+        a refreshed matrix simply never finds a stale index under its new
+        version. Persists as ``index_v{version}_p{n_blocks}.npz`` in the
+        key directory when the registry has a cache_dir.
+        """
+        from repro.serving.retrieval import twostage
+
+        ikey = (cm.key, cm.version, n_blocks)
+        hit = self._index_mem.get(ikey)
+        if hit is not None:
+            self.stats["index_hits"] += 1
+            return hit
+        kdir = self._key_dir(cm.key)
+        path = (os.path.join(kdir, f"index_v{cm.version}_p{n_blocks}.npz")
+                if kdir else None)
+        if path is not None and os.path.exists(path):
+            index = twostage.CentroidIndex.load(path)
+            self._index_mem[ikey] = index
+            self.stats["index_hits"] += 1
+            return index
+        index = twostage.build_centroid_index(cm.matrix, n_blocks=n_blocks)
+        self.stats["index_builds"] += 1
+        if path is not None:
+            os.makedirs(kdir, exist_ok=True)
+            index.save(path)
+        self._index_mem[ikey] = index
+        return index

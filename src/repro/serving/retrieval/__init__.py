@@ -1,0 +1,14 @@
+"""Planet-scale retrieval: mesh-sharded exact top-k (stage A) and the
+coarse→fine two-stage path (stage B). DESIGN.md §13."""
+from repro.serving.retrieval.sharded import (  # noqa: F401
+    ShardedMatrix,
+    default_data_mesh,
+    shard_matrix,
+    shard_winner_shares,
+    sharded_similarity_topk,
+)
+from repro.serving.retrieval.twostage import (  # noqa: F401
+    CentroidIndex,
+    build_centroid_index,
+    two_stage_topk,
+)

@@ -1,0 +1,196 @@
+"""Stage B: two-stage coarse→fine retrieval for the long tail (§13.2).
+
+Even sharded, an exact sweep touches every one of N rows; at N=10M+ the
+interactive-latency budget only covers a PRUNED sweep. This is the
+IVF-style trade: group the class/gallery rows into blocks around k-means
+centroids (built ONCE per registry artifact version — the index is cached
+alongside the class matrix, so checkpoint/tokenizer refreshes invalidate
+it by construction, registry.py), then per batch
+
+  1. coarse: score the (b, P) query×centroid matrix (P ≈ √N blocks — tiny
+     next to N) and take each query's top-``nprobe`` blocks;
+  2. prune:  the batch's surviving blocks are the UNION of the per-query
+     probes; candidate ids are their members, sorted ASCENDING so the
+     fused kernel's lower-local-index tie-break maps to lower GLOBAL id;
+  3. rerank: one exact fused ``similarity_topk`` sweep over only the
+     candidate rows, local winners mapped back through the id table.
+
+Exactness escape hatch: at ``nprobe >= n_blocks`` every block survives,
+the candidate table is the identity, and the rerank IS the stage-A sweep —
+recall@k = 1.0 by construction, not by tuning (pinned in tests). At
+pruned settings recall is a measured trade against latency
+(``benchmarks/serving_bench.py`` ``topk_twostage/*`` entries).
+
+Rows are fetched through a ``gather`` callback so galleries larger than
+host memory can stream blocks from wherever they live (the N=10M bench
+regenerates blocks from seeds); a materialized (n, d) matrix is the
+common case and short-circuits the full-survival gather.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Optional, Union
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.similarity_topk import ops as topk_ops
+
+
+@dataclasses.dataclass(frozen=True)
+class CentroidIndex:
+    """The coarse index: unit-norm centroids plus the block membership
+    table (a partition of [0, n))."""
+    centroids: np.ndarray    # (P, d) fp32 unit-norm
+    members: np.ndarray      # (P, m_max) int32 global ids, -1 padded
+    counts: np.ndarray       # (P,) int32 real member count per block
+    n: int                   # total rows indexed
+
+    @property
+    def n_blocks(self) -> int:
+        return int(self.centroids.shape[0])
+
+    def block_members(self, block: int) -> np.ndarray:
+        """The global ids of ``block`` (ascending, unpadded)."""
+        return self.members[block, :self.counts[block]]
+
+    def save(self, path: str) -> None:
+        """Persist as an .npz (atomic: tmp + rename)."""
+        import os
+        tmp = f"{path}.tmp{os.getpid()}"
+        with open(tmp, "wb") as f:
+            np.savez(f, centroids=self.centroids, members=self.members,
+                     counts=self.counts, n=np.int64(self.n))
+        os.replace(tmp, path)
+
+    @staticmethod
+    def load(path: str) -> "CentroidIndex":
+        """Inverse of ``save``."""
+        with np.load(path) as z:
+            return CentroidIndex(z["centroids"], z["members"], z["counts"],
+                                 int(z["n"]))
+
+
+def build_centroid_index(matrix, *, n_blocks: Optional[int] = None,
+                         iters: int = 4, seed: int = 0) -> CentroidIndex:
+    """Spherical k-means over the (n, d) unit-norm ``matrix``.
+
+    Deterministic for a given (matrix, n_blocks, iters, seed): init takes
+    ``n_blocks`` evenly spaced rows (seed rotates the offset), each Lloyd
+    iteration assigns rows to their max-cosine centroid and re-normalizes
+    the member mean; empty blocks keep their previous centroid. Defaults
+    to P = ceil(sqrt(n)) blocks — coarse cost O(b·√n), balanced against
+    per-block rerank cost O(b·√n) per probed block.
+    """
+    m = np.asarray(matrix, np.float32)
+    n, d = m.shape
+    if n == 0:
+        raise ValueError("cannot index an empty matrix")
+    p = int(n_blocks) if n_blocks else int(np.ceil(np.sqrt(n)))
+    p = max(1, min(p, n))
+    start = seed % max(n // p, 1)
+    cent = m[(start + (np.arange(p) * n) // p) % n].copy()
+    assign = None
+    for _ in range(max(int(iters), 1)):
+        assign = np.argmax(m @ cent.T, axis=1)                  # (n,)
+        for b in range(p):
+            rows = m[assign == b]
+            if len(rows):
+                c = rows.sum(axis=0)
+                norm = np.linalg.norm(c)
+                if norm > 0:
+                    cent[b] = c / norm
+    counts = np.bincount(assign, minlength=p).astype(np.int32)
+    m_max = max(int(counts.max()), 1)
+    members = np.full((p, m_max), -1, np.int32)
+    order = np.argsort(assign, kind="stable")     # ascending ids per block
+    offs = np.zeros(p, np.int32)
+    for gid in order:
+        b = assign[gid]
+        members[b, offs[b]] = gid
+        offs[b] += 1
+    return CentroidIndex(cent, members, counts, n)
+
+
+def _survivor_blocks(index: CentroidIndex, scores: np.ndarray,
+                     nprobe: int, min_candidates: int) -> np.ndarray:
+    """Union of each query's top-``nprobe`` blocks, grown (best coarse
+    score first) until it holds at least ``min_candidates`` rows — so a
+    tiny nprobe can never starve the rerank below k candidates."""
+    p = index.n_blocks
+    nprobe = min(int(nprobe), p)
+    top = np.argpartition(-scores, nprobe - 1, axis=1)[:, :nprobe] \
+        if nprobe < p else np.tile(np.arange(p), (scores.shape[0], 1))
+    survivors = np.unique(top)
+    have = int(index.counts[survivors].sum())
+    if have < min_candidates:
+        rest = np.setdiff1d(np.arange(p), survivors, assume_unique=True)
+        rest = rest[np.argsort(-scores.max(axis=0)[rest], kind="stable")]
+        for b in rest:
+            survivors = np.append(survivors, b)
+            have += int(index.counts[b])
+            if have >= min_candidates:
+                break
+        survivors = np.sort(survivors)
+    return survivors
+
+
+def two_stage_topk(query_emb, matrix_or_gather, index: CentroidIndex,
+                   k: int, *, nprobe: Union[int, str, None] = None,
+                   inv_tau=1.0, interpret: Optional[bool] = None,
+                   bm: Optional[int] = None, bc: Optional[int] = None):
+    """Coarse-prune + exact-rerank top-k.
+
+    query_emb: (b, d). matrix_or_gather: the materialized (n, d) matrix,
+    or a ``gather(ids) -> (len(ids), d)`` callback for galleries that
+    stream blocks. nprobe: blocks probed per query; ``None``/``"all"``/
+    ``>= n_blocks`` is the exactness escape hatch (≡ the stage-A answer).
+    Returns (values (b, k) fp32, indices (b, k) int32 GLOBAL ids, info)
+    where info carries the prune telemetry: ``n_candidates``,
+    ``n_blocks_probed``, ``prune_ratio`` (candidates/n, 1.0 = no prune),
+    and per-stage seconds (``coarse_s``, ``gather_s``, ``rerank_s``).
+    """
+    q = np.asarray(query_emb, np.float32)
+    n = index.n
+    k = int(k)
+    if not 1 <= k <= n:
+        raise ValueError(f"k={k} must be in [1, n={n}]")
+    if nprobe is None or nprobe == "all":
+        nprobe = index.n_blocks
+    nprobe = int(nprobe)
+    if nprobe < 1:
+        raise ValueError(f"nprobe={nprobe} must be >= 1 (or 'all')")
+
+    t0 = time.perf_counter()
+    scores = q @ index.centroids.T                       # (b, P) — coarse
+    survivors = _survivor_blocks(index, scores, nprobe, k)
+    coarse_s = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    if len(survivors) == index.n_blocks:
+        cand_ids = np.arange(n, dtype=np.int32)          # identity table
+    else:
+        cand_ids = np.sort(np.concatenate(
+            [index.block_members(b) for b in survivors]))
+    if callable(matrix_or_gather):
+        rows = matrix_or_gather(cand_ids)
+    elif len(cand_ids) == n:
+        rows = matrix_or_gather                          # full survival
+    else:
+        rows = np.asarray(matrix_or_gather)[cand_ids]
+    gather_s = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    vals, loc = topk_ops.similarity_topk(
+        jnp.asarray(q), jnp.asarray(rows), min(k, len(cand_ids)),
+        inv_tau=inv_tau, bm=bm, bc=bc, interpret=interpret)
+    gidx = cand_ids[np.asarray(loc)].astype(np.int32)
+    rerank_s = time.perf_counter() - t0
+
+    info = {"n_candidates": int(len(cand_ids)),
+            "n_blocks_probed": int(len(survivors)),
+            "prune_ratio": float(len(cand_ids) / n),
+            "coarse_s": coarse_s, "gather_s": gather_s,
+            "rerank_s": rerank_s}
+    return np.asarray(vals), gidx, info

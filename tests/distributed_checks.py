@@ -324,6 +324,135 @@ def check_ckpt_fault():
     print("ok SIGTERM preemption checkpoint + bit-exact resume")
 
 
+def check_retrieval():
+    """Acceptance (ISSUE-9): the mesh-sharded similarity→top-k serving
+    path is BIT-IDENTICAL to the stable-argsort oracle (and the
+    single-device kernel) on 4-device, 8-device, and 2x4 pod×data meshes —
+    including exact ties and duplicate rows straddling shard boundaries,
+    ragged N (last shard partially padded), n so small that whole shards
+    are dead padding, and bf16 inputs. Then: the ZeroShotService wired to
+    retrieval='sharded' classifies identically to the 'fused' service, a
+    prepared gallery is uploaded once, and k>n clamps / k<1 raises on the
+    sharded path."""
+    from repro.kernels.similarity_topk import ops as topk_ops
+    from repro.kernels.similarity_topk import ref as topk_ref
+    from repro.serving import retrieval as rtv
+
+    b, d, k = 9, 32, 7
+    kx = jax.random.key(23)
+    x = _unit_rows(kx, (b, d))
+    meshes = [
+        jax.make_mesh((4,), ("data",)),
+        jax.make_mesh((8,), ("data",)),
+        jax.make_mesh((2, 4), ("pod", "data")),   # multi-axis linear index
+    ]
+
+    def oracle(x, c, kk):
+        v, i = topk_ref.similarity_topk_ref(jnp.asarray(x, jnp.float32),
+                                            jnp.asarray(c, jnp.float32), kk)
+        return np.asarray(v), np.asarray(i)
+
+    rng = np.random.default_rng(5)
+    for mesh in meshes:
+        s = int(np.prod([mesh.shape[a] for a in mesh.shape]))
+        tag = dict(mesh.shape)
+        # n sweeps: ragged tails, exact multiples, and n < S*k (k=7, S*64
+        # n_local floor -> every shard but the first is 100% padding)
+        for n in (40, 257, 64 * s, 64 * s + 1, 1000):
+            # duplicates + exact ties EVERYWHERE, including straddling
+            # shard boundaries: every row drawn from a 17-row dictionary,
+            # so each boundary [n_local*r - 1, n_local*r] pair collides
+            # with near-certainty and every top-k is a tie-break decision
+            dic = np.asarray(_unit_rows(jax.random.key(n), (17, d)))
+            c = dic[rng.integers(0, 17, n)]
+            kk = min(k, n)
+            want_v, want_i = oracle(x, c, kk)
+            sm = rtv.shard_matrix(jnp.asarray(c), mesh)
+            got_v, got_i = rtv.sharded_similarity_topk(x, sm, kk,
+                                                       interpret=True)
+            np.testing.assert_array_equal(
+                np.asarray(got_i), want_i,
+                err_msg=f"{tag} n={n}: sharded indices != oracle")
+            np.testing.assert_array_equal(
+                np.asarray(got_v), want_v,
+                err_msg=f"{tag} n={n}: sharded values != oracle")
+        print(f"ok sharded==oracle {tag} (ties/duplicates/ragged)")
+
+    # bf16 inputs: compare against the single-device kernel on the SAME
+    # bf16 arrays (shared input rounding; both paths accumulate fp32)
+    mesh = meshes[1]
+    n = 700
+    c = _unit_rows(jax.random.key(41), (n, d))
+    xb, cb = x.astype(jnp.bfloat16), c.astype(jnp.bfloat16)
+    want_v, want_i = topk_ops.similarity_topk(xb, cb, k, interpret=True)
+    sm = rtv.shard_matrix(cb, mesh)
+    got_v, got_i = rtv.sharded_similarity_topk(xb, sm, k, interpret=True)
+    np.testing.assert_array_equal(np.asarray(got_i), np.asarray(want_i))
+    np.testing.assert_array_equal(np.asarray(got_v), np.asarray(want_v))
+    print("ok sharded==fused on bf16 inputs")
+
+    # k validation at the op level
+    sm = rtv.shard_matrix(jnp.asarray(_unit_rows(jax.random.key(2),
+                                                 (300, d))), mesh)
+    for bad_k in (0, -3, 301):
+        try:
+            rtv.sharded_similarity_topk(x, sm, bad_k, interpret=True)
+            raise AssertionError(f"k={bad_k} must raise")
+        except ValueError:
+            pass
+    print("ok op-level k validation")
+
+    # service level: sharded classify == fused classify, upload-once
+    # gallery, k clamping, k<1 rejection
+    import dataclasses as dc
+
+    from repro.configs import get_arch, smoke_variant
+    from repro.data import Tokenizer, caption_corpus, world_for_tower
+    from repro.data.synthetic import render_images
+    from repro.models import dual_encoder as de
+    from repro.serving import ZeroShotService
+
+    cfg = get_arch("basic-s")
+    cfg = dc.replace(cfg, image_tower=smoke_variant(cfg.image_tower),
+                     text_tower=smoke_variant(cfg.text_tower), embed_dim=32)
+    rng = np.random.default_rng(0)
+    world = world_for_tower(rng, cfg.image_tower, n_classes=10, noise=0.2)
+    tok = Tokenizer.train(caption_corpus(world, rng, 300), vocab_size=400)
+    params = de.init_params(cfg, jax.random.key(0))
+    imgs = render_images(world, rng.integers(0, 10, 6), rng)
+
+    with ZeroShotService(cfg, params, tok, max_delay_ms=1.0,
+                         retrieval="fused") as svc:
+        ref_res = svc.classify(imgs, world.class_names, k=5)
+        gal = svc.embed_images(imgs)
+    with ZeroShotService(cfg, params, tok, max_delay_ms=1.0,
+                         retrieval="sharded") as svc:
+        res = svc.classify(imgs, world.class_names, k=5)
+        np.testing.assert_array_equal(res.indices, ref_res.indices)
+        np.testing.assert_array_equal(res.values, ref_res.values)
+        # k > n_classes clamps to n (10), never errors on the sharded path
+        wide = svc.classify(imgs, world.class_names, k=64)
+        assert wide.indices.shape == (6, 10)
+        np.testing.assert_array_equal(wide.indices[:, :5], res.indices)
+        try:
+            svc.classify(imgs, world.class_names, k=0)
+            raise AssertionError("k=0 must raise")
+        except ValueError:
+            pass
+        # prepared gallery: one upload, many retrieves, clamped k
+        handle = svc.prepare_gallery(gal)
+        v1, i1 = svc.retrieve(["a photo"], handle, k=64)
+        v2, i2 = svc.retrieve(["a photo"], handle, k=64)
+        assert i1.shape == (1, 6)       # clamped to the 6-row gallery
+        np.testing.assert_array_equal(i1, i2)
+        snap = svc.metrics.snapshot()
+        assert snap["counters"]["serve/gallery_uploads"] == 1
+        shares = [key for key in snap["histograms"]
+                  if key.startswith("serve/retrieval_shard_share")]
+        assert shares, snap["histograms"].keys()
+    print("ok service-level sharded parity + gallery handle + k clamps")
+
+
 if __name__ == "__main__":
     mode = sys.argv[1] if len(sys.argv) > 1 else "loss"
     if mode == "ckpt_victim":
@@ -332,5 +461,6 @@ if __name__ == "__main__":
     {"loss": check_loss_equivalence,
      "gradaccum": check_gradaccum_composition,
      "sharded_data": check_sharded_data,
-     "ckpt_fault": check_ckpt_fault}[mode]()
+     "ckpt_fault": check_ckpt_fault,
+     "retrieval": check_retrieval}[mode]()
     print(f"PASS {mode}")

@@ -290,3 +290,34 @@ def test_shared_registry_across_subsystems(tmp_path):
     counters = reg.snapshot()["counters"]
     assert counters["serve/requests"] == 2 and counters["ckpt/saves"] == 1
     mb.stop()
+
+
+def test_report_serving_snapshot_rendering(tmp_path, capsys):
+    """--serving renders serve/retrieval_* series: per-stage latency,
+    prune ratio, shard skew, and serve/ counters; unwraps a full
+    ZeroShotService.stats() dict via its "metrics" key."""
+    reg = metrics.Registry()
+    for stage, v in (("coarse", 0.002), ("rerank", 0.05), ("total", 0.06)):
+        reg.histogram("serve/retrieval_latency_s", stage=stage).observe(v)
+    pr = reg.histogram("serve/retrieval_prune_ratio",
+                       buckets=metrics.RATIO_BUCKETS)
+    pr.observe(0.06)
+    pr.observe(0.10)
+    reg.histogram("serve/retrieval_shard_share",
+                  buckets=metrics.RATIO_BUCKETS).observe(0.25)
+    reg.counter("serve/gallery_uploads").inc()
+
+    stats = {"retrieval_mode": "twostage", "metrics": reg.snapshot()}
+    text = report.format_serving(stats)
+    assert "stage=rerank" in text
+    assert "prune ratio" in text and "mean 0.080" in text
+    assert "shard skew" in text and "0.250" in text
+    assert "serve/gallery_uploads=1" in text
+
+    p = tmp_path / "stats.json"
+    p.write_text(json.dumps(stats))
+    assert report.main(["--serving", str(p)]) == 0
+    assert "prune ratio" in capsys.readouterr().out
+
+    assert report.format_serving({"histograms": {}, "counters": {}}) == (
+        "no serve/retrieval_* series in snapshot")

@@ -1,0 +1,457 @@
+"""Planet-scale retrieval (DESIGN.md §13): the top-k-of-top-k combine, the
+two-stage coarse→fine path, the registry's centroid-index cache, and the
+service-level retrieval modes.
+
+The multi-device sharded assertions (ties/duplicates straddling shard
+boundaries vs the stable-argsort oracle, pod×data meshes, service-level
+sharded parity) live in tests/distributed_checks.py ``retrieval`` and run
+in a subprocess with 8 simulated devices (jax pins the device count at
+first init; this process must keep seeing the single real CPU device,
+tests/conftest.py). Here we spawn them and cover everything that doesn't
+need a multi-device mesh in-process.
+"""
+import dataclasses
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.similarity_topk import ops as topk_ops
+from repro.kernels.similarity_topk import ref as topk_ref
+from repro.kernels.similarity_topk.kernel import IDX_PAD, NEG
+from repro.serving import retrieval as rtv
+
+_CHECKS = os.path.join(os.path.dirname(__file__), "distributed_checks.py")
+
+
+def _unit(key, shape):
+    z = jax.random.normal(key, shape, jnp.float32)
+    return z / jnp.linalg.norm(z, axis=-1, keepdims=True)
+
+
+def test_sharded_retrieval_multi_device():
+    """The full §13.1 acceptance suite on 4-, 8- and 2x4-device meshes
+    (subprocess: simulated host devices)."""
+    env = dict(os.environ)
+    env["JAX_PLATFORMS"] = "cpu"
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                        + " --xla_force_host_platform_device_count=8")
+    proc = subprocess.run([sys.executable, _CHECKS, "retrieval"],
+                          capture_output=True, text=True, timeout=900,
+                          env=env)
+    assert proc.returncode == 0, (
+        f"distributed_checks.py retrieval failed\n--- stdout ---\n"
+        f"{proc.stdout}\n--- stderr ---\n{proc.stderr[-4000:]}")
+    assert "PASS retrieval" in proc.stdout
+
+
+# ---------------------------------------------------------------------------
+# merge_topk: the combine the sharded path rests on
+# ---------------------------------------------------------------------------
+
+
+def test_merge_topk_matches_stable_argsort():
+    """Random pools: merge_topk == descending stable sort (ties to the
+    lower id) of the same candidates."""
+    rng = np.random.default_rng(0)
+    v = rng.integers(0, 9, (16, 40)).astype(np.float32)  # many exact ties
+    i = np.argsort(rng.random((16, 40)), axis=1).astype(np.int32)  # unique
+    got_v, got_i = topk_ops.merge_topk(jnp.asarray(v), jnp.asarray(i), 6)
+    # oracle: sort by (-value, id)
+    order = np.lexsort((i, -v), axis=1)[:, :6]
+    np.testing.assert_array_equal(np.asarray(got_v),
+                                  np.take_along_axis(v, order, axis=1))
+    np.testing.assert_array_equal(np.asarray(got_i),
+                                  np.take_along_axis(i, order, axis=1))
+
+
+def test_merge_topk_order_independent():
+    """Column permutation of the candidate pool cannot change the result —
+    the property that makes merging per-shard top-ks exact."""
+    rng = np.random.default_rng(1)
+    v = rng.integers(0, 5, (8, 24)).astype(np.float32)
+    i = np.argsort(rng.random((8, 24)), axis=1).astype(np.int32)
+    base_v, base_i = topk_ops.merge_topk(jnp.asarray(v), jnp.asarray(i), 5)
+    perm = rng.permutation(24)
+    got_v, got_i = topk_ops.merge_topk(jnp.asarray(v[:, perm]),
+                                       jnp.asarray(i[:, perm]), 5)
+    np.testing.assert_array_equal(np.asarray(got_v), np.asarray(base_v))
+    np.testing.assert_array_equal(np.asarray(got_i), np.asarray(base_i))
+
+
+def test_merge_topk_ignores_pad_slots():
+    """NEG/IDX_PAD slots (dead shard tails) never displace real
+    candidates."""
+    v = np.asarray([[3.0, NEG, 1.0, NEG]], np.float32)
+    i = np.asarray([[7, IDX_PAD, 2, IDX_PAD]], np.int32)
+    got_v, got_i = topk_ops.merge_topk(jnp.asarray(v), jnp.asarray(i), 2)
+    np.testing.assert_array_equal(np.asarray(got_i), [[7, 2]])
+    np.testing.assert_array_equal(np.asarray(got_v), [[3.0, 1.0]])
+
+
+def test_merge_topk_rejects_narrow_pool():
+    with pytest.raises(ValueError, match="narrower"):
+        topk_ops.merge_topk(jnp.zeros((2, 3)), jnp.zeros((2, 3), jnp.int32),
+                            4)
+
+
+# ---------------------------------------------------------------------------
+# n_valid masking (the traced shard-tail mask)
+# ---------------------------------------------------------------------------
+
+
+def test_similarity_topk_n_valid_masks_tail():
+    """A traced n_valid < n must reproduce the kernel's answer on the
+    truncated matrix — including when the tail rows would otherwise win."""
+    x = _unit(jax.random.key(0), (5, 16))
+    c = np.array(_unit(jax.random.key(1), (96, 16)))
+    c[80:] = np.asarray(x[0])       # poison: the masked tail aligns with x0
+    c = jnp.asarray(c)
+    want_v, want_i = topk_ops.similarity_topk(x, c[:80], 4, interpret=True)
+    got_v, got_i = topk_ops.similarity_topk(
+        x, c, 4, n_valid=jnp.asarray(80, jnp.int32), interpret=True)
+    np.testing.assert_array_equal(np.asarray(got_i), np.asarray(want_i))
+    np.testing.assert_array_equal(np.asarray(got_v), np.asarray(want_v))
+
+
+def test_similarity_topk_n_valid_zero_emits_sentinels():
+    """n_valid=0 (a fully dead shard) yields NEG values — the combine
+    retires them by value, so they can never alias real rows."""
+    x = _unit(jax.random.key(0), (3, 8))
+    c = _unit(jax.random.key(1), (32, 8))
+    v, i = topk_ops.similarity_topk(x, c, 2,
+                                    n_valid=jnp.asarray(0, jnp.int32),
+                                    interpret=True)
+    assert np.all(np.asarray(v) <= NEG / 2)
+
+
+# ---------------------------------------------------------------------------
+# sharded entry points on the single-device tier-1 host
+# ---------------------------------------------------------------------------
+
+
+def test_sharded_single_device_falls_back_to_fused():
+    """A 1-extent data mesh degenerates to the single-device kernel —
+    bit-identical, no shard_map in the way."""
+    x = _unit(jax.random.key(0), (6, 32))
+    c = _unit(jax.random.key(1), (300, 32))
+    want_v, want_i = topk_ops.similarity_topk(x, c, 5, interpret=True)
+    sm = rtv.shard_matrix(c, rtv.default_data_mesh(1))
+    got_v, got_i = rtv.sharded_similarity_topk(x, sm, 5, interpret=True)
+    np.testing.assert_array_equal(np.asarray(got_i), np.asarray(want_i))
+    np.testing.assert_array_equal(np.asarray(got_v), np.asarray(want_v))
+    assert sm.n_shards == 1 and sm.n == 300
+
+
+def test_shard_matrix_pads_to_topk_floor():
+    """n_local never drops below MAX_K, so any legal k fits one shard."""
+    sm = rtv.shard_matrix(_unit(jax.random.key(0), (10, 8)),
+                          rtv.default_data_mesh(1))
+    assert sm.n_local >= topk_ops.MAX_K
+    assert sm.array.shape[0] == sm.n_shards * sm.n_local
+
+
+def test_shard_winner_shares_sums_to_one():
+    sm = rtv.shard_matrix(_unit(jax.random.key(0), (128, 8)),
+                          rtv.default_data_mesh(1))
+    shares = rtv.shard_winner_shares(np.asarray([[0, 1], [2, 3]]), sm)
+    assert shares.shape == (1,)
+    np.testing.assert_allclose(shares.sum(), 1.0)
+
+
+# ---------------------------------------------------------------------------
+# two-stage coarse→fine
+# ---------------------------------------------------------------------------
+
+
+def _clustered(n, d, p, seed, sigma=0.2):
+    rng = np.random.default_rng(seed)
+    cent = rng.standard_normal((p, d)).astype(np.float32)
+    cent /= np.linalg.norm(cent, axis=1, keepdims=True)
+    rows = cent[rng.integers(0, p, n)] + sigma * rng.standard_normal(
+        (n, d)).astype(np.float32)
+    return rows / np.linalg.norm(rows, axis=1, keepdims=True)
+
+
+def test_twostage_nprobe_all_is_exact():
+    """The exactness escape hatch: nprobe='all' (and >= n_blocks, and the
+    default None) reproduce the stage-A fused answer bit-for-bit."""
+    q = np.asarray(_unit(jax.random.key(0), (9, 24)))
+    m = _clustered(800, 24, 12, seed=3)
+    index = rtv.build_centroid_index(m, n_blocks=12)
+    want_v, want_i = topk_ops.similarity_topk(
+        jnp.asarray(q), jnp.asarray(m), 6, interpret=True)
+    for nprobe in ("all", None, 12, 99):
+        got_v, got_i, info = rtv.two_stage_topk(q, m, index, 6,
+                                                nprobe=nprobe,
+                                                interpret=True)
+        np.testing.assert_array_equal(got_i, np.asarray(want_i))
+        np.testing.assert_array_equal(got_v, np.asarray(want_v))
+        assert info["prune_ratio"] == 1.0
+
+
+def test_twostage_recall_monotone_in_nprobe():
+    """More probes → (weakly) better recall, less pruning; clustered data
+    reaches recall 1.0 well before nprobe=all."""
+    q = _clustered(8, 16, 10, seed=7, sigma=0.1)
+    m = _clustered(2000, 16, 10, seed=7, sigma=0.1)
+    index = rtv.build_centroid_index(m, n_blocks=10)
+    _, want_i = topk_ops.similarity_topk(
+        jnp.asarray(q), jnp.asarray(m), 5, interpret=True)
+    want_sets = [set(r) for r in np.asarray(want_i)]
+    prev_recall, prev_prune = -1.0, -1.0
+    for nprobe in (1, 3, 10):
+        _, got_i, info = rtv.two_stage_topk(q, m, index, 5, nprobe=nprobe,
+                                            interpret=True)
+        recall = np.mean([len(set(g) & w) / 5
+                          for g, w in zip(got_i, want_sets)])
+        assert recall >= prev_recall
+        assert info["prune_ratio"] >= prev_prune
+        prev_recall, prev_prune = recall, info["prune_ratio"]
+    assert prev_recall == 1.0       # nprobe=n_blocks is exact
+
+
+def test_twostage_expands_blocks_when_starved():
+    """nprobe so small the probed blocks hold < k rows: the survivor set
+    grows (best coarse score first) until >= k candidates exist."""
+    rng = np.random.default_rng(0)
+    m = np.asarray(_unit(jax.random.key(0), (60, 8)))
+    # highly skewed index: force tiny blocks by building many of them
+    index = rtv.build_centroid_index(m, n_blocks=30)
+    q = np.asarray(_unit(jax.random.key(1), (2, 8)))
+    k = 20                          # >> any single block
+    vals, gidx, info = rtv.two_stage_topk(q, m, index, k, nprobe=1,
+                                          interpret=True)
+    assert info["n_candidates"] >= k
+    assert gidx.shape == (2, k)
+    assert len({int(i) for i in gidx[0]}) == k      # no duplicate winners
+
+
+def test_twostage_gather_callback_matches_matrix():
+    """A gather callback (streamed-gallery storage model) must agree with
+    the materialized-matrix path."""
+    q = np.asarray(_unit(jax.random.key(0), (4, 16)))
+    m = _clustered(500, 16, 8, seed=11)
+    index = rtv.build_centroid_index(m, n_blocks=8)
+    v1, i1, _ = rtv.two_stage_topk(q, m, index, 5, nprobe=3,
+                                   interpret=True)
+    v2, i2, _ = rtv.two_stage_topk(q, lambda ids: m[ids], index, 5,
+                                   nprobe=3, interpret=True)
+    np.testing.assert_array_equal(i1, i2)
+    np.testing.assert_array_equal(v1, v2)
+
+
+def test_twostage_validates_k_and_nprobe():
+    m = _clustered(100, 8, 4, seed=0)
+    index = rtv.build_centroid_index(m, n_blocks=4)
+    q = np.asarray(_unit(jax.random.key(0), (2, 8)))
+    with pytest.raises(ValueError, match="k="):
+        rtv.two_stage_topk(q, m, index, 0, interpret=True)
+    with pytest.raises(ValueError, match="nprobe"):
+        rtv.two_stage_topk(q, m, index, 3, nprobe=0, interpret=True)
+
+
+def test_centroid_index_build_is_deterministic_and_partitions():
+    m = _clustered(300, 16, 6, seed=5)
+    a = rtv.build_centroid_index(m, n_blocks=6)
+    b = rtv.build_centroid_index(m, n_blocks=6)
+    np.testing.assert_array_equal(a.centroids, b.centroids)
+    np.testing.assert_array_equal(a.members, b.members)
+    # members form a partition of [0, n)
+    all_ids = np.sort(np.concatenate(
+        [a.block_members(p) for p in range(a.n_blocks)]))
+    np.testing.assert_array_equal(all_ids, np.arange(300))
+    # per-block member lists ascend (the global-id tie-break invariant)
+    for p in range(a.n_blocks):
+        mem = a.block_members(p)
+        assert np.all(np.diff(mem) > 0) or len(mem) <= 1
+
+
+def test_centroid_index_save_load_roundtrip(tmp_path):
+    m = _clustered(200, 8, 5, seed=9)
+    idx = rtv.build_centroid_index(m, n_blocks=5)
+    path = str(tmp_path / "index.npz")
+    idx.save(path)
+    loaded = rtv.CentroidIndex.load(path)
+    np.testing.assert_array_equal(loaded.centroids, idx.centroids)
+    np.testing.assert_array_equal(loaded.members, idx.members)
+    np.testing.assert_array_equal(loaded.counts, idx.counts)
+    assert loaded.n == idx.n
+
+
+# ---------------------------------------------------------------------------
+# registry: centroid-index caching + invalidation by construction
+# ---------------------------------------------------------------------------
+
+
+def _fake_registry(tmp_path, calls):
+    from repro.serving.embed.registry import ClassEmbeddingRegistry
+
+    def compute(names, templates):
+        calls.append(names)
+        rng = np.random.default_rng(len(names))
+        m = rng.standard_normal((len(names), 16)).astype(np.float32)
+        return m / np.linalg.norm(m, axis=1, keepdims=True)
+
+    return ClassEmbeddingRegistry(compute, cache_dir=str(tmp_path))
+
+
+def test_registry_centroid_index_cached_per_version(tmp_path):
+    calls = []
+    reg = _fake_registry(tmp_path, calls)
+    names = tuple(f"c{i}" for i in range(50))
+    cm = reg.get(names, ("t {} {}",), "ckpt-a", embed_dim=16)
+    i1 = reg.get_centroid_index(cm, n_blocks=5)
+    i2 = reg.get_centroid_index(cm, n_blocks=5)
+    assert i1 is i2                               # memoized
+    assert reg.stats["index_builds"] == 1
+    assert reg.stats["index_hits"] == 1
+    # a second registry over the same cache dir loads from disk, not build
+    reg2 = _fake_registry(tmp_path, [])
+    cm2 = reg2.get(names, ("t {} {}",), "ckpt-a", embed_dim=16)
+    i3 = reg2.get_centroid_index(cm2, n_blocks=5)
+    assert reg2.stats["index_builds"] == 0
+    np.testing.assert_array_equal(i3.members, i1.members)
+
+
+def test_registry_centroid_index_invalidated_by_refresh(tmp_path):
+    """refresh() bumps the matrix version → the old index is never served
+    for the new artifact (invalidation by construction)."""
+    calls = []
+    reg = _fake_registry(tmp_path, calls)
+    names = tuple(f"c{i}" for i in range(40))
+    cm1 = reg.get(names, ("t {} {}",), "ckpt-a", embed_dim=16)
+    reg.get_centroid_index(cm1, n_blocks=4)
+    cm2 = reg.refresh(names, ("t {} {}",), "ckpt-a")
+    assert cm2.version == cm1.version + 1
+    reg.get_centroid_index(cm2, n_blocks=4)
+    assert reg.stats["index_builds"] == 2         # no stale reuse
+    # different checkpoint tag → different key → separate index
+    cm3 = reg.get(names, ("t {} {}",), "ckpt-b", embed_dim=16)
+    reg.get_centroid_index(cm3, n_blocks=4)
+    assert reg.stats["index_builds"] == 3
+
+
+# ---------------------------------------------------------------------------
+# service-level: modes, gallery handle, k validation (single device)
+# ---------------------------------------------------------------------------
+
+_CACHE = {}
+
+
+def _service_world():
+    if "w" not in _CACHE:
+        from repro.configs import get_arch, smoke_variant
+        from repro.data import Tokenizer, caption_corpus, world_for_tower
+        from repro.models import dual_encoder as de
+
+        cfg = get_arch("basic-s")
+        cfg = dataclasses.replace(
+            cfg, image_tower=smoke_variant(cfg.image_tower),
+            text_tower=smoke_variant(cfg.text_tower), embed_dim=32)
+        rng = np.random.default_rng(0)
+        world = world_for_tower(rng, cfg.image_tower, n_classes=10,
+                                noise=0.2)
+        tok = Tokenizer.train(caption_corpus(world, rng, 300),
+                              vocab_size=400)
+        params = de.init_params(cfg, jax.random.key(0))
+        _CACHE["w"] = (cfg, world, tok, params)
+    return _CACHE["w"]
+
+
+def test_service_twostage_exact_matches_fused(tmp_path):
+    """retrieval='twostage' with the default nprobe (None ≡ all) classifies
+    identically to 'fused', and the index is built exactly once."""
+    from repro.data.synthetic import render_images
+    from repro.serving import ZeroShotService
+
+    cfg, world, tok, params = _service_world()
+    rng = np.random.default_rng(2)
+    imgs = render_images(world, rng.integers(0, 10, 6), rng)
+    with ZeroShotService(cfg, params, tok, max_delay_ms=1.0,
+                         registry_dir=str(tmp_path)) as svc:
+        want = svc.classify(imgs, world.class_names, k=5)
+    with ZeroShotService(cfg, params, tok, max_delay_ms=1.0,
+                         registry_dir=str(tmp_path),
+                         retrieval="twostage", index_blocks=4) as svc:
+        got = svc.classify(imgs, world.class_names, k=5)
+        got2 = svc.classify(imgs, world.class_names, k=5)
+        stats = svc.stats()
+    np.testing.assert_array_equal(got.indices, want.indices)
+    np.testing.assert_array_equal(got.values, want.values)
+    np.testing.assert_array_equal(got2.indices, want.indices)
+    assert stats["registry"]["index_builds"] == 1
+    assert stats["registry"]["index_hits"] == 1
+    hists = stats["metrics"]["histograms"]
+    assert any(k.startswith("serve/retrieval_prune_ratio") for k in hists)
+    assert any(k.startswith("serve/retrieval_latency_s") for k in hists)
+
+
+def test_service_gallery_handle_uploads_once(tmp_path):
+    from repro.data.synthetic import render_images
+    from repro.serving import ZeroShotService
+
+    cfg, world, tok, params = _service_world()
+    rng = np.random.default_rng(3)
+    imgs = render_images(world, rng.integers(0, 10, 5), rng)
+    with ZeroShotService(cfg, params, tok, max_delay_ms=1.0) as svc:
+        gal = svc.embed_images(imgs)
+        handle = svc.prepare_gallery(gal)
+        v1, i1 = svc.retrieve(["a photo of a cat"], handle, k=3)
+        v2, i2 = svc.retrieve(["a photo of a cat"], handle, k=3)
+        # raw-array path: same array object → memoized, still one upload
+        v3, _ = svc.retrieve(["a photo of a cat"], gal, k=3)
+        v4, _ = svc.retrieve(["a photo of a cat"], gal, k=3)
+        snap = svc.metrics.snapshot()
+    np.testing.assert_array_equal(i1, i2)
+    np.testing.assert_allclose(v1, v3, atol=1e-6)
+    assert snap["counters"]["serve/gallery_uploads"] == 2
+    assert snap["counters"]["serve/gallery_memo_hits"] == 1
+
+
+def test_service_k_validation_and_clamp(tmp_path):
+    from repro.data.synthetic import render_images
+    from repro.serving import ZeroShotService
+
+    cfg, world, tok, params = _service_world()
+    rng = np.random.default_rng(4)
+    imgs = render_images(world, rng.integers(0, 10, 4), rng)
+    with ZeroShotService(cfg, params, tok, max_delay_ms=1.0) as svc:
+        gal = svc.embed_images(imgs)
+        with pytest.raises(ValueError, match="k=0"):
+            svc.classify(imgs, world.class_names, k=0)
+        with pytest.raises(ValueError, match="k=-2"):
+            svc.retrieve(["a photo"], gal, k=-2)
+        # k > n clamps (old silent-accept of k<=0 is gone; clamping stays)
+        res = svc.classify(imgs, world.class_names, k=999)
+        assert res.indices.shape == (4, 10)
+        vals, idx = svc.retrieve(["a photo"], gal, k=999)
+        assert idx.shape == (1, 4)
+
+
+def test_service_rejects_unknown_mode():
+    from repro.serving import ZeroShotService
+
+    cfg, world, tok, params = _service_world()
+    with pytest.raises(ValueError, match="retrieval="):
+        ZeroShotService(cfg, params, tok, retrieval="ivf")
+
+
+def test_service_rejects_mode_mismatched_handle(tmp_path):
+    from repro.data.synthetic import render_images
+    from repro.serving import ZeroShotService
+
+    cfg, world, tok, params = _service_world()
+    rng = np.random.default_rng(5)
+    imgs = render_images(world, rng.integers(0, 10, 4), rng)
+    with ZeroShotService(cfg, params, tok, max_delay_ms=1.0) as svc:
+        gal = svc.embed_images(imgs)
+        fused_handle = svc.prepare_gallery(gal)
+    with ZeroShotService(cfg, params, tok, max_delay_ms=1.0,
+                         retrieval="twostage", index_blocks=2) as svc:
+        with pytest.raises(ValueError, match="prepared for mode"):
+            svc.retrieve(["a photo"], fused_handle, k=2)

@@ -117,3 +117,53 @@ def test_never_materializes_logits_memory_model():
     vals, idx = ops.similarity_topk(x, c, 5, bc=2048, interpret=True)
     assert vals.shape == (8, 5) and idx.shape == (8, 5)
     assert np.all(np.asarray(idx) < 20_000)
+
+
+def test_shard_combine_matches_global_sweep_with_boundary_ties():
+    """Simulate the sharded serving combine on one process: split the
+    class matrix into shards, run the kernel per shard with global index
+    offsets, then merge_topk the pooled per-shard top-ks. Duplicate rows
+    are planted so exact ties straddle every shard boundary; the merge
+    must still be bit-identical to one global kernel sweep (ties to the
+    LOWER global id)."""
+    b, d, k, shards = 6, 16, 7, 4
+    n = 4 * 37  # ragged per-shard blocks
+    x, c = _pair(11, b, n, d)
+    c = np.array(c)
+    per = n // shards
+    for s in range(1, shards):
+        c[s * per] = c[s * per - 1]      # tie across each boundary
+        c[s * per + 1] = c[0]            # duplicate of a far shard's row
+    c = jnp.asarray(c)
+
+    want_v, want_i = ops.similarity_topk(x, c, k, interpret=True)
+
+    pool_v, pool_i = [], []
+    for s in range(shards):
+        lo = s * per
+        v, i = ops.similarity_topk(x, c[lo:lo + per], k, interpret=True)
+        pool_v.append(v)
+        pool_i.append(i + lo)
+    got_v, got_i = ops.merge_topk(jnp.concatenate(pool_v, axis=1),
+                                  jnp.concatenate(pool_i, axis=1), k)
+    np.testing.assert_array_equal(np.asarray(got_i), np.asarray(want_i))
+    np.testing.assert_array_equal(np.asarray(got_v), np.asarray(want_v))
+
+
+def test_shard_combine_invariant_to_shard_order():
+    """merge_topk's select-max-retire rule is order-independent: feeding
+    the per-shard pools in any order yields identical output."""
+    b, d, k = 4, 16, 5
+    x, c = _pair(13, b, 96, d)
+    pools = []
+    for s in range(3):
+        lo = s * 32
+        v, i = ops.similarity_topk(x, c[lo:lo + 32], k, interpret=True)
+        pools.append((v, i + lo))
+    fwd = ops.merge_topk(jnp.concatenate([p[0] for p in pools], axis=1),
+                         jnp.concatenate([p[1] for p in pools], axis=1), k)
+    rev = ops.merge_topk(
+        jnp.concatenate([p[0] for p in reversed(pools)], axis=1),
+        jnp.concatenate([p[1] for p in reversed(pools)], axis=1), k)
+    np.testing.assert_array_equal(np.asarray(fwd[0]), np.asarray(rev[0]))
+    np.testing.assert_array_equal(np.asarray(fwd[1]), np.asarray(rev[1]))
