@@ -27,6 +27,14 @@ beat a 5%-of-bare-step budget. Same claim, no noisy subtraction.
   step/instrumented       the workload loop with telemetry riding along,
                           UNGATED informational (it carries the host
                           noise the direct form avoids)
+  window/observe          N_STEPS pushes + the per-step windowed stats
+                          the health tier reads (median/zscore over a
+                          128-window). ``must_beat: step/overhead_budget``
+                          — windowed aggregation stays within the same 5%
+  health/check            N_STEPS full ``HealthMonitor.observe_step``
+                          calls (default detector suite, healthy
+                          trajectory — the every-step steady-state cost).
+                          ``must_beat: step/overhead_budget``
   micro/*                 per-op costs (span pair, histogram observe,
                           runlog step record), UNGATED — what the budget
                           is spent on
@@ -47,9 +55,11 @@ import time
 import numpy as np
 
 from benchmarks.common import csv_line, write_json
+from repro.obs import health as obs_health
 from repro.obs import metrics as obs_metrics
 from repro.obs import runlog as obs_runlog
 from repro.obs import trace as obs_trace
+from repro.obs import windows as obs_windows
 
 N_STEPS = 30                  # steps per timed loop
 REPEATS = 7                   # median-of-N (scheduler-noise robustness)
@@ -142,6 +152,49 @@ def run(json_path: str | None = None):
              f"{us_tel / us_bare:.4f}_of_bare")
     csv_line("obs/step/instrumented", us_inst,
              f"{us_inst / us_bare:.3f}x_bare")
+
+    # health-tier per-step costs, gated against the SAME 5% budget: these
+    # run every step when --health is on, so they must fit where the
+    # passive telemetry fits (DESIGN.md §14.4)
+    win = obs_windows.SlidingWindow(128)
+    for i in range(128):
+        win.push(1.0 + 0.01 * (i % 7))            # pre-wrapped window
+    win_times = []
+    for _ in range(REPEATS):
+        t0 = time.perf_counter()
+        for i in range(N_STEPS):
+            win.push(1.0 + 0.01 * (i % 7))
+            win.median()
+            win.zscore(1.0)
+        win_times.append(time.perf_counter() - t0)
+    us_win = round(statistics.median(win_times) * 1e6, 1)
+
+    mon = obs_health.HealthMonitor(registry=obs_metrics.Registry())
+    for i in range(64):                            # warm the detector windows
+        mon.observe_step(obs_health.StepSample(
+            step=i, loss=2.0 - 1e-3 * i, grad_norm=1.0 + 0.01 * (i % 5),
+            data_wait_s=1e-4, device_step_s=STEP_S, step_s=STEP_S))
+    mon_times = []
+    for r in range(REPEATS):
+        t0 = time.perf_counter()
+        for i in range(N_STEPS):
+            s = 64 + r * N_STEPS + i
+            mon.observe_step(obs_health.StepSample(
+                step=s, loss=2.0 - 1e-3 * s, grad_norm=1.0 + 0.01 * (s % 5),
+                data_wait_s=1e-4, device_step_s=STEP_S, step_s=STEP_S))
+        mon_times.append(time.perf_counter() - t0)
+    us_health = round(statistics.median(mon_times) * 1e6, 1)
+
+    entries["window/observe"] = {
+        "us": us_win, "must_beat": "step/overhead_budget",
+        "per_step_us": round(us_win / N_STEPS, 1)}
+    entries["health/check"] = {
+        "us": us_health, "must_beat": "step/overhead_budget",
+        "per_step_us": round(us_health / N_STEPS, 1)}
+    csv_line("obs/window/observe", us_win,
+             f"{us_win / us_bare:.4f}_of_bare")
+    csv_line("obs/health/check", us_health,
+             f"{us_health / us_bare:.4f}_of_bare")
 
     # per-op micro costs (informational: what the 5% budget is spent on)
     reg2 = obs_metrics.Registry()

@@ -2,8 +2,9 @@
 
 Checks every record of a runlog (committed sample or fresh run output)
 with ``repro.obs.runlog.validate_record`` — schema version, known kinds,
-required per-kind keys — plus file-level structure: the first record
-must be ``run_start``, step records must carry the full time-breakdown
+required per-kind keys (``anomaly`` records included: detector, step,
+severity, value) — plus file-level structure: the first record must be
+``run_start``, step records must carry the full time-breakdown
 (``data_wait_s`` / ``device_step_s`` / ``ckpt_stall_s``), and resumed
 segments must be announced by ``resume`` markers (step numbers may only
 restart right after one).
@@ -88,9 +89,11 @@ def main(argv=None) -> int:
         if failures:
             failed += 1
         else:
-            n = sum(1 for _ in rl.iter_runlog(path))
-            print(f"check_runlog: OK {path} ({n} records, schema v"
-                  f"{rl.SCHEMA_VERSION})")
+            recs = list(rl.iter_runlog(path))
+            n_anom = sum(1 for r in recs if r["kind"] == "anomaly")
+            anom = f", {n_anom} anomalies" if n_anom else ""
+            print(f"check_runlog: OK {path} ({len(recs)} records, schema v"
+                  f"{rl.SCHEMA_VERSION}{anom})")
     return 1 if failed else 0
 
 

@@ -46,10 +46,17 @@ def _run_legacy(cfg, params, moe_args, args):
 
 
 def _run_continuous(cfg, params, moe_args, args):
+    slo_s = args.slo_ms / 1e3 if getattr(args, "slo_ms", None) else None
     eng = ContinuousEngine(cfg, params, cache_len=args.cache_len,
                            num_slots=args.slots, moe_args=moe_args,
                            precision=args.precision, attn=args.attn,
-                           temperature=args.temperature, seed=args.seed)
+                           temperature=args.temperature, seed=args.seed,
+                           latency_slo_s=slo_s)
+    server = None
+    if getattr(args, "metrics_port", None) is not None:
+        server = eng.serve_metrics(port=args.metrics_port)
+        print(f"obs: serving /metrics /healthz /snapshot.json on "
+              f"{server.url}")
     rng = np.random.default_rng(args.seed)
     # ragged prompts around --prompt-len so admission sees mixed shapes
     # (bucketed to 4 lengths: prefill compiles once per bucket)
@@ -84,8 +91,15 @@ def _run_continuous(cfg, params, moe_args, args):
     print(f"slot occupancy: mean {occ_mean:.2f} over {occ['count']} ticks; "
           f"admission wait: mean {admit_mean*1e3:.1f}ms "
           f"p99~{admit['p99']*1e3:.1f}ms over {admit['count']} admissions")
+    if "slo" in snap:
+        s = snap["slo"]
+        print(f"slo: p99 {s['p99_s']*1e3:.1f}ms vs target "
+              f"{s['target_s']*1e3:.1f}ms  burn {s['error_budget_burn']:.2f}  "
+              f"{'READY' if s['healthy'] else 'NOT READY'}")
     for rid in sorted(done)[:4]:
         print(f"  req {rid}:", done[rid][:16].tolist(), "...")
+    if server is not None:
+        server.stop()
 
 
 def main():
@@ -120,6 +134,15 @@ def main():
                          "the models.attention registry, decode through "
                          "resolve_decode_backend ('pallas' = the "
                          "kernels/decode_attention cache sweep)")
+    ap.add_argument("--slo-ms", type=float, default=None,
+                    help="[continuous] end-to-end request latency SLO "
+                         "target in ms (submit→finish, queue wait "
+                         "included): windowed p99 + error-budget burn "
+                         "under decode/slo_* (DESIGN.md §14.3)")
+    ap.add_argument("--metrics-port", type=int, default=None,
+                    help="[continuous] serve live /metrics /healthz "
+                         "/snapshot.json on 127.0.0.1:PORT "
+                         "(0 = ephemeral)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 

@@ -47,6 +47,14 @@ def main():
     ap.add_argument("--nprobe", default=None,
                     help="twostage blocks probed per query (int or 'all' "
                          "= exact; default all)")
+    ap.add_argument("--slo-ms", type=float, default=None,
+                    help="arm the serving SLO tracker: per-request latency "
+                         "target in ms (windowed p99 + error-budget burn "
+                         "under serve/slo_*; DESIGN.md §14.3)")
+    ap.add_argument("--metrics-port", type=int, default=None,
+                    help="serve live /metrics (Prometheus), /healthz (SLO "
+                         "readiness) and /snapshot.json on 127.0.0.1:PORT "
+                         "(0 = ephemeral) for the whole run")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
     nprobe = None if args.nprobe in (None, "all") else int(args.nprobe)
@@ -64,10 +72,17 @@ def main():
     tok = load_tokenizer(args.tokenizer)
     params = de.init_params(cfg, jax.random.key(args.seed))
 
+    slo_s = args.slo_ms / 1e3 if args.slo_ms else None
     with ZeroShotService(cfg, params, tok,
                          registry_dir=args.registry_dir,
                          max_delay_ms=args.max_delay_ms,
-                         retrieval=args.retrieval, nprobe=nprobe) as svc:
+                         retrieval=args.retrieval, nprobe=nprobe,
+                         latency_slo_s=slo_s) as svc:
+        server = None
+        if args.metrics_port is not None:
+            server = svc.serve_metrics(port=args.metrics_port)
+            print(f"obs: serving /metrics /healthz /snapshot.json on "
+                  f"{server.url}")
         t0 = time.time()
         svc.classify(render_images(world, rng.integers(
             0, args.classes, args.batch), rng), world.class_names, k=args.k)
@@ -87,7 +102,15 @@ def main():
               f"p max {max(lat)*1e3:.1f}ms  "
               f"{n/sum(lat):.1f} img/s  top1 {hits/n:.3f} "
               f"(untrained chance {1/args.classes:.3f})")
-        print("service stats:", svc.stats())
+        stats = svc.stats()
+        if "slo" in stats:
+            s = stats["slo"]
+            print(f"slo: p99 {s['p99_s']*1e3:.1f}ms vs target "
+                  f"{s['target_s']*1e3:.1f}ms  burn {s['error_budget_burn']:.2f}  "
+                  f"{'READY' if s['healthy'] else 'NOT READY'}")
+        print("service stats:", stats)
+        if server is not None:
+            server.stop()
 
 
 if __name__ == "__main__":

@@ -106,7 +106,8 @@ def make_contrastive_step(dual_cfg, *, num_micro: int = 8,
                           precision="bf16", attn: Optional[str] = None,
                           unroll: int = 1,
                           mesh=None, loss: str = "local",
-                          loss_opts: Optional[dict] = None):
+                          loss_opts: Optional[dict] = None,
+                          skip_nonfinite: bool = False):
     """The paper's own training step: Algorithm-1 GradAccum over num_micro
     microbatches (B=65536, M=B/num_micro=8192 matches App. E) + AdaFactorW.
 
@@ -126,6 +127,16 @@ def make_contrastive_step(dual_cfg, *, num_micro: int = 8,
         embeddings are pinned batch-sharded so GradAccum × data-parallel ×
         tensor-parallel compose under one jit (DESIGN.md §7).
     ``loss_opts`` forwards kernel overrides (interpret/bm/bn).
+
+    ``skip_nonfinite=True`` arms the in-jit step guard (DESIGN.md §14.2):
+    the step also computes the global grad norm and, when loss or grad
+    norm is non-finite, keeps the INCOMING params/opt-state via an
+    elementwise ``jnp.where`` select — the poisoned update is dropped on
+    device (no host round-trip, donation-safe) and ``metrics`` gains
+    ``grad_norm`` plus a 0/1 ``skipped`` flag for the health monitor.
+    Finite steps take the identical update values, so guarded training is
+    bit-exact with unguarded training until the first bad step.
+
     Returns (train_step, opt); train_step(params, opt_state, batch) ->
     (params, opt_state, loss, metrics)."""
     import dataclasses
@@ -174,9 +185,19 @@ def make_contrastive_step(dual_cfg, *, num_micro: int = 8,
                                            num_micro, loss_fn=loss_fn,
                                            loss_opts=lopts,
                                            emb_sharding=emb_shd)
-        updates, opt_state = opt.update(grads, opt_state, params, lr)
-        params = apply_updates(params, updates)
-        return params, opt_state, loss_val, metrics
+        updates, new_opt = opt.update(grads, opt_state, params, lr)
+        new_params = apply_updates(params, updates)
+        if skip_nonfinite:
+            gnorm = jnp.sqrt(sum(jnp.sum(g.astype(jnp.float32) ** 2)
+                                 for g in jax.tree.leaves(grads)))
+            ok = jnp.isfinite(loss_val) & jnp.isfinite(gnorm)
+            new_params = jax.tree.map(
+                lambda n, o: jnp.where(ok, n, o), new_params, params)
+            new_opt = jax.tree.map(
+                lambda n, o: jnp.where(ok, n, o), new_opt, opt_state)
+            metrics = dict(metrics, grad_norm=gnorm,
+                           skipped=(~ok).astype(jnp.int32))
+        return new_params, new_opt, loss_val, metrics
 
     return train_step, opt
 

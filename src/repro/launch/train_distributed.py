@@ -58,10 +58,22 @@ degrade / resume marker records, and exports a Chrome ``trace_event``
 JSON (``trace.json``, Perfetto-viewable, per-host pid lanes) on exit.
 ``--log-every N`` paces the human stdout line, ``--quiet`` silences it;
 summarize a run with ``python -m repro.obs.report <run-dir>/runlog.jsonl``.
+
+Health (DESIGN.md §14): ``--health`` arms the anomaly detector suite
+(non-finite loss/grad, grad/loss spikes via windowed MAD z-score, loss
+plateau, data-wait stall, per-host straggler skew) — anomalies land in
+the runlog, as trace instants, and as flight-recorder dumps under
+``<run-dir>/flight/`` — and switches the jitted step to non-finite-grad
+skipping (the poisoned update is dropped ON DEVICE; finite steps are
+bit-exact with the unguarded path). ``--metrics-port P`` serves live
+Prometheus ``/metrics``, ``/healthz`` and ``/snapshot.json`` on
+127.0.0.1:P for the whole run (0 picks an ephemeral port, written to
+``<run-dir>/metrics_port``).
 """
 from __future__ import annotations
 
 import argparse
+import math
 import os
 import signal
 import threading
@@ -73,6 +85,7 @@ import numpy as np
 
 from repro import checkpoint as ckpt
 from repro import obs
+from repro.obs import health as obs_health
 from repro.obs import trace as obs_trace
 from repro.configs import get_arch, smoke_variant
 from repro.core import sharding as shd
@@ -98,9 +111,16 @@ def build_state(init_fn, mesh, mode, opt, seed):
 
 
 def make_step(cfg, opt, lr_fn, *, remat="basic", moe_args=None,
-              precision="f32"):
+              precision="f32", skip_nonfinite=False):
     """LM train step: next-token loss + AdaFactorW update, jit-ready.
-    ``precision``: models.precision policy name (historical default f32)."""
+    ``precision``: models.precision policy name (historical default f32).
+
+    ``skip_nonfinite=True`` arms the in-jit step guard (DESIGN.md §14.2):
+    a non-finite loss or grad norm keeps the INCOMING params/opt-state
+    via an elementwise ``jnp.where`` select — the poisoned update never
+    lands, no host round-trip, donation-safe — and ``metrics`` gains a
+    0/1 ``skipped`` flag. Finite steps take the identical update values,
+    so guarded training is bit-exact with unguarded training."""
     policy = get_policy(remat)
 
     def train_step(params, opt_state, batch, step):
@@ -113,11 +133,18 @@ def make_step(cfg, opt, lr_fn, *, remat="basic", moe_args=None,
             params)
         gnorm = jnp.sqrt(sum(jnp.sum(g.astype(jnp.float32) ** 2)
                              for g in jax.tree.leaves(grads)))
-        updates, opt_state = opt.update(grads, opt_state, params,
-                                        lr_fn(step))
-        params = apply_updates(params, updates)
+        updates, new_opt = opt.update(grads, opt_state, params,
+                                      lr_fn(step))
+        new_params = apply_updates(params, updates)
         metrics = dict(metrics, grad_norm=gnorm)
-        return params, opt_state, loss, metrics
+        if skip_nonfinite:
+            ok = jnp.isfinite(loss) & jnp.isfinite(gnorm)
+            new_params = jax.tree.map(
+                lambda n, o: jnp.where(ok, n, o), new_params, params)
+            new_opt = jax.tree.map(
+                lambda n, o: jnp.where(ok, n, o), new_opt, opt_state)
+            metrics["skipped"] = (~ok).astype(jnp.int32)
+        return new_params, new_opt, loss, metrics
 
     return train_step
 
@@ -163,9 +190,32 @@ def _make_obs(args, resumed_from):
     return registry, tracer, runlog, run_dir
 
 
+def _make_health(args, registry, tracer, runlog, run_dir):
+    """The run's active-monitoring pair (DESIGN.md §14): a
+    ``HealthMonitor`` when ``--health`` is set (default detector suite +
+    flight recorder into the run dir) and a started ``MetricsServer``
+    when ``--metrics-port`` is given (0 = ephemeral; the bound port is
+    written to ``<run_dir>/metrics_port``). Either can be on without the
+    other; ``/healthz`` reports the monitor's status when both are."""
+    monitor = server = None
+    if getattr(args, "health", False):
+        monitor = obs.HealthMonitor(registry=registry, tracer=tracer,
+                                    runlog=runlog, run_dir=run_dir)
+    port = getattr(args, "metrics_port", None)
+    if port is not None:
+        server = obs.MetricsServer(
+            registry, health=monitor.status if monitor else None,
+            port=int(port), run_dir=run_dir).start()
+        if not getattr(args, "quiet", False):
+            print(f"obs: serving /metrics /healthz /snapshot.json on "
+                  f"{server.url}")
+    return monitor, server
+
+
 def _run_loop(args, step_fn, params, opt_state, make_batch, start, *,
               step_takes_index, ckpt_meta_fn=None, registry=None,
-              tracer=None, runlog=None, run_dir=None):
+              tracer=None, runlog=None, run_dir=None, monitor=None,
+              server=None):
     """Shared prefetch/step/log/checkpoint loop; returns per-step losses.
     ``ckpt_meta_fn(next_step) -> dict``: optional user-meta (e.g. resumable
     loader input state) written into every checkpoint step dir.
@@ -178,6 +228,14 @@ def _run_loop(args, step_fn, params, opt_state, make_batch, start, *,
     the Chrome trace JSON is exported to ``<run_dir>/trace.json`` when
     the loop ends. All of it is host-side work OUTSIDE the jitted step
     (the ``benchmarks/obs_bench.py`` overhead gate pins it ≤1.05× bare).
+
+    Health (DESIGN.md §14): with a ``monitor`` every step's host-side
+    floats feed the anomaly detectors (anomaly runlog records, trace
+    instants, ``health/*`` counters, flight-recorder dumps); a ``server``
+    keeps ``/metrics`` + ``/healthz`` live for the whole run and is shut
+    down on exit. The module-level step fault hook (obs/health.py) is
+    applied to every batch right before the device step — the chaos seam
+    the NaN-injection acceptance test drives.
 
     Checkpoints go through the async manager (serialize + rename off the
     step path; DESIGN.md §10). SIGTERM — the preemption signal — is caught:
@@ -231,6 +289,7 @@ def _run_loop(args, step_fn, params, opt_state, make_batch, start, *,
             t_iter = time.perf_counter()
             with obs_trace.span(tracer, "data_wait", step=i):
                 batch = next(stream)
+            batch = obs_health.apply_step_fault_hook(i, batch)
             t_data = time.perf_counter()
             with obs_trace.span(tracer, "device_step", step=i):
                 if step_takes_index:
@@ -259,15 +318,26 @@ def _run_loop(args, step_fn, params, opt_state, make_batch, start, *,
                 with obs_trace.span(tracer, "ckpt_stall", step=i):
                     ckpt_stall += save(i + 1)
             step_s = time.perf_counter() - t_iter
+            gnorm_f = (float(metrics["grad_norm"])
+                       if metrics.get("grad_norm") is not None else None)
+            skipped = bool(float(metrics.get("skipped", 0)))
+            step_rec = None
             if runlog:
-                gnorm = metrics.get("grad_norm")
-                extra = {} if gnorm is None \
-                    else {"grad_norm": float(gnorm)}
-                runlog.log_step(
+                extra = {} if gnorm_f is None else {"grad_norm": gnorm_f}
+                if skipped:
+                    extra["skipped"] = 1
+                step_rec = runlog.log_step(
                     i, loss=loss_f, data_wait_s=t_data - t_iter,
                     device_step_s=t_device - t_data,
                     ckpt_stall_s=ckpt_stall, step_s=step_s,
                     examples_per_sec=args.batch / step_s, **extra)
+            if monitor is not None:
+                monitor.observe_step(obs.StepSample(
+                    step=i, loss=loss_f,
+                    grad_norm=math.nan if gnorm_f is None else gnorm_f,
+                    data_wait_s=t_data - t_iter,
+                    device_step_s=t_device - t_data, step_s=step_s,
+                    skipped=skipped), record=step_rec)
             if not quiet and (i % args.log_every == 0
                               or i == args.steps - 1):
                 gnorm = metrics.get("grad_norm")
@@ -286,14 +356,22 @@ def _run_loop(args, step_fn, params, opt_state, make_batch, start, *,
             save(min(args.steps, stop), final=True, event="final_save")
     if manager is not None:
         manager.close()
+    trace_path = None
+    if tracer is not None and run_dir:
+        trace_path = tracer.export(os.path.join(run_dir, "trace.json"))
     if runlog:
+        if trace_path:
+            # dropped > 0 means the exported timeline is truncated at the
+            # old end — report.py surfaces it as a warning
+            runlog.log("event", event="trace_export", path=trace_path,
+                       dropped=tracer.dropped)
         if registry is not None:
             runlog.log("metrics", **registry.snapshot())
         runlog.close()
-    if tracer is not None and run_dir:
-        path = tracer.export(os.path.join(run_dir, "trace.json"))
-        if not quiet:
-            print(f"obs: trace -> {path} (open in Perfetto)")
+    if trace_path and not quiet:
+        print(f"obs: trace -> {trace_path} (open in Perfetto)")
+    if server is not None:
+        server.stop()
     return losses
 
 
@@ -339,8 +417,12 @@ def train_lm(args):
         params, opt_state, start = _restore(args, params, opt_state,
                                             pspecs, ospecs)
         registry, tracer, runlog, run_dir = _make_obs(args, start)
+        monitor, server = _make_health(args, registry, tracer, runlog,
+                                       run_dir)
         step_fn = jax.jit(make_step(cfg, opt, lr_fn, remat=args.remat,
-                                    moe_args=moe_args, precision=precision),
+                                    moe_args=moe_args, precision=precision,
+                                    skip_nonfinite=bool(
+                                        getattr(args, "health", False))),
                           donate_argnums=(0, 1))
 
         def make_batch(step):
@@ -350,7 +432,8 @@ def train_lm(args):
 
         return _run_loop(args, step_fn, params, opt_state, make_batch, start,
                          step_takes_index=True, registry=registry,
-                         tracer=tracer, runlog=runlog, run_dir=run_dir)
+                         tracer=tracer, runlog=runlog, run_dir=run_dir,
+                         monitor=monitor, server=server)
 
 
 def train_contrastive(args):
@@ -404,7 +487,8 @@ def train_contrastive(args):
         remat_text=getattr(args, "remat_text", None),
         precision=getattr(args, "precision", None) or "bf16",
         attn=getattr(args, "attn", None),
-        lr=args.lr, mesh=mesh, loss=loss)
+        lr=args.lr, mesh=mesh, loss=loss,
+        skip_nonfinite=bool(getattr(args, "health", False)))
 
     with mesh:
         params, opt_state, pspecs, ospecs = build_state(
@@ -435,6 +519,8 @@ def train_contrastive(args):
                 "process; wiring jax.process_index() into HostLayout is a "
                 "ROADMAP item")
         registry, tracer, runlog, run_dir = _make_obs(args, start)
+        monitor, server = _make_health(args, registry, tracer, runlog,
+                                       run_dir)
         if tracer is not None:
             for h in range(data_size):
                 tracer.set_process_name(1 + h, f"host {h}")
@@ -475,7 +561,7 @@ def train_contrastive(args):
         return _run_loop(args, step_fn, params, opt_state, make_batch, start,
                          step_takes_index=False, ckpt_meta_fn=ckpt_meta_fn,
                          registry=registry, tracer=tracer, runlog=runlog,
-                         run_dir=run_dir)
+                         run_dir=run_dir, monitor=monitor, server=server)
 
 
 def train(args):
@@ -556,6 +642,18 @@ def main():
     ap.add_argument("--quiet", action="store_true",
                     help="no per-step stdout lines; telemetry still "
                          "streams to the runlog")
+    ap.add_argument("--health", action="store_true",
+                    help="active monitoring (DESIGN.md §14): anomaly "
+                         "detectors on loss/grad/data-wait (anomaly "
+                         "runlog records + flight-recorder dumps into "
+                         "the run dir) and in-jit non-finite step "
+                         "skipping — a NaN loss/grad keeps the incoming "
+                         "params instead of poisoning them")
+    ap.add_argument("--metrics-port", type=int, default=None,
+                    help="serve live /metrics (Prometheus), /healthz and "
+                         "/snapshot.json on 127.0.0.1:PORT for the whole "
+                         "run (0 = ephemeral; the bound port is written "
+                         "to <run-dir>/metrics_port)")
     ap.add_argument("--run-dir", default=None,
                     help="directory for runlog.jsonl + trace.json "
                          "(default: --ckpt-dir; no files when neither "

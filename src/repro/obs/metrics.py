@@ -202,17 +202,27 @@ class Histogram:
         return self._max
 
     def summary(self) -> dict:
-        """``{count, sum, min, max, p50, p90, p99}`` snapshot (one lock
-        acquisition — consistent across fields)."""
+        """``{count, sum, min, max, p50, p90, p99, buckets}`` snapshot
+        (one lock acquisition — consistent across fields). ``buckets`` is
+        the finite ``[upper_bound, cumulative_count]`` ladder the
+        Prometheus exporter renders as ``_bucket{le=...}`` lines
+        (``+Inf`` is implied by ``count``)."""
         with self._lock:
+            buckets = []
+            cum = 0
+            for le, n in zip(self._bounds, self._counts):
+                cum += n
+                buckets.append([le, cum])
             if self._count == 0:
                 return {"count": 0, "sum": 0.0, "min": None, "max": None,
-                        "p50": None, "p90": None, "p99": None}
+                        "p50": None, "p90": None, "p99": None,
+                        "buckets": buckets}
             return {"count": self._count, "sum": self._sum,
                     "min": self._min, "max": self._max,
                     "p50": self._percentile_locked(50),
                     "p90": self._percentile_locked(90),
-                    "p99": self._percentile_locked(99)}
+                    "p99": self._percentile_locked(99),
+                    "buckets": buckets}
 
 
 class Registry:
@@ -256,6 +266,16 @@ class Registry:
         """Get-or-create the histogram ``name`` with ``labels``;
         ``buckets`` only applies at creation."""
         return self._get(Histogram, name, labels, buckets=buckets)
+
+    def series(self, prefix: str) -> dict:
+        """Live instruments whose name starts with ``prefix``, keyed by
+        label-qualified series name (``name{k=v}``) — the cheap way for a
+        watcher (e.g. the straggler detector) to scan one instrument
+        family without rendering a full ``snapshot()``."""
+        with self._lock:
+            instruments = list(self._instruments.values())
+        return {_series_name(i.name, i.labels): i for i in instruments
+                if i.name.startswith(prefix)}
 
     def snapshot(self) -> dict:
         """``{"counters": {...}, "gauges": {...}, "histograms": {...}}``

@@ -6,14 +6,20 @@ first→last, throughput, and EXACT p50/p90/p99 of every step-time
 component (computed from the raw per-step records, not histogram
 buckets — the runlog keeps full resolution; registry histograms are the
 in-process approximation), plus checkpoint / resume / degrade events.
+``--health`` adds the run's anomaly trail and the ``health/*`` / SLO
+series from the final metrics snapshot (§14). A runlog with a
+``run_start`` but zero ``step`` records (a run that died before step 1)
+reports "no steps" instead of crashing.
 """
 from __future__ import annotations
 
 import argparse
+import math
 import sys
 from typing import List, Sequence
 
 from repro.obs import runlog as rl
+from repro.obs import windows as _windows
 
 _PCTS = (50, 90, 99)
 _PHASES = rl.STEP_BREAKDOWN_KEYS + ("step_s",)
@@ -21,19 +27,15 @@ _PHASES = rl.STEP_BREAKDOWN_KEYS + ("step_s",)
 
 def _percentile(values: Sequence[float], q: float) -> float:
     """Linear-interpolated percentile of ``values`` (exact, numpy
-    'linear' convention)."""
-    xs = sorted(values)
-    if not xs:
-        raise ValueError("percentile of empty sequence")
-    pos = q / 100.0 * (len(xs) - 1)
-    lo = int(pos)
-    hi = min(lo + 1, len(xs) - 1)
-    return xs[lo] + (xs[hi] - xs[lo]) * (pos - lo)
+    'linear' convention); NaN for an empty sequence — a zero-step runlog
+    must summarize, not crash."""
+    return _windows.percentile(values, q)
 
 
 def summarize(records: List[dict]) -> dict:
     """Aggregate a record list into the report's plain-dict form:
-    ``{"steps", "loss", "throughput", "phases", "events", "resumes"}``."""
+    ``{"steps", "loss", "throughput", "phases", "events", "resumes",
+    "anomalies", "final_metrics"}``."""
     steps = [r for r in records if r["kind"] == "step"]
     out = {
         "n_records": len(records),
@@ -42,6 +44,10 @@ def summarize(records: List[dict]) -> dict:
                     if r["kind"] == "resume"],
         "events": [r for r in records
                    if r["kind"] in ("checkpoint", "event")],
+        "anomalies": [r for r in records if r["kind"] == "anomaly"],
+        "final_metrics": next(
+            ({k: r.get(k, {}) for k in ("counters", "gauges", "histograms")}
+             for r in reversed(records) if r["kind"] == "metrics"), {}),
         "meta": next((r.get("meta", {}) for r in records
                       if r["kind"] == "run_start"), {}),
     }
@@ -73,6 +79,8 @@ def format_report(summary: dict) -> str:
     if summary["resumes"]:
         lines.append("resumed at step(s): "
                      + ", ".join(str(s) for s in summary["resumes"]))
+    if not summary["steps"]:
+        lines.append("no steps recorded (run ended before step 1)")
     if summary["steps"]:
         loss = summary["loss"]
         lines.append(f"loss: {loss['first']:.4f} -> {loss['last']:.4f} "
@@ -95,6 +103,42 @@ def format_report(summary: dict) -> str:
                  if k not in ("schema", "kind", "t", "event")}
         lines.append(f"event: {what} "
                      + " ".join(f"{k}={v}" for k, v in sorted(extra.items())))
+        if what == "trace_export" and ev.get("dropped", 0):
+            lines.append(f"WARNING: trace ring dropped {ev['dropped']} "
+                         f"events past capacity — timeline truncated at "
+                         f"the old end")
+    n_anom = len(summary.get("anomalies", []))
+    if n_anom:
+        lines.append(f"anomalies: {n_anom} (rerun with --health for "
+                     f"detail)")
+    return "\n".join(lines)
+
+
+def format_health(summary: dict) -> str:
+    """``--health`` rendering: the run's anomaly trail plus the
+    ``health/*`` and ``*/slo_*`` series from the final metrics record."""
+    lines = []
+    anomalies = summary.get("anomalies", [])
+    lines.append(f"health: {len(anomalies)} anomaly record(s)")
+    for a in anomalies:
+        msg = a.get("message", "")
+        lines.append(f"  [{a['severity']:>8}] step {a['step']:>6} "
+                     f"{a['detector']}: value={a['value']:.4g}"
+                     + (f"  {msg}" if msg else ""))
+    snap = summary.get("final_metrics", {})
+    rows = []
+    for table in ("counters", "gauges"):
+        for name, v in sorted(snap.get(table, {}).items()):
+            if name.startswith("health/") or "/slo_" in name:
+                rows.append(f"  {name} = {v:g}" if isinstance(v, float)
+                            else f"  {name} = {v}")
+    if rows:
+        lines.append("health/SLO series (final metrics snapshot):")
+        lines.extend(rows)
+    burn = snap.get("gauges", {}).get("serve/slo_error_budget_burn")
+    if burn is not None and math.isfinite(burn):
+        lines.append(f"error budget: {'EXHAUSTED' if burn >= 1 else 'ok'} "
+                     f"(burn {burn:.2f}; >=1 flips readiness)")
     return "\n".join(lines)
 
 
@@ -157,6 +201,9 @@ def main(argv=None) -> int:
                     help="treat the input as a JSON metrics snapshot "
                          "(Registry.snapshot() or ZeroShotService.stats()) "
                          "and report the serve/retrieval_* series")
+    ap.add_argument("--health", action="store_true",
+                    help="also render the run's anomaly records and "
+                         "health/SLO series (obs/health.py)")
     args = ap.parse_args(argv)
     if args.serving:
         import json
@@ -168,7 +215,10 @@ def main(argv=None) -> int:
     except rl.RunlogError as e:
         print(f"report: INVALID RUNLOG {e}", file=sys.stderr)
         return 1
-    print(format_report(summarize(records)))
+    summary = summarize(records)
+    print(format_report(summary))
+    if args.health:
+        print(format_health(summary))
     return 0
 
 

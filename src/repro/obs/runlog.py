@@ -14,6 +14,8 @@ step to ``<run_dir>/runlog.jsonl``:
                 ``ckpt_stall_s`` + total ``step_s``)
   checkpoint  — save/retention/degrade/preempt events with their step
   metrics     — a final ``Registry.snapshot()`` dump
+  anomaly     — a health detector fired (detector, step, severity,
+                value — written by ``obs/health.py``'s ``HealthMonitor``)
   event       — anything else worth a timestamped line
 
 Every record carries ``{"schema": SCHEMA_VERSION, "kind": ..., "t": ...}``.
@@ -41,7 +43,13 @@ SCHEMA_VERSION = 1
 STEP_BREAKDOWN_KEYS = ("data_wait_s", "device_step_s", "ckpt_stall_s")
 STEP_REQUIRED_KEYS = (("step", "loss", "examples_per_sec", "step_s")
                       + STEP_BREAKDOWN_KEYS)
-KINDS = ("run_start", "resume", "step", "checkpoint", "metrics", "event")
+KINDS = ("run_start", "resume", "step", "checkpoint", "metrics",
+         "anomaly", "event")
+
+# an anomaly record names its detector, anchors to a step, grades itself,
+# and carries the offending value (obs/health.py emits these)
+ANOMALY_SEVERITIES = ("warn", "critical")
+ANOMALY_REQUIRED_KEYS = ("detector", "step", "severity", "value")
 
 
 class RunlogError(ValueError):
@@ -68,6 +76,16 @@ def validate_record(rec: object) -> List[str]:
                 errors.append(f"step record missing/non-numeric {key!r}")
     if kind == "resume" and not isinstance(rec.get("resumed_from"), int):
         errors.append("resume record missing integer 'resumed_from'")
+    if kind == "anomaly":
+        if not isinstance(rec.get("detector"), str):
+            errors.append("anomaly record missing string 'detector'")
+        if not isinstance(rec.get("step"), int):
+            errors.append("anomaly record missing integer 'step'")
+        if rec.get("severity") not in ANOMALY_SEVERITIES:
+            errors.append(f"anomaly severity {rec.get('severity')!r} not "
+                          f"in {ANOMALY_SEVERITIES}")
+        if not isinstance(rec.get("value"), (int, float)):
+            errors.append("anomaly record missing numeric 'value'")
     return errors
 
 

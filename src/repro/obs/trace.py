@@ -105,14 +105,21 @@ class Tracer:
 
     def to_chrome_trace(self) -> dict:
         """Chrome ``trace_event`` object form: ``process_name`` metadata
-        records for every named lane, then the buffered events."""
+        records for every named lane, then the buffered events. The
+        top-level ``metadata`` object reports ``dropped`` (events evicted
+        past ``capacity`` — a nonzero value means the timeline is
+        truncated at the old end) alongside ``capacity`` and the exported
+        event count."""
         with self._lock:
             events = [dict(e) for e in self._events]
             names = dict(self._process_names)
+            dropped = self.dropped
         meta = [{"ph": "M", "name": "process_name", "pid": pid, "tid": 0,
                  "ts": 0, "dur": 0, "args": {"name": label}}
                 for pid, label in sorted(names.items())]
-        return {"traceEvents": meta + events, "displayTimeUnit": "ms"}
+        return {"traceEvents": meta + events, "displayTimeUnit": "ms",
+                "metadata": {"dropped": dropped, "capacity": self.capacity,
+                             "events": len(events)}}
 
     def export(self, path: str) -> str:
         """Write ``to_chrome_trace()`` JSON to ``path``; returns the

@@ -34,6 +34,12 @@ carries ``decode/slot_occupancy`` (gauge + ratio histogram),
 histograms, and ``decode/tokens`` / ``decode/requests`` counters —
 ``tokens/s`` falls out of ``decode/tokens`` over the run wall clock
 (``stats()`` reports it directly).
+
+SLO (DESIGN.md §14.3): ``latency_slo_s`` arms an ``SLOTracker`` on
+end-to-end request latency (submit → finish, queue wait included — the
+user-visible number): windowed p99 vs the target, error-budget burn,
+and a readiness bit under ``decode/slo_*``; ``serve_metrics()`` exposes
+the registry + readiness over live HTTP (obs/export.py).
 """
 from __future__ import annotations
 
@@ -77,6 +83,7 @@ class _Slot:
     max_new: int = 0
     prompt_len: int = 0
     rng: Optional[np.random.Generator] = None
+    t_sub: float = 0.0           # submit wall time, for end-to-end SLO
 
 
 class ContinuousEngine:
@@ -99,7 +106,9 @@ class ContinuousEngine:
                  attn: Optional[str] = None,
                  moe_args: Optional[dict] = None,
                  eos_id: int = 3, temperature: float = 0.0, seed: int = 0,
-                 registry: Optional[Registry] = None):
+                 registry: Optional[Registry] = None,
+                 latency_slo_s: Optional[float] = None,
+                 slo_objective: float = 0.99, slo_window: int = 256):
         assert cfg.causal, f"{cfg.name} is encoder-only; no decode step"
         assert num_slots >= 1, num_slots
         if attn is not None:
@@ -141,6 +150,12 @@ class ContinuousEngine:
         self._m_tokens = self.registry.counter("decode/tokens")
         self._m_requests = self.registry.counter("decode/requests")
         self._m_admitted = self.registry.counter("decode/admissions")
+        self.slo = None
+        if latency_slo_s is not None:
+            from repro.obs import health as obs_health
+            self.slo = obs_health.SLOTracker(
+                target_s=float(latency_slo_s), objective=slo_objective,
+                window=slo_window, registry=self.registry, name="decode")
 
     # -- compiled bodies ---------------------------------------------------
     def _prefill_impl(self, params, tokens):
@@ -216,6 +231,8 @@ class ContinuousEngine:
                     request_id=rid, prompt_len=prompt.size,
                     tokens=np.asarray([tok], np.int32)))
                 self._m_prefill.observe(time.time() - t0)
+                if self.slo is not None:
+                    self.slo.observe(time.time() - t_sub)
                 continue
             if self._caches is None:
                 # size the packed cache off the first real row: same leaf
@@ -232,6 +249,7 @@ class ContinuousEngine:
             s.pos, s.next_token = prompt.size, tok
             s.emitted, s.max_new = [tok], max_new
             s.prompt_len, s.rng = prompt.size, rng
+            s.t_sub = t_sub
             self._m_prefill.observe(time.time() - t0)
         self._m_queue.set(len(self._queue))
 
@@ -271,6 +289,8 @@ class ContinuousEngine:
                         tokens=np.asarray(s.emitted, np.int32)))
                     s.active = False
                     s.emitted, s.rng = None, None
+                    if self.slo is not None:
+                        self.slo.observe(time.time() - s.t_sub)
             self._m_step.observe(time.time() - t0)
         out, self._finished = self._finished, []
         return out
@@ -308,4 +328,18 @@ class ContinuousEngine:
                                if elapsed > 0 else 0.0),
             "elapsed_s": elapsed,
         }
+        if self.slo is not None:
+            snap["slo"] = self.slo.status()
         return snap
+
+    def serve_metrics(self, *, port: int = 0, host: str = "127.0.0.1"):
+        """Start a live HTTP endpoint over the engine's registry:
+        ``/metrics`` (Prometheus), ``/healthz`` (SLO readiness when
+        ``latency_slo_s`` was set — 503 while the error budget is
+        exhausted), ``/snapshot.json``. Localhost-only by default; the
+        caller owns the returned ``MetricsServer`` (``stop()`` it)."""
+        from repro.obs import export as obs_export
+        return obs_export.MetricsServer(
+            self.registry,
+            health=self.slo.status if self.slo is not None else None,
+            host=host, port=port).start()

@@ -46,6 +46,8 @@ from repro.configs.dual import DualEncoderConfig
 from repro.eval.zero_shot import DEFAULT_TEMPLATES, class_embeddings
 from repro.kernels.similarity_topk import ops as topk_ops
 from repro.models import dual_encoder as de
+from repro.obs import export as obs_export
+from repro.obs import health as obs_health
 from repro.obs import metrics as obs_metrics
 from repro.obs import trace as obs_trace
 from repro.serving import retrieval as rtv
@@ -95,6 +97,12 @@ class ZeroShotService:
     All three modes share one ``obs`` registry (``self.metrics``, also fed
     by the batcher) and one tracer, so ``stats()``/``obs.report`` show the
     whole serving path.
+
+    SLO (DESIGN.md §14.3): ``latency_slo_s`` arms an ``SLOTracker`` —
+    every ``classify``/``retrieve`` call's wall time feeds a windowed p99
+    vs the target plus an error-budget burn gauge (``serve/slo_*``
+    series), and readiness flips False while the windowed budget is
+    exhausted. ``serve_metrics()`` exposes it all live over HTTP.
     """
 
     def __init__(self, cfg: DualEncoderConfig, params, tok, *,
@@ -111,7 +119,10 @@ class ZeroShotService:
                  nprobe: Union[int, str, None] = None,
                  index_blocks: Optional[int] = None,
                  tracer: Optional[obs_trace.Tracer] = None,
-                 autostart: bool = True):
+                 autostart: bool = True,
+                 latency_slo_s: Optional[float] = None,
+                 slo_objective: float = 0.99,
+                 slo_window: int = 256):
         if retrieval not in RETRIEVAL_MODES:
             raise ValueError(f"retrieval={retrieval!r} not in "
                              f"{RETRIEVAL_MODES}")
@@ -148,6 +159,11 @@ class ZeroShotService:
         self._cm_device: dict = {}       # (key, version, mode) -> prepared
         self._gallery_memo = collections.OrderedDict()  # id -> (ref, handle)
         self._gallery_memo_cap = 4
+        self.slo = None
+        if latency_slo_s is not None:
+            self.slo = obs_health.SLOTracker(
+                target_s=float(latency_slo_s), objective=slo_objective,
+                window=slo_window, registry=self.metrics, name="serve")
 
     # -- embedding ---------------------------------------------------------
     def embed_images(self, images, *, wait: bool = True):
@@ -187,21 +203,26 @@ class ZeroShotService:
         class_names = tuple(class_names)
         templates = tuple(templates) if templates is not None \
             else self.templates
-        with obs_trace.span(self.tracer, "serve/classify",
-                            n_classes=len(class_names), k=k,
-                            mode=self.retrieval):
-            iemb_fut = self.embed_images(images, wait=False)
-            cm = self.registry.get(class_names, templates,
-                                   self.checkpoint_tag,
-                                   embed_dim=self.cfg.embed_dim)
-            data = self._class_data(cm)
-            index = self.registry.get_centroid_index(
-                cm, n_blocks=self.index_blocks) \
-                if self.retrieval == "twostage" else None
-            iemb = self._result(iemb_fut)
-            vals, idx = self._topk(iemb, data, len(class_names),
-                                   min(k, len(class_names)),
-                                   inv_tau=self.inv_tau, index=index)
+        t_req = time.perf_counter()
+        try:
+            with obs_trace.span(self.tracer, "serve/classify",
+                                n_classes=len(class_names), k=k,
+                                mode=self.retrieval):
+                iemb_fut = self.embed_images(images, wait=False)
+                cm = self.registry.get(class_names, templates,
+                                       self.checkpoint_tag,
+                                       embed_dim=self.cfg.embed_dim)
+                data = self._class_data(cm)
+                index = self.registry.get_centroid_index(
+                    cm, n_blocks=self.index_blocks) \
+                    if self.retrieval == "twostage" else None
+                iemb = self._result(iemb_fut)
+                vals, idx = self._topk(iemb, data, len(class_names),
+                                       min(k, len(class_names)),
+                                       inv_tau=self.inv_tau, index=index)
+        finally:
+            if self.slo is not None:
+                self.slo.observe(time.perf_counter() - t_req)
         return ClassifyResult(vals, idx, class_names, cm.version)
 
     # -- retrieval ---------------------------------------------------------
@@ -245,12 +266,17 @@ class ZeroShotService:
             raise ValueError(f"gallery prepared for mode {handle.mode!r}; "
                              f"service runs {self.retrieval!r} — call "
                              f"prepare_gallery again")
-        with obs_trace.span(self.tracer, "serve/retrieve",
-                            n=handle.n, k=k, mode=self.retrieval):
-            qemb = self.embed_texts(list(queries))
-            return self._topk(qemb, handle.data, handle.n,
-                              min(k, handle.n), inv_tau=1.0,
-                              index=handle.index, nprobe=nprobe)
+        t_req = time.perf_counter()
+        try:
+            with obs_trace.span(self.tracer, "serve/retrieve",
+                                n=handle.n, k=k, mode=self.retrieval):
+                qemb = self.embed_texts(list(queries))
+                return self._topk(qemb, handle.data, handle.n,
+                                  min(k, handle.n), inv_tau=1.0,
+                                  index=handle.index, nprobe=nprobe)
+        finally:
+            if self.slo is not None:
+                self.slo.observe(time.perf_counter() - t_req)
 
     def _memo_gallery(self, gallery_emb) -> GalleryHandle:
         """Bounded identity-keyed memo for raw-array galleries (the memo
@@ -347,11 +373,26 @@ class ZeroShotService:
         ``metrics`` — the shared ``obs.metrics.Registry`` snapshot (batcher
         latency/occupancy AND the serve/retrieval_* series; DESIGN.md §11,
         §13.4)."""
-        return {"batcher": dict(self.batcher.stats),
-                "compiled_shapes": len(self.batcher.compiled_shapes()),
-                "registry": dict(self.registry.stats),
-                "retrieval_mode": self.retrieval,
-                "metrics": self.metrics.snapshot()}
+        out = {"batcher": dict(self.batcher.stats),
+               "compiled_shapes": len(self.batcher.compiled_shapes()),
+               "registry": dict(self.registry.stats),
+               "retrieval_mode": self.retrieval,
+               "metrics": self.metrics.snapshot()}
+        if self.slo is not None:
+            out["slo"] = self.slo.status()
+        return out
+
+    def serve_metrics(self, *, port: int = 0,
+                      host: str = "127.0.0.1") -> obs_export.MetricsServer:
+        """Start a live HTTP endpoint over this service's registry:
+        ``/metrics`` (Prometheus), ``/healthz`` (SLO readiness when a
+        ``latency_slo_s`` was set — 503 while the error budget is
+        exhausted), ``/snapshot.json``. Localhost-only by default; the
+        caller owns the returned server (``stop()`` it)."""
+        return obs_export.MetricsServer(
+            self.metrics,
+            health=self.slo.status if self.slo is not None else None,
+            host=host, port=port).start()
 
     def close(self):
         self.batcher.stop()

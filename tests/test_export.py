@@ -1,0 +1,183 @@
+"""Prometheus exposition + live endpoint tests (DESIGN.md §14.3).
+
+The renderer is pinned by a GOLDEN FILE: ``_build_registry()`` below
+deterministically populates a registry exercising every rendering rule
+(name sanitization, label escaping, multi-series ``# TYPE`` grouping,
+the histogram ``_bucket`` ladder, NaN/Inf/int formatting), and the
+rendered text must match ``artifacts/metrics_sample.prom`` byte for
+byte. Regenerate after an INTENTIONAL format change with:
+
+  PYTHONPATH=src:tests python -c \
+      "import test_export; test_export.regen_golden()"
+
+The endpoint tests stand a real ``MetricsServer`` up on an ephemeral
+loopback port and scrape it with urllib: /metrics content type and body,
+/healthz 200-vs-503 driven by a live health source, /snapshot.json
+round-trip, 404 for anything else, port file discovery.
+"""
+from __future__ import annotations
+
+import json
+import math
+import os
+import urllib.error
+import urllib.request
+
+import pytest
+
+from repro.obs import export as oe
+from repro.obs import metrics as om
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+GOLDEN = os.path.join(ROOT, "artifacts", "metrics_sample.prom")
+
+
+def _build_registry() -> om.Registry:
+    """Deterministic registry covering every exposition rule — shared by
+    the golden test and ``regen_golden()`` so the two can never drift."""
+    reg = om.Registry()
+    # sanitization: '/' and '-' both map to '_'; multi-series grouping
+    reg.counter("train/steps").inc(42)
+    reg.counter("data/bytes-read", host=0).inc(1024)
+    reg.counter("data/bytes-read", host=1).inc(2048)
+    # label escaping: quotes and backslashes must survive a scrape
+    reg.counter("serve/requests", route='cls "a\\b"').inc(7)
+    # value formatting: int-valued, float, NaN, +Inf
+    reg.gauge("health/healthy").set(1)
+    reg.gauge("train/loss").set(2.718281828459045)
+    reg.gauge("health/last_p99_s").set(math.nan)
+    reg.gauge("serve/burn").set(math.inf)
+    # histogram: explicit buckets -> cumulative ladder + +Inf/_sum/_count
+    h = reg.histogram("serve/latency_s", buckets=(0.01, 0.1, 1.0))
+    for v in (0.005, 0.05, 0.05, 0.5, 5.0):
+        h.observe(v)
+    return reg
+
+
+def regen_golden() -> None:
+    """Rewrite the committed golden from ``_build_registry()``."""
+    with open(GOLDEN, "w") as f:
+        f.write(oe.render_prometheus(_build_registry().snapshot()))
+    print(f"wrote {GOLDEN}")
+
+
+class TestRenderPrometheus:
+    def test_matches_committed_golden(self):
+        got = oe.render_prometheus(_build_registry().snapshot())
+        with open(GOLDEN) as f:
+            want = f.read()
+        assert got == want, (
+            "render_prometheus drifted from artifacts/metrics_sample.prom "
+            "— if the format change is intentional, regenerate via "
+            "test_export.regen_golden()")
+
+    def test_histogram_ladder_semantics(self):
+        reg = om.Registry()
+        h = reg.histogram("lat", buckets=(0.1, 1.0))
+        for v in (0.05, 0.5, 0.5, 5.0):
+            h.observe(v)
+        text = oe.render_prometheus(reg.snapshot())
+        assert '# TYPE lat histogram' in text
+        assert 'lat_bucket{le="0.1"} 1' in text      # cumulative, not per-bin
+        assert 'lat_bucket{le="1"} 3' in text
+        assert 'lat_bucket{le="+Inf"} 4' in text     # +Inf == _count always
+        assert 'lat_count 4' in text
+        assert 'lat_sum 6.05' in text
+
+    def test_name_sanitization_and_grouping(self):
+        reg = om.Registry()
+        reg.counter("a/b-c.d").inc()
+        reg.counter("9lives").inc()
+        text = oe.render_prometheus(reg.snapshot())
+        assert "a_b_c_d 1" in text
+        assert "_9lives 1" in text                   # leading digit guarded
+        # one TYPE header per base name even with many label series
+        reg2 = om.Registry()
+        reg2.counter("x", k=1).inc()
+        reg2.counter("x", k=2).inc()
+        t2 = oe.render_prometheus(reg2.snapshot())
+        assert t2.count("# TYPE x counter") == 1
+        assert 'x{k="1"} 1' in t2 and 'x{k="2"} 1' in t2
+
+    def test_value_formats(self):
+        reg = om.Registry()
+        reg.gauge("g_nan").set(math.nan)
+        reg.gauge("g_inf").set(math.inf)
+        reg.gauge("g_int").set(3.0)
+        text = oe.render_prometheus(reg.snapshot())
+        assert "g_nan NaN" in text
+        assert "g_inf +Inf" in text
+        assert "g_int 3\n" in text                   # no trailing .0
+
+    def test_empty_snapshot_is_just_newline_terminated(self):
+        text = oe.render_prometheus(om.Registry().snapshot())
+        assert text == "\n"
+
+    def test_scrape_parses_line_shape(self):
+        # every non-comment line must be "<name>[{labels}] <value>"
+        text = oe.render_prometheus(_build_registry().snapshot())
+        assert text.endswith("\n")
+        for line in text.strip().split("\n"):
+            if line.startswith("# TYPE "):
+                assert len(line.split(" ")) == 4
+                continue
+            body, _, value = line.rpartition(" ")
+            assert body and value
+            float(value.replace("+Inf", "inf").replace("NaN", "nan"))
+
+
+def _get(url: str):
+    try:
+        with urllib.request.urlopen(url, timeout=5) as r:
+            return r.status, r.headers.get("Content-Type"), \
+                r.read().decode()
+    except urllib.error.HTTPError as e:
+        return e.code, e.headers.get("Content-Type"), e.read().decode()
+
+
+class TestMetricsServer:
+    def test_endpoints_live(self, tmp_path):
+        reg = _build_registry()
+        health = {"healthy": True, "checks": 5}
+        with oe.MetricsServer(reg, health=lambda: dict(health),
+                              run_dir=str(tmp_path)) as srv:
+            assert srv.host == "127.0.0.1"           # localhost-only default
+            # ephemeral port discovered via the run-dir port file
+            port = int((tmp_path / "metrics_port").read_text())
+            assert port == srv.port and port > 0
+
+            code, ctype, body = _get(f"{srv.url}/metrics")
+            assert code == 200 and ctype == oe.CONTENT_TYPE
+            assert body == oe.render_prometheus(reg.snapshot())
+
+            code, ctype, body = _get(f"{srv.url}/healthz")
+            assert code == 200 and ctype == "application/json"
+            assert json.loads(body) == {"healthy": True, "checks": 5}
+
+            health["healthy"] = False                # live flip -> 503
+            code, _, body = _get(f"{srv.url}/healthz")
+            assert code == 503 and json.loads(body)["healthy"] is False
+
+            code, _, body = _get(f"{srv.url}/snapshot.json")
+            assert code == 200
+            snap = json.loads(body)
+            assert snap["counters"]["train/steps"] == 42
+
+            code, _, _ = _get(f"{srv.url}/nope")
+            assert code == 404
+        # context exit stopped the server: the port must be dead
+        with pytest.raises(urllib.error.URLError):
+            urllib.request.urlopen(f"http://127.0.0.1:{port}/metrics",
+                                   timeout=1)
+
+    def test_no_health_source_always_ready(self):
+        with oe.MetricsServer(om.Registry()) as srv:
+            code, _, body = _get(f"{srv.url}/healthz")
+            assert code == 200 and json.loads(body) == {"healthy": True}
+
+    def test_start_stop_idempotent(self):
+        srv = oe.MetricsServer(om.Registry())
+        srv.start()
+        srv.start()
+        srv.stop()
+        srv.stop()

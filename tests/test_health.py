@@ -1,0 +1,368 @@
+"""Health & SLO monitoring tier tests (DESIGN.md §14).
+
+Pins, layer by layer:
+
+  * obs/windows.py — windowed percentiles/mean/MAD against a numpy
+    oracle ACROSS RING WRAP-AROUND (the ring's oldest-first reassembly
+    is the part a naive implementation gets wrong), MAD z-score
+    semantics incl. the degenerate-window fallbacks, WindowedRate under
+    a fake clock.
+  * obs/health.py — each detector on a synthetic trajectory built to
+    trip exactly it (NaN, spike, plateau, stall, straggler skew) and on
+    a healthy one (no fire); HealthMonitor end-to-end: anomaly runlog
+    records, health/* counters, flight-recorder dump contents, the
+    consecutive-critical healthy/unhealthy transition, dump rate limit.
+  * SLOTracker — readiness flips when the windowed error budget burns
+    out and RECOVERS as the window slides (no restart needed).
+"""
+from __future__ import annotations
+
+import json
+import math
+import os
+
+import numpy as np
+import pytest
+
+from repro.obs import health as oh
+from repro.obs import metrics as om
+from repro.obs import runlog as orl
+from repro.obs import trace as ot
+from repro.obs import windows as ow
+
+
+# ---------------------------------------------------------------------------
+# windows: numpy-oracle pinning
+# ---------------------------------------------------------------------------
+
+
+class TestSlidingWindow:
+    def test_percentiles_match_numpy_across_wraparound(self):
+        rng = np.random.default_rng(0)
+        w = ow.SlidingWindow(64)
+        stream = rng.standard_normal(1000)
+        for j, v in enumerate(stream):
+            w.push(v)
+            if j in (0, 5, 63, 64, 100, 500, 999):   # pre-fill AND wrapped
+                tail = stream[max(0, j - 63):j + 1]
+                for q in (0, 10, 25, 50, 90, 99, 100):
+                    assert w.percentile(q) == pytest.approx(
+                        np.percentile(tail, q), abs=1e-12), (j, q)
+                assert w.mean() == pytest.approx(tail.mean())
+                assert w.min() == tail.min() and w.max() == tail.max()
+
+    def test_values_oldest_first_after_wrap(self):
+        w = ow.SlidingWindow(3)
+        for v in (1, 2, 3, 4, 5):
+            w.push(v)
+        assert w.values() == [3.0, 4.0, 5.0]
+        assert w.count == 3 and w.total == 5 and w.full
+
+    def test_mad_matches_numpy_oracle(self):
+        rng = np.random.default_rng(1)
+        w = ow.SlidingWindow(32)
+        xs = rng.standard_normal(80)
+        for v in xs:
+            w.push(v)
+        tail = xs[-32:]
+        med = np.percentile(tail, 50)
+        assert w.mad() == pytest.approx(
+            np.percentile(np.abs(tail - med), 50), abs=1e-12)
+
+    def test_empty_window_is_nan_not_raise(self):
+        w = ow.SlidingWindow(4)
+        for fn in (w.mean, w.min, w.max, w.median, w.mad):
+            assert math.isnan(fn())
+        assert math.isnan(w.percentile(99))
+        assert math.isnan(w.zscore(1.0))
+
+    def test_bad_args_raise(self):
+        with pytest.raises(ValueError):
+            ow.SlidingWindow(0)
+        with pytest.raises(ValueError):
+            ow.percentile([1.0], 101)
+
+    def test_zscore_reads_in_sigma_units(self):
+        # symmetric window: median 0, MAD 1 -> z(v) = v * MAD_TO_SIGMA^-1
+        # ... scaled so a normal sample's z ~ its sigma distance
+        w = ow.SlidingWindow(5)
+        for v in (-2, -1, 0, 1, 2):
+            w.push(v)
+        assert w.zscore(0.0) == 0.0
+        z = w.zscore(10.0)
+        assert z == pytest.approx((10.0 - 0.0) / (1.0 / ow.MAD_TO_SIGMA))
+
+    def test_zscore_degenerate_fallbacks(self):
+        # >half identical: MAD=0, falls back to mean-abs-dev scale
+        w = ow.SlidingWindow(5)
+        for v in (1, 1, 1, 1, 9):
+            w.push(v)
+        assert math.isfinite(w.zscore(100.0)) and w.zscore(100.0) > 0
+        # ALL identical: any deviation is infinitely surprising
+        w2 = ow.SlidingWindow(4)
+        for _ in range(4):
+            w2.push(3.0)
+        assert w2.zscore(3.0) == 0.0
+        assert w2.zscore(4.0) == math.inf
+        assert w2.zscore(2.0) == -math.inf
+
+
+class TestWindowedRate:
+    def test_rate_counts_trailing_window_only(self):
+        t = [0.0]
+        r = ow.WindowedRate(window_s=10.0, capacity=100, clock=lambda: t[0])
+        for _ in range(5):
+            r.mark()
+        assert r.rate() == pytest.approx(0.5)      # 5 events / 10s
+        t[0] = 20.0                                 # all events aged out
+        assert r.rate() == 0.0
+        assert r.total == 5
+
+    def test_rate_saturates_at_capacity(self):
+        t = [0.0]
+        r = ow.WindowedRate(window_s=1.0, capacity=8, clock=lambda: t[0])
+        r.mark(100)                                 # only 8 timestamps kept
+        assert r.rate() == pytest.approx(8.0)
+        assert r.total == 100
+
+
+# ---------------------------------------------------------------------------
+# detectors on synthetic trajectories
+# ---------------------------------------------------------------------------
+
+
+def _sample(step, loss=2.0, gnorm=1.0, wait=1e-4, **kw):
+    return oh.StepSample(step=step, loss=loss, grad_norm=gnorm,
+                         data_wait_s=wait, device_step_s=0.01,
+                         step_s=0.011, **kw)
+
+
+class TestDetectors:
+    def test_nonfinite_fires_critical_on_nan_and_inf(self):
+        d = oh.NonFiniteDetector()
+        assert d.observe(_sample(0)) == []
+        out = d.observe(_sample(1, loss=math.nan))
+        assert [a.severity for a in out] == ["critical"]
+        assert out[0].detector == "nonfinite" and out[0].step == 1
+        out = d.observe(_sample(2, gnorm=math.inf))
+        assert len(out) == 1 and "grad_norm" in out[0].message
+        # no cooldown: a NaN storm is one incident per step
+        assert d.observe(_sample(3, loss=math.nan))
+
+    def test_spike_fires_on_blowup_not_noise(self):
+        rng = np.random.default_rng(2)
+        d = oh.SpikeDetector("grad_norm", threshold=8.0, window=64,
+                             min_count=16)
+        for i in range(100):                       # noisy-but-sane gradient
+            assert d.observe(_sample(i, gnorm=1.0 + 0.05 * rng.standard_normal())) == []
+        out = d.observe(_sample(100, gnorm=50.0))  # the blow-up
+        assert len(out) == 1 and out[0].severity == "warn"
+        assert out[0].detector == "grad_norm_spike"
+        # the spike was NOT absorbed into the window: normal values after
+        # it don't fire, and a second spike still does
+        assert d.observe(_sample(101, gnorm=1.0)) == []
+        assert d.observe(_sample(102, gnorm=50.0))
+
+    def test_spike_ignores_nonfinite(self):
+        d = oh.SpikeDetector("grad_norm", window=16, min_count=4)
+        for i in range(8):
+            d.observe(_sample(i))
+        assert d.observe(_sample(8, gnorm=math.nan)) == []
+
+    def test_plateau_fires_once_with_cooldown(self):
+        d = oh.PlateauDetector(window=32, rel_improvement=1e-3)
+        fired = []
+        for i in range(64):                        # learning: no fire
+            fired += d.observe(_sample(i, loss=3.0 - 0.01 * i))
+        assert fired == []
+        for i in range(64, 160):                   # flat: plateau
+            fired += d.observe(_sample(i, loss=1.0))
+        assert 1 <= len(fired) <= 3                # cooldown, not per-step
+        assert fired[0].detector == "loss_plateau"
+        assert fired[0].severity == "warn"
+
+    def test_stall_warn_vs_median_and_critical_hard_limit(self):
+        d = oh.StallDetector(factor=10.0, min_stall_s=0.5, hard_limit_s=60.0,
+                             min_count=8)
+        for i in range(20):
+            assert d.observe(_sample(i, wait=0.01)) == []
+        out = d.observe(_sample(20, wait=2.0))     # 200x median, > floor
+        assert len(out) == 1 and out[0].severity == "warn"
+        out = d.observe(_sample(21, wait=120.0))   # wedged host
+        assert len(out) == 1 and out[0].severity == "critical"
+
+    def test_stall_floor_shields_fast_pipelines(self):
+        d = oh.StallDetector(min_stall_s=1.0, min_count=4)
+        for i in range(10):                        # µs jitter, all << floor
+            assert d.observe(_sample(i, wait=1e-5 * (1 + i % 3))) == []
+
+    def test_straggler_from_registry_series(self):
+        reg = om.Registry()
+        for i in range(16):
+            reg.histogram("data/gen_seconds", host=0).observe(0.01)
+            reg.histogram("data/gen_seconds", host=1).observe(0.01)
+            reg.histogram("data/gen_seconds", host=2).observe(0.08)
+        d = oh.StragglerDetector(reg, ratio=3.0, min_count=8, every=4)
+        assert d.observe(_sample(3)) == []          # off-cadence step
+        out = d.observe(_sample(4))
+        assert len(out) == 1 and out[0].detector == "host_straggler"
+        assert "host 2" in out[0].message
+        assert out[0].value == pytest.approx(8.0)
+
+    def test_straggler_needs_two_hosts(self):
+        reg = om.Registry()
+        for _ in range(16):
+            reg.histogram("data/gen_seconds", host=0).observe(0.5)
+        d = oh.StragglerDetector(reg, every=1)
+        assert d.observe(_sample(1)) == []
+
+
+# ---------------------------------------------------------------------------
+# HealthMonitor end-to-end + flight recorder
+# ---------------------------------------------------------------------------
+
+
+class TestHealthMonitor:
+    def test_anomaly_response_runlog_counters_flight(self, tmp_path):
+        run_dir = str(tmp_path)
+        reg = om.Registry()
+        tracer = ot.Tracer()
+        runlog = orl.RunLogger(os.path.join(run_dir, "runlog.jsonl"))
+        mon = oh.HealthMonitor(registry=reg, tracer=tracer, runlog=runlog,
+                               run_dir=run_dir, keep_steps=8)
+        for i in range(5):
+            rec = {"kind": "step", "step": i, "loss": 2.0}
+            assert mon.observe_step(_sample(i), record=rec) == []
+        found = mon.observe_step(_sample(5, loss=math.nan),
+                                 record={"kind": "step", "step": 5})
+        runlog.close()
+        assert [a.detector for a in found] == ["nonfinite"]
+
+        # runlog got a schema-valid anomaly record
+        recs = orl.read_runlog(os.path.join(run_dir, "runlog.jsonl"))
+        anoms = [r for r in recs if r["kind"] == "anomaly"]
+        assert len(anoms) == 1 and anoms[0]["step"] == 5
+        assert anoms[0]["severity"] == "critical"
+
+        # counters
+        snap = reg.snapshot()
+        key = "health/anomalies{detector=nonfinite,severity=critical}"
+        assert snap["counters"][key] == 1
+        assert snap["counters"]["health/checks"] == 6
+        assert snap["gauges"]["health/last_anomaly_step"] == 5
+
+        # flight dump: self-contained directory with all four artifacts
+        dumps = os.listdir(os.path.join(run_dir, "flight"))
+        assert dumps == ["step000005_nonfinite"]
+        d = os.path.join(run_dir, "flight", dumps[0])
+        a = json.load(open(os.path.join(d, "anomaly.json")))
+        assert a["detector"] == "nonfinite" and a["step"] == 5
+        trace = json.load(open(os.path.join(d, "trace.json")))
+        assert any(e["name"] == "anomaly/nonfinite"
+                   for e in trace["traceEvents"])
+        metrics = json.load(open(os.path.join(d, "metrics.json")))
+        assert "health/checks" in metrics["counters"]
+        steps = [json.loads(l) for l in
+                 open(os.path.join(d, "steps.jsonl"))]
+        assert [s["step"] for s in steps] == [0, 1, 2, 3, 4, 5]
+
+    def test_healthy_flips_on_consecutive_criticals_and_recovers(self):
+        mon = oh.HealthMonitor(registry=om.Registry(), unhealthy_after=3)
+        mon.observe_step(_sample(0, loss=math.nan))
+        assert mon.healthy                          # one incident: contained
+        mon.observe_step(_sample(1, loss=math.nan))
+        assert mon.healthy
+        mon.observe_step(_sample(2, loss=math.nan))
+        assert not mon.healthy                      # sustained episode
+        assert mon.status()["healthy"] is False
+        mon.observe_step(_sample(3))                # storm over
+        assert mon.healthy
+        assert mon.status()["consecutive_critical"] == 0
+
+    def test_flight_dump_rate_limit(self, tmp_path):
+        mon = oh.HealthMonitor(registry=om.Registry(),
+                               run_dir=str(tmp_path), max_dumps=2)
+        for i in range(5):
+            mon.observe_step(_sample(i, loss=math.nan))
+        assert len(os.listdir(tmp_path / "flight")) == 2
+        snap = mon.registry.snapshot()
+        assert snap["counters"]["health/flight_dumps"] == 2
+        assert snap["counters"]["health/flight_dumps_suppressed"] == 3
+
+    def test_skipped_steps_counted(self):
+        mon = oh.HealthMonitor(registry=om.Registry())
+        mon.observe_step(_sample(0, loss=math.nan, skipped=True))
+        assert mon.status()["steps_skipped"] == 1
+
+
+# ---------------------------------------------------------------------------
+# SLO tracker
+# ---------------------------------------------------------------------------
+
+
+class TestSLOTracker:
+    def test_ready_until_budget_burns_then_recovers(self):
+        reg = om.Registry()
+        slo = oh.SLOTracker(target_s=0.1, objective=0.9, window=20,
+                            registry=reg, name="serve")
+        for _ in range(20):
+            slo.observe(0.05)
+        assert slo.ready and slo.status()["error_budget_burn"] == 0.0
+        # budget: 10% of the window may violate; 3/20 = 15% -> burn 1.5
+        for _ in range(3):
+            slo.observe(1.0)
+        st = slo.status()
+        assert st["error_budget_burn"] == pytest.approx(1.5)
+        assert not slo.ready and st["healthy"] is False
+        assert reg.snapshot()["gauges"]["serve/slo_ready"] == 0
+        # window slides: 20 fast requests age the violations out
+        for _ in range(20):
+            slo.observe(0.05)
+        assert slo.ready
+        assert reg.snapshot()["gauges"]["serve/slo_ready"] == 1
+
+    def test_gauges_and_counters_land_on_registry(self):
+        reg = om.Registry()
+        slo = oh.SLOTracker(target_s=0.1, registry=reg, name="decode")
+        slo.observe(0.2)
+        snap = reg.snapshot()
+        assert snap["counters"]["decode/slo_requests"] == 1
+        assert snap["counters"]["decode/slo_violations"] == 1
+        assert snap["gauges"]["decode/slo_p99_s"] == pytest.approx(0.2)
+
+    def test_bad_args_raise(self):
+        with pytest.raises(ValueError):
+            oh.SLOTracker(target_s=0.1, objective=1.5)
+        with pytest.raises(ValueError):
+            oh.SLOTracker(target_s=0.0)
+
+    def test_p99_tracks_window(self):
+        slo = oh.SLOTracker(target_s=1.0, window=100)
+        for v in np.linspace(0.01, 0.99, 100):
+            slo.observe(v)
+        assert slo.status()["p99_s"] == pytest.approx(
+            np.percentile(np.linspace(0.01, 0.99, 100), 99), abs=1e-9)
+
+
+# ---------------------------------------------------------------------------
+# fault-hook seam
+# ---------------------------------------------------------------------------
+
+
+class TestFaultHook:
+    def test_hook_applies_and_clears(self):
+        calls = []
+        oh.set_step_fault_hook(lambda step, batch: calls.append(step) or
+                               {"poisoned": True})
+        try:
+            out = oh.apply_step_fault_hook(7, {"x": 1})
+            assert out == {"poisoned": True} and calls == [7]
+        finally:
+            oh.set_step_fault_hook(None)
+        assert oh.apply_step_fault_hook(8, {"x": 1}) == {"x": 1}
+
+    def test_monitor_wall_time_feeds_slo(self):
+        slo = oh.SLOTracker(target_s=10.0, window=8)
+        wrapped = oh.monitor_wall_time(lambda a: a * 2, slo)
+        assert wrapped(21) == 42
+        assert slo.status()["requests"] == 1

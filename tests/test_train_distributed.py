@@ -1,14 +1,19 @@
 """Distributed trainer: loss decreases; checkpoint resume continues exactly;
 every step streams a schema-valid runlog record with the full time
-breakdown, and the trace export is Perfetto-shaped (DESIGN.md §11)."""
+breakdown, and the trace export is Perfetto-shaped (DESIGN.md §11).
+With --health armed, an injected NaN batch is skipped in-jit, flight-
+recorded, and served live over /metrics and /healthz (§14)."""
 import json
 import os
 import sys
 import types
+import urllib.request
 
+import jax.numpy as jnp
 import numpy as np
 
 from repro.launch.train_distributed import train
+from repro.obs import health as obs_health
 from repro.obs import runlog as rl
 from repro.obs import trace as obs_trace
 
@@ -102,3 +107,75 @@ def test_resume_appends_to_runlog_with_marker(tmp_path):
                 if r["kind"] == "resume")["resumed_from"] == 6
     assert [r["step"] for r in records
             if r["kind"] == "step"] == list(range(12))
+
+
+def test_health_run_survives_injected_nan(tmp_path):
+    """The §14 acceptance path end to end: a --health --metrics-port run
+    with a NaN batch injected at step 2 must (a) skip the poisoned update
+    in-jit so every later loss is finite, (b) write a schema-valid
+    ``anomaly`` runlog record and mark the step ``skipped``, (c) dump the
+    flight recorder, and (d) serve live /metrics and /healthz mid-run —
+    staying healthy, because one contained incident is not an outage."""
+    rd = str(tmp_path / "run")
+    args = types.SimpleNamespace(
+        arch="basic-s", objective="auto", smoke=True, steps=8, batch=8,
+        seq=16, lr=3e-4, seed=0, sharding="basic_ws", remat="basic",
+        model_parallel=1, log_every=100, ckpt_dir=None, ckpt_every=0,
+        stop_after=None, num_micro=2, loss="local", quiet=True,
+        run_dir=rd, health=True, metrics_port=0)
+    probes = {}
+
+    def hook(step, batch):
+        if step == 2:                 # poison the whole image batch
+            imgs = dict(batch["images"])
+            imgs["image"] = batch["images"]["image"] * jnp.nan
+            batch = dict(batch, images=imgs)
+        if step == 4:                 # scrape the live endpoint mid-run
+            port = int(open(os.path.join(rd, "metrics_port")).read())
+            for ep in ("metrics", "healthz"):
+                with urllib.request.urlopen(
+                        f"http://127.0.0.1:{port}/{ep}", timeout=5) as r:
+                    probes[ep] = (r.status, r.read().decode())
+        return batch
+
+    obs_health.set_step_fault_hook(hook)
+    try:
+        losses = train(args)
+    finally:
+        obs_health.set_step_fault_hook(None)
+
+    # (a) the poisoned step reports NaN but never lands: params stay
+    # finite, so every subsequent loss is too
+    assert not np.isfinite(losses[2])
+    assert all(np.isfinite(v) for i, v in enumerate(losses) if i != 2)
+
+    # (b) schema-valid runlog with the anomaly + skipped step record
+    path = os.path.join(rd, "runlog.jsonl")
+    assert check_runlog.check_file(path) == []
+    records = rl.read_runlog(path)
+    anoms = [r for r in records if r["kind"] == "anomaly"]
+    assert anoms and all(r["detector"] == "nonfinite" and r["step"] == 2
+                         and r["severity"] == "critical" for r in anoms)
+    steps = {r["step"]: r for r in records if r["kind"] == "step"}
+    assert steps[2].get("skipped") == 1
+    assert all("skipped" not in steps[i] for i in steps if i != 2)
+    event = next(r for r in records if r["kind"] == "event"
+                 and r["event"] == "trace_export")
+    assert isinstance(event["dropped"], int)
+    final = [r for r in records if r["kind"] == "metrics"][-1]
+    assert final["counters"]["health/steps_skipped"] == 1
+
+    # (c) the flight recorder dumped the incident
+    dumps = os.listdir(os.path.join(rd, "flight"))
+    assert dumps == ["step000002_nonfinite"]
+    anomaly = json.load(open(os.path.join(
+        rd, "flight", dumps[0], "anomaly.json")))
+    assert anomaly["detector"] == "nonfinite" and anomaly["step"] == 2
+
+    # (d) the mid-run scrape saw Prometheus text + a healthy /healthz
+    code, body = probes["metrics"]
+    assert code == 200 and "# TYPE health_checks counter" in body
+    assert 'health_anomalies{detector="nonfinite",severity="critical"} 2' \
+        in body
+    code, body = probes["healthz"]
+    assert code == 200 and json.loads(body)["healthy"] is True
